@@ -1,0 +1,51 @@
+"""Shared benchmark utilities: datasets, timing, CSV emission."""
+
+from __future__ import annotations
+
+import functools
+import time
+
+import numpy as np
+
+from repro.core import metrics as metricslib
+from repro.core import pipeline
+from repro.data.synthetic import SynthConfig, make_dataset
+
+# CPU-CI scale factors; the generators scale to the paper's full sizes
+# (HEPTH 58,515 refs / DBLP 50,195 / DBLP-BIG 4.6M) with scale=1.0 and
+# scale~90 respectively.
+HEPTH_SCALE = float(__import__("os").environ.get("BENCH_HEPTH_SCALE", 0.12))
+DBLP_SCALE = float(__import__("os").environ.get("BENCH_DBLP_SCALE", 0.12))
+
+
+@functools.lru_cache(maxsize=None)
+def hepth():
+    return make_dataset(SynthConfig.hepth(scale=HEPTH_SCALE, seed=7))
+
+
+@functools.lru_cache(maxsize=None)
+def dblp():
+    return make_dataset(SynthConfig.dblp(scale=DBLP_SCALE, seed=11))
+
+
+@functools.lru_cache(maxsize=None)
+def prepared(which: str):
+    ds = hepth() if which == "hepth" else dblp()
+    packed, gg, t = pipeline.prepare(ds.entities, ds.relations)
+    return ds, packed, gg, t
+
+
+def evaluate(ds, res) -> metricslib.PRF:
+    return pipeline.evaluate(res, ds.entities.truth)
+
+
+def row(*cols) -> str:
+    line = ",".join(str(c) for c in cols)
+    print(line, flush=True)
+    return line
+
+
+def timed(fn):
+    t0 = time.perf_counter()
+    out = fn()
+    return out, time.perf_counter() - t0

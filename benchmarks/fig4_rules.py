@@ -1,0 +1,61 @@
+"""Fig. 4: the RULES (dedupalog-style Type-I) matcher.
+
+NO-MP vs SMP vs FULL (whole dataset as one instance — feasible because
+RULES is fast/linear, as in Appendix C), on both datasets.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import evaluate, prepared, row, timed
+from repro.core import metrics as metricslib
+from repro.core import pipeline
+from repro.core.closure import transitive_closure
+from repro.core.cover import Cover, pack_cover
+from repro.core.driver import run_smp
+from repro.core.rules import RulesMatcher
+from repro.core.types import MatchStore
+
+
+def full_run(ds, gg):
+    """RULES on the entire entity set as one neighborhood."""
+    ents = list(range(len(ds.entities)))
+    cover = Cover(
+        core=[np.asarray(ents, dtype=np.int64)],
+        full=[np.asarray(ents, dtype=np.int64)],
+    )
+    packed = pack_cover(cover, ds.entities, ds.relations,
+                        k_bins=(max(8, len(ents)),))
+    res = run_smp(packed, RulesMatcher())
+    return transitive_closure(res.matches)
+
+
+def run(which: str):
+    ds, packed, gg, _ = prepared(which)
+    truth = ds.entities.truth
+    row(f"# fig4 rules {which}")
+    row("dataset,scheme,precision,recall,f1,wall_s,completeness_vs_full")
+    full, t_full = timed(lambda: full_run(ds, gg))
+    prf_full = metricslib.prf(full, truth, candidate_gids=gg.gids)
+
+    for scheme in ("nomp", "smp"):
+        res, t = timed(lambda s=scheme: pipeline.resolve(
+            ds.entities, ds.relations, scheme=s, matcher=RulesMatcher(),
+            packed=packed, gg=gg,
+        ))
+        prf = evaluate(ds, res)
+        comp = metricslib.completeness(res.closed, full)
+        row(which, scheme, f"{prf.precision:.4f}", f"{prf.recall:.4f}",
+            f"{prf.f1:.4f}", f"{t:.3f}", f"{comp:.4f}")
+    row(which, "full", f"{prf_full.precision:.4f}", f"{prf_full.recall:.4f}",
+        f"{prf_full.f1:.4f}", f"{t_full:.3f}", "1.0000")
+
+
+def main():
+    run("hepth")
+    run("dblp")
+
+
+if __name__ == "__main__":
+    main()

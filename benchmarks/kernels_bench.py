@@ -1,0 +1,93 @@
+"""Kernel microbenchmarks: jnp reference path wall time on CPU + the
+analytic MXU-tile roofline for the Pallas kernels on TPU v5e.
+
+Wall times here time the *reference* path (this container has no TPU);
+the derived column reports the kernel's ideal v5e time from its FLOP
+count at 197 TFLOP/s bf16 (compute term) vs its HBM bytes at 819 GB/s
+(memory term) — i.e. which side of the roofline each kernel sits on.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+
+
+def _time(fn, *args, reps=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps
+
+
+def main():
+    rng = np.random.default_rng(0)
+    row("# kernels: cpu-ref wall vs v5e roofline terms")
+    row("kernel,shape,cpu_ms,flops,v5e_compute_us,v5e_memory_us,bound")
+
+    from repro.kernels.icm_sweep import ref as icm_ref
+
+    for P in (128, 512):
+        u = jnp.asarray(rng.standard_normal(P).astype(np.float32))
+        C = jnp.asarray(rng.standard_normal((P, P)).astype(np.float32))
+        X = jnp.asarray((rng.random((P, P)) < 0.3).astype(np.float32))
+        f = jax.jit(icm_ref.sweep_matrix)
+        t = _time(f, u, C, X)
+        flops = 2 * P * P * P
+        bytes_ = (3 * P * P + P) * 4
+        ct, mt = flops / PEAK_FLOPS, bytes_ / HBM_BW
+        row("icm_sweep", f"P{P}", f"{t*1e3:.3f}", flops,
+            f"{ct*1e6:.2f}", f"{mt*1e6:.2f}", "compute" if ct > mt else "memory")
+
+    from repro.kernels.mln_score import ref as score_ref
+
+    for B, S, P in ((8, 64, 128),):
+        u = jnp.asarray(rng.standard_normal((B, P)).astype(np.float32))
+        C = jnp.asarray(rng.standard_normal((B, P, P)).astype(np.float32))
+        X = jnp.asarray((rng.random((B, S, P)) < 0.3).astype(np.float32))
+        f = jax.jit(score_ref.score_sets)
+        t = _time(f, u, C, X)
+        flops = B * (2 * S * P * P + 2 * S * P)
+        bytes_ = (B * P * P + B * S * P + B * P) * 4
+        ct, mt = flops / PEAK_FLOPS, bytes_ / HBM_BW
+        row("mln_score", f"B{B}S{S}P{P}", f"{t*1e3:.3f}", flops,
+            f"{ct*1e6:.2f}", f"{mt*1e6:.2f}", "compute" if ct > mt else "memory")
+
+    from repro.kernels.ngram_sim import ref as sim_ref
+
+    for M, F in ((1024, 128),):
+        A = jnp.asarray(rng.standard_normal((M, F)).astype(np.float32))
+        f = jax.jit(lambda a: sim_ref.sim_above(a, a, 0.7))
+        t = _time(f, A)
+        flops = 2 * M * M * F
+        bytes_ = (2 * M * F + M * M) * 4
+        ct, mt = flops / PEAK_FLOPS, bytes_ / HBM_BW
+        row("ngram_sim", f"M{M}F{F}", f"{t*1e3:.3f}", flops,
+            f"{ct*1e6:.2f}", f"{mt*1e6:.2f}", "compute" if ct > mt else "memory")
+
+    from repro.kernels.flash_attn import ref as fa_ref
+
+    B, S, H, hkv, hd = 1, 1024, 8, 2, 64
+    q = jnp.asarray(rng.standard_normal((B, S, H, hd)).astype(np.float32))
+    k = jnp.asarray(rng.standard_normal((B, S, hkv, hd)).astype(np.float32))
+    v = jnp.asarray(rng.standard_normal((B, S, hkv, hd)).astype(np.float32))
+    f = jax.jit(lambda q, k, v: fa_ref.attention(q, k, v, 0.125))
+    t = _time(f, q, k, v)
+    flops = 2 * 2 * B * H * S * S * hd / 2  # causal half
+    bytes_ = (B * S * H * hd + 2 * B * S * hkv * hd) * 2 + B * S * H * hd * 4
+    ct, mt = flops / PEAK_FLOPS, bytes_ / HBM_BW
+    row("flash_attn", f"S{S}H{H}", f"{t*1e3:.3f}", int(flops),
+        f"{ct*1e6:.2f}", f"{mt*1e6:.2f}", "compute" if ct > mt else "memory")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""Benchmark harness: one module per paper table/figure.
+
+``python -m benchmarks.run [name ...]`` — default runs all.  Output is
+CSV-ish blocks, one per artifact.
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+MODULES = [
+    ("fig3_accuracy", "Fig 3(a)-(c): P/R/F1 + completeness, MLN"),
+    ("fig3_runtime", "Fig 3(d)/(e): running times, MLN"),
+    ("fig3_scaling", "Fig 3(f): time vs #neighborhoods"),
+    ("table1_parallel", "Table 1: parallel rounds / grid speedup"),
+    ("fig4_rules", "Fig 4: RULES matcher"),
+    ("kernels_bench", "Pallas-kernel roofline microbench"),
+]
+
+
+def main() -> None:
+    want = set(sys.argv[1:])
+    for name, desc in MODULES:
+        if want and name not in want:
+            continue
+        print(f"\n==== {name}: {desc} ====", flush=True)
+        t0 = time.perf_counter()
+        mod = __import__(f"benchmarks.{name}", fromlist=["main"])
+        mod.main()
+        print(f"==== {name} done in {time.perf_counter()-t0:.1f}s ====", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+"""Repo-root conftest: make `tests.*` and `repro.*` importable under any
+invocation (`pytest tests/`, `python -m pytest`, with or without
+PYTHONPATH)."""
+
+import os
+import sys
+
+_ROOT = os.path.dirname(os.path.abspath(__file__))
+for p in (_ROOT, os.path.join(_ROOT, "src")):
+    if p not in sys.path:
+        sys.path.insert(0, p)

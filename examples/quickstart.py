@@ -1,0 +1,67 @@
+"""Quickstart: collective entity matching on bibliographic data.
+
+Builds a HEPTH-like dataset (author references with abbreviations,
+typos, and name collisions + a coauthorship relation), covers it with
+canopy neighborhoods, and resolves entities with the three
+message-passing schemes of Rastogi et al. (VLDB 2011):
+
+    NO-MP  — the matcher per neighborhood, no communication
+    SMP    — simple message passing (Alg. 1)
+    MMP    — maximal message passing (Alg. 3, Type-II matchers)
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import pipeline
+from repro.core import pairs as pairlib
+from repro.data.synthetic import SynthConfig, make_dataset
+
+
+def main():
+    ds = make_dataset(SynthConfig.hepth(scale=0.12, seed=7))
+    print(f"dataset: {len(ds.entities)} author references, "
+          f"{len(ds.author_names)} true authors, "
+          f"{len(ds.relations.edges['coauthor'])} coauthor edges")
+
+    packed, gg, t_cover = pipeline.prepare(ds.entities, ds.relations)
+    print(f"cover: {packed.num_neighborhoods} neighborhoods, "
+          f"{len(gg.gids)} candidate pairs ({t_cover:.2f}s)\n")
+
+    print(f"{'scheme':8s} {'prec':>6s} {'rec':>6s} {'f1':>6s} "
+          f"{'evals':>6s} {'promoted':>9s}")
+    results = {}
+    for scheme in ("nomp", "smp", "mmp"):
+        res = pipeline.resolve(
+            ds.entities, ds.relations, scheme=scheme, packed=packed, gg=gg
+        )
+        prf = pipeline.evaluate(res, ds.entities.truth)
+        results[scheme] = res
+        print(f"{scheme:8s} {prf.precision:6.3f} {prf.recall:6.3f} "
+              f"{prf.f1:6.3f} {res.result.neighborhood_evals:6d} "
+              f"{res.result.messages_promoted:9d}")
+
+    # show a few resolved matches
+    print("\nsample matches (MMP):")
+    for g in results["mmp"].closed.gids[:8]:
+        a, b = pairlib.split_gid(np.int64(g))
+        print(f"  {ds.entities.names[int(a)]!r:32s} == "
+              f"{ds.entities.names[int(b)]!r}")
+
+    # matches only the collective schemes recover
+    smp_set = results["smp"].closed.as_set()
+    extra = [g for g in results["mmp"].closed.gids if int(g) not in smp_set]
+    if extra:
+        print("\nrecovered ONLY by maximal message passing "
+              "(the paper's chicken-and-egg chains):")
+        for g in extra[:6]:
+            a, b = pairlib.split_gid(np.int64(g))
+            print(f"  {ds.entities.names[int(a)]!r:32s} == "
+                  f"{ds.entities.names[int(b)]!r}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Batched serving example: prefill + greedy decode with a KV cache.
+
+Loads a small dense model (random weights — the point is the serving
+machinery: static-shape batched prefill, cached single-token decode,
+the same ``serve_step`` the multi-pod dry-run lowers at 32k/500k
+context).
+
+Run:  PYTHONPATH=src python examples/serve_lm.py
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.configs.base import smoke_config
+from repro.models.registry import get_model
+from repro.serve.engine import demo_engine
+
+
+def main():
+    cfg = smoke_config("yi_6b")
+    api = get_model(cfg)
+    engine = demo_engine(api, batch=4, s_max=96)
+    print(f"serving {cfg.name}: batch=4, cache={engine.s_max} positions")
+
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(1, cfg.vocab_size - 1, size=24).astype(np.int32)
+               for _ in range(10)]
+
+    t0 = time.perf_counter()
+    outs = engine.generate(prompts, max_new=16)
+    dt = time.perf_counter() - t0
+    total_new = sum(len(o) for o in outs)
+    print(f"{len(prompts)} requests, {total_new} tokens "
+          f"in {dt:.2f}s ({total_new/dt:.1f} tok/s incl. compile)")
+    for i, o in enumerate(outs[:3]):
+        print(f"  req{i}: prompt[-4:]={prompts[i][-4:].tolist()} -> {o[:8]}...")
+
+    # steady-state decode throughput (compile excluded)
+    t0 = time.perf_counter()
+    outs = engine.generate(prompts, max_new=16)
+    dt = time.perf_counter() - t0
+    print(f"steady-state: {total_new/dt:.1f} tok/s")
+
+
+if __name__ == "__main__":
+    main()

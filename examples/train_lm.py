@@ -1,0 +1,92 @@
+"""End-to-end driver: train a ~100M-param LM for a few hundred steps.
+
+Exercises the full training substrate on CPU: EM-deduplicated data
+pipeline -> qwen1.5-0.5B-family model (width-reduced to ~100M params)
+-> microbatched AdamW train step -> checkpointing with a simulated
+preemption + restart.
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--steps 300]
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import tempfile
+
+import numpy as np
+
+from repro.configs.base import get_config
+from repro.data.corpus import CorpusConfig
+from repro.data.dedup import dedup_documents, filter_corpus
+from repro.models.param import param_count
+from repro.models.registry import get_model
+from repro.train.optimizer import OptConfig
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def make_model():
+    """qwen1.5-0.5B family, width-reduced to ~100M params.
+
+    (vocab 8k instead of 152k: this container is a single CPU core at
+    ~25 GFLOP/s and the unembed matmul dominates; the architecture and
+    the whole substrate are unchanged.)"""
+    base = get_config("qwen1_5_0_5b")
+    return dataclasses.replace(
+        base, name="qwen1.5-100m", d_model=640, n_heads=10, n_kv_heads=10,
+        d_ff=1792, n_layers=16, vocab_size=8192,
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--preempt-at", type=int, default=0,
+                    help="simulate a preemption at this step (0 = off)")
+    args = ap.parse_args()
+
+    cfg = make_model()
+    api = get_model(cfg)
+    print(f"model: {cfg.name}  params={param_count(api.param_specs())/1e6:.1f}M")
+
+    # --- data: the paper's technique as the dedup stage -----------------
+    rng = np.random.default_rng(0)
+    docs = [rng.integers(0, cfg.vocab_size, size=512) for _ in range(64)]
+    docs += [d.copy() for d in docs[:16]]  # inject duplicates
+    report = dedup_documents(docs, source_of=np.arange(len(docs)) % 8)
+    docs = filter_corpus(docs, report)
+    print(f"dedup: {report.n_docs} docs -> {len(docs)} "
+          f"({report.n_removed} near-duplicates removed by collective EM)")
+
+    data = CorpusConfig(
+        vocab_size=cfg.vocab_size, seq_len=args.seq,
+        global_batch=args.batch, seed=0,
+    )
+    ckpt_dir = tempfile.mkdtemp(prefix="repro_ckpt_")
+    tcfg = TrainerConfig(
+        steps=args.steps, ckpt_every=100, log_every=20, microbatches=2,
+        ckpt_dir=ckpt_dir, async_ckpt=True,
+    )
+    opt = OptConfig(lr=3e-4, warmup_steps=20, total_steps=args.steps)
+
+    if args.preempt_at:
+        t = Trainer(api, data, opt, dataclasses.replace(tcfg, steps=args.preempt_at))
+        t.preempted = False
+        out = t.run()
+        print(f"-- simulated preemption after step {out['steps_done']}; restarting --")
+
+    trainer = Trainer(api, data, opt, tcfg)
+    out = trainer.run()
+    print(f"trained to step {out['steps_done']} "
+          f"in {out['wall_time_s']:.1f}s; checkpoints in {ckpt_dir}")
+    for step, loss in out["losses"]:
+        print(f"  step {step:4d}  loss {loss:.4f}")
+    first, last = out["losses"][0][1], out["losses"][-1][1]
+    print(f"loss: {first:.3f} -> {last:.3f} "
+          f"({'improved' if last < first else 'NOT improved'})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,354 @@
+"""Covering (paper §4): canopies + relational boundary => total cover.
+
+Pipeline (paper-faithful):
+
+1. *Canopies* [McCallum-Nigam-Ungar 2000] over the ``Similar`` relation:
+   entities are embedded as hashed n-gram profiles; a seed's canopy is
+   every entity with cosine >= ``t_loose``; entities within ``t_tight``
+   of the seed stop being seeds.  On TPU the seed-vs-pool similarity is
+   the ``ngram_sim`` Pallas kernel (a tiled matmul).
+2. *Boundary expansion*: each canopy is expanded with every entity that
+   shares a relation tuple (Coauthor) with a member => the cover is
+   **total** w.r.t. the relations (Def. 7): no tuple is lost.
+3. *Packing*: neighborhoods are padded to fixed entity capacity and
+   binned by size (k in ``k_bins``) so the batched matcher runs on
+   dense, static shapes.  Size-binning is also our structural answer to
+   the MapReduce skew the paper reports in §6.3 (see DESIGN §3).
+
+Oversized canopies are split into overlapping windows (stride k/2) in
+similarity-sorted order — the standard blocking trade-off; every split
+window is boundary-expanded again, so totality is preserved.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import pairs as pairlib
+from repro.core import similarity as simlib
+from repro.core.types import EntityTable, MatchStore, NeighborhoodBatch, Relations
+from repro.kernels.ngram_sim import ops as sim_ops
+
+DEFAULT_BINS = (8, 16, 24, 32)
+
+
+@dataclasses.dataclass
+class Cover:
+    """A total cover: per neighborhood, core members and full (core+boundary)."""
+
+    core: list[np.ndarray]
+    full: list[np.ndarray]
+
+    def __len__(self) -> int:
+        return len(self.full)
+
+    def entity_index(self) -> dict[int, list[int]]:
+        """entity id -> neighborhoods (by full membership)."""
+        idx: dict[int, list[int]] = {}
+        for n, members in enumerate(self.full):
+            for e in members:
+                idx.setdefault(int(e), []).append(n)
+        return idx
+
+
+def build_canopies(
+    features: np.ndarray,
+    t_loose: float,
+    t_tight: float,
+    *,
+    chunk: int = 1024,
+) -> list[np.ndarray]:
+    """Deterministic canopy construction (seeds in id order).
+
+    The paper picks random seeds; a fixed seed order is a valid draw and
+    keeps the construction reproducible.  Order-invariance of the *match
+    output* is the framework's consistency property, tested separately.
+    """
+    n = features.shape[0]
+    remaining = np.ones(n, dtype=bool)
+    canopies: list[np.ndarray] = []
+    order = np.arange(n)
+    for seed in order:
+        if not remaining[seed]:
+            continue
+        sims = np.zeros(n, dtype=np.float32)
+        q = features[seed : seed + 1]
+        for lo in range(0, n, chunk):
+            hi = min(lo + chunk, n)
+            block = np.asarray(sim_ops.sim_above(q, features[lo:hi], 0.0))[0]
+            sims[lo:hi] = block
+        members = np.where(sims >= t_loose)[0]
+        if len(members) == 0:
+            members = np.array([seed])
+        canopies.append(members.astype(np.int64))
+        remaining[sims >= t_tight] = False
+        remaining[seed] = False
+    return canopies
+
+
+def _split_oversized(members: np.ndarray, names: list[str], k_core: int) -> list[np.ndarray]:
+    if len(members) <= k_core:
+        return [members]
+    order = np.argsort([names[int(e)] for e in members], kind="stable")
+    sorted_members = members[order]
+    out = []
+    step = max(k_core // 2, 1)
+    for lo in range(0, len(sorted_members), step):
+        win = sorted_members[lo : lo + k_core]
+        if len(win) == 0:
+            break
+        out.append(win)
+        if lo + k_core >= len(sorted_members):
+            break
+    return out
+
+
+def build_cover(
+    entities: EntityTable,
+    relations: Relations,
+    *,
+    t_loose: float = 0.70,
+    t_tight: float = 0.90,
+    k_max: int = 32,
+    feature_dim: int = 128,
+    boundary_relation: str = "coauthor",
+) -> Cover:
+    if entities.features is None:
+        entities.features = simlib.ngram_profiles(
+            [simlib.block_key(n) for n in entities.names], dim=feature_dim
+        )
+    canopies = build_canopies(entities.features, t_loose, t_tight)
+
+    adj = relations.adjacency_sets(boundary_relation)
+    core_sets: list[np.ndarray] = []
+    full_sets: list[np.ndarray] = []
+    seen: set[tuple] = set()
+    # reserve boundary room: boundary can add up to k_max - k_core slots
+    k_core = max(2, int(k_max * 0.6))
+    for members in canopies:
+        for part in _split_oversized(members, entities.names, k_core):
+            key = tuple(sorted(int(e) for e in part))
+            if key in seen or len(part) < 2:
+                continue
+            seen.add(key)
+            boundary: set[int] = set()
+            part_set = set(int(e) for e in part)
+            for e in part:
+                boundary |= adj.get(int(e), set())
+            boundary -= part_set
+            # clip boundary to capacity, preferring high-degree connectors
+            room = k_max - len(part)
+            if len(boundary) > room:
+                ranked = sorted(
+                    boundary,
+                    key=lambda b: -len(adj.get(b, set()) & part_set),
+                )
+                boundary = set(ranked[:room])
+            full = np.array(sorted(part_set | boundary), dtype=np.int64)
+            core_sets.append(np.asarray(sorted(part_set), dtype=np.int64))
+            full_sets.append(full)
+
+    # Totality sweep (Def. 7): boundary clipping above can drop relation
+    # tuples, and canopy singletons never enter a neighborhood.  Gather
+    # every uncovered relation edge and pack the endpoints into
+    # supplementary neighborhoods so that R(E) = U R(C_i) exactly.
+    covered_edges: set[tuple[int, int]] = set()
+    for members in full_sets:
+        ms = [int(e) for e in members]
+        mset = set(ms)
+        for e in ms:
+            for nb in adj.get(e, set()):
+                if nb in mset:
+                    covered_edges.add((min(e, nb), max(e, nb)))
+    missing: list[tuple[int, int]] = []
+    for edges in relations.edges.values():
+        for a, b in edges:
+            a, b = int(a), int(b)
+            if a != b and (min(a, b), max(a, b)) not in covered_edges:
+                missing.append((min(a, b), max(a, b)))
+    if missing:
+        group: set[int] = set()
+        for a, b in sorted(set(missing)):
+            if len(group | {a, b}) > k_max:
+                arr = np.asarray(sorted(group), dtype=np.int64)
+                core_sets.append(arr)
+                full_sets.append(arr)
+                group = set()
+            group |= {a, b}
+        if group:
+            arr = np.asarray(sorted(group), dtype=np.int64)
+            core_sets.append(arr)
+            full_sets.append(arr)
+
+    # Entity coverage (cover definition: union of neighborhoods == E):
+    # canopy singletons with no relation edges still need a home.
+    covered_entities: set[int] = set()
+    for members in full_sets:
+        covered_entities.update(int(e) for e in members)
+    leftovers = sorted(set(range(len(entities))) - covered_entities)
+    for lo in range(0, len(leftovers), k_max):
+        arr = np.asarray(leftovers[lo : lo + k_max], dtype=np.int64)
+        core_sets.append(arr)
+        full_sets.append(arr)
+    return Cover(core=core_sets, full=full_sets)
+
+
+def is_total(cover: Cover, relations: Relations, candidate_gids: np.ndarray) -> bool:
+    """Check Def. 7 (relations) + blocking totality over candidate pairs."""
+    covered = set()
+    for members in cover.full:
+        ms = set(int(e) for e in members)
+        for a in ms:
+            for b in ms:
+                if a < b:
+                    covered.add(int(pairlib.make_gid(a, b)))
+    for edges in relations.edges.values():
+        for a, b in edges:
+            if a == b:
+                continue
+            if int(pairlib.make_gid(int(a), int(b))) not in covered:
+                return False
+    return all(int(g) in covered for g in candidate_gids)
+
+
+# ---------------------------------------------------------------------------
+# Packing into padded, size-binned NeighborhoodBatches
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class PackedCover:
+    """Size-binned padded tensors + host-side indices for message passing."""
+
+    bins: dict[int, NeighborhoodBatch]  # k -> batch over neighborhoods
+    bin_rows: dict[int, np.ndarray]  # k -> neighborhood index per row
+    neighborhood_bin: np.ndarray  # (N,) bin k of each neighborhood
+    neighborhood_row: np.ndarray  # (N,) row within its bin
+    pair_levels: dict[int, int]  # global gid -> sim level (>=1)
+    cover: Cover
+
+    @property
+    def num_neighborhoods(self) -> int:
+        return len(self.neighborhood_bin)
+
+    def rows_for(self, neighborhoods: list[int]) -> dict[int, np.ndarray]:
+        """Group a set of neighborhood ids by bin -> row arrays."""
+        out: dict[int, list[int]] = {}
+        for n in neighborhoods:
+            out.setdefault(int(self.neighborhood_bin[n]), []).append(
+                int(self.neighborhood_row[n])
+            )
+        return {k: np.asarray(v, dtype=np.int64) for k, v in out.items()}
+
+    def neighborhoods_of_pairs(self, gids: np.ndarray) -> list[int]:
+        """Neighborhoods containing BOTH endpoints of any of the pairs."""
+        idx = self.cover.entity_index()
+        out: set[int] = set()
+        for g in gids:
+            a, b = pairlib.split_gid(np.int64(g))
+            na = idx.get(int(a), [])
+            nb = set(idx.get(int(b), []))
+            for n in na:
+                if n in nb:
+                    out.add(n)
+        return sorted(out)
+
+
+def pack_cover(
+    cover: Cover,
+    entities: EntityTable,
+    relations: Relations,
+    *,
+    k_bins: tuple[int, ...] = DEFAULT_BINS,
+    thresholds=simlib.DEFAULT_THRESHOLDS,
+    boundary_relation: str = "coauthor",
+) -> PackedCover:
+    adj = relations.adjacency_sets(boundary_relation)
+    names = entities.names
+    level_cache: dict[int, int] = {}
+
+    def pair_level(a: int, b: int) -> int:
+        gid = int(pairlib.make_gid(a, b))
+        lev = level_cache.get(gid)
+        if lev is None:
+            s = simlib.jaro_winkler(simlib.name_key(names[a]), simlib.name_key(names[b]))
+            lev = int(simlib.discretize(np.asarray([s]), thresholds)[0])
+            if lev == 0 and simlib.abbrev_compatible(names[a], names[b]):
+                lev = 1  # abbreviation-aware weak candidate
+            elif lev > 0 and simlib.first_name_conflict(names[a], names[b]):
+                lev = 0  # full first names of different people: veto
+            level_cache[gid] = lev
+        return lev
+
+    n_nb = len(cover)
+    neighborhood_bin = np.zeros(n_nb, dtype=np.int64)
+    neighborhood_row = np.zeros(n_nb, dtype=np.int64)
+    staged: dict[int, list[dict]] = {k: [] for k in k_bins}
+
+    for n, members in enumerate(cover.full):
+        size = len(members)
+        k = next((kb for kb in k_bins if size <= kb), k_bins[-1])
+        members = members[:k]  # safety clip (build_cover respects k_max)
+        k_eff = k
+        P = pairlib.num_pairs(k_eff)
+        ii, jj = pairlib.triu_indices(k_eff)
+
+        ids = np.full(k_eff, -1, dtype=np.int64)
+        ids[: len(members)] = members
+        emask = ids >= 0
+        co = np.zeros((k_eff, k_eff), dtype=bool)
+        for a_slot in range(len(members)):
+            a = int(members[a_slot])
+            nbrs = adj.get(a, set())
+            for b_slot in range(a_slot + 1, len(members)):
+                if int(members[b_slot]) in nbrs:
+                    co[a_slot, b_slot] = True
+                    co[b_slot, a_slot] = True
+
+        lev = np.zeros(P, dtype=np.int8)
+        gid = np.full(P, -1, dtype=np.int64)
+        pmask = np.zeros(P, dtype=bool)
+        for p in range(P):
+            i, j = int(ii[p]), int(jj[p])
+            if not (emask[i] and emask[j]):
+                continue
+            a, b = int(ids[i]), int(ids[j])
+            lv = pair_level(a, b)
+            if lv >= 1:
+                lev[p] = lv
+                gid[p] = pairlib.make_gid(a, b)
+                pmask[p] = True
+
+        neighborhood_bin[n] = k
+        neighborhood_row[n] = len(staged[k])
+        staged[k].append(
+            dict(ids=ids, emask=emask, co=co, lev=lev, gid=gid, pmask=pmask)
+        )
+
+    bins: dict[int, NeighborhoodBatch] = {}
+    bin_rows: dict[int, np.ndarray] = {}
+    for k, rows in staged.items():
+        if not rows:
+            continue
+        bins[k] = NeighborhoodBatch(
+            entity_ids=np.stack([r["ids"] for r in rows]),
+            entity_mask=np.stack([r["emask"] for r in rows]),
+            coauthor=np.stack([r["co"] for r in rows]),
+            sim_level=np.stack([r["lev"] for r in rows]),
+            pair_gid=np.stack([r["gid"] for r in rows]),
+            pair_mask=np.stack([r["pmask"] for r in rows]),
+        )
+        rows_idx = np.where(neighborhood_bin == k)[0]
+        bin_rows[k] = rows_idx
+
+    pair_levels = {g: l for g, l in level_cache.items() if l >= 1}
+    return PackedCover(
+        bins=bins,
+        bin_rows=bin_rows,
+        neighborhood_bin=neighborhood_bin,
+        neighborhood_row=neighborhood_row,
+        pair_levels=pair_levels,
+        cover=cover,
+    )

@@ -1,0 +1,211 @@
+"""Sequential message-passing drivers: NO-MP, SMP (Alg. 1), MMP (Alg. 3).
+
+These are the paper's algorithms verbatim: a host-side worklist of
+active neighborhoods, the (batched, JAX) matcher as the black box, and
+host-side message bookkeeping.  The round-parallel SPMD version lives in
+:mod:`repro.core.parallel`; Theorems 2/4 (consistency) guarantee both
+produce the same fixpoint, which the tests verify.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+
+import numpy as np
+
+from repro.core import pairs as pairlib
+from repro.core.cover import PackedCover
+from repro.core.global_grounding import GlobalGrounding
+from repro.core.matcher import TypeIIMatcher, TypeIMatcher
+from repro.core.types import MatchStore
+
+
+@dataclasses.dataclass
+class EMResult:
+    matches: MatchStore
+    neighborhood_evals: int
+    rounds: int
+    messages_emitted: int
+    messages_promoted: int
+    wall_time_s: float
+    history: list[int] = dataclasses.field(default_factory=list)
+
+
+def _eval_neighborhood(matcher, packed, n, m_plus, with_messages):
+    """Run the matcher on neighborhood n with current evidence projected in."""
+    k = int(packed.neighborhood_bin[n])
+    row = int(packed.neighborhood_row[n])
+    nb = packed.bins[k].row(row)
+    ev_pos = m_plus.mask_of(nb.pair_gid)
+    if with_messages:
+        x, lab = matcher.run_with_messages(nb, ev_pos, None)
+        return nb, x[0], lab[0]
+    x = matcher.run(nb, ev_pos, None)
+    return nb, x[0], None
+
+
+def _new_gids(nb_row_gid, x, m_plus):
+    gids = nb_row_gid[x & (nb_row_gid >= 0)]
+    fresh = gids[~np.isin(gids, m_plus.gids)]
+    return np.unique(fresh)
+
+
+def run_nomp(packed: PackedCover, matcher: TypeIMatcher) -> EMResult:
+    """Each neighborhood evaluated once, no messages (baseline NO-MP)."""
+    t0 = time.perf_counter()
+    m_plus = MatchStore()
+    evals = 0
+    for n in range(packed.num_neighborhoods):
+        nb, x, _ = _eval_neighborhood(matcher, packed, n, MatchStore(), False)
+        m_plus = m_plus.union(_new_gids(nb.pair_gid[0], x, m_plus))
+        evals += 1
+    return EMResult(m_plus, evals, 1, 0, 0, time.perf_counter() - t0)
+
+
+def run_smp(
+    packed: PackedCover,
+    matcher: TypeIMatcher,
+    order: list[int] | None = None,
+    max_evals: int | None = None,
+) -> EMResult:
+    """Algorithm 1 (SMP)."""
+    t0 = time.perf_counter()
+    n_nb = packed.num_neighborhoods
+    worklist = deque(order if order is not None else range(n_nb))
+    in_list = [True] * n_nb
+    m_plus = MatchStore()
+    evals = 0
+    cap = max_evals or n_nb * 64
+    while worklist and evals < cap:
+        n = worklist.popleft()
+        in_list[n] = False
+        nb, x, _ = _eval_neighborhood(matcher, packed, n, m_plus, False)
+        new = _new_gids(nb.pair_gid[0], x, m_plus)
+        evals += 1
+        if len(new):
+            m_plus = m_plus.union(new)
+            for m in packed.neighborhoods_of_pairs(new):
+                if m != n and not in_list[m]:
+                    worklist.append(m)
+                    in_list[m] = True
+    return EMResult(m_plus, evals, 1, 0, 0, time.perf_counter() - t0)
+
+
+# ---------------------------------------------------------------------------
+# MMP (Alg. 3) with host-side T* merging (Prop. 3) and step-7 promotion
+# ---------------------------------------------------------------------------
+
+
+class MessagePool:
+    """Disjoint maximal messages over global pair gids (the set T)."""
+
+    def __init__(self):
+        self.parent: dict[int, int] = {}  # union-find over gids
+
+    def _find(self, g: int) -> int:
+        p = self.parent.setdefault(g, g)
+        while p != self.parent[p]:
+            self.parent[p] = self.parent[self.parent[p]]
+            p = self.parent[p]
+        self.parent[g] = p
+        return p
+
+    def add_message(self, gids: list[int]) -> None:
+        """T <- (T u {M})* : union-find merge implements Prop. 3."""
+        if len(gids) < 2:
+            return
+        r0 = self._find(gids[0])
+        for g in gids[1:]:
+            r = self._find(g)
+            if r != r0:
+                self.parent[r] = r0
+
+    def groups(self) -> list[np.ndarray]:
+        by_root: dict[int, list[int]] = {}
+        for g in list(self.parent.keys()):
+            by_root.setdefault(self._find(g), []).append(g)
+        return [np.asarray(sorted(v), dtype=np.int64) for v in by_root.values() if len(v) >= 2]
+
+
+def _labels_to_messages(nb_gid: np.ndarray, lab: np.ndarray, m_plus) -> list[list[int]]:
+    """Component labels (P,) -> groups of >= 2 unmatched global pairs."""
+    P = lab.shape[0]
+    msgs: dict[int, list[int]] = {}
+    for p in range(P):
+        l = int(lab[p])
+        if l >= P:
+            continue
+        g = int(nb_gid[p])
+        if g < 0 or g in m_plus:
+            continue
+        msgs.setdefault(l, []).append(g)
+    return [v for v in msgs.values() if len(v) >= 2]
+
+
+def _promote(pool: MessagePool, gg: GlobalGrounding, m_plus: MatchStore):
+    """Step 7: promote every message with nonneg global delta; to fixpoint."""
+    promoted = 0
+    new_all: list[np.ndarray] = []
+    base = gg.bool_of(m_plus)
+    changed = True
+    while changed:
+        changed = False
+        for grp in pool.groups():
+            idx = gg.index_of(grp)
+            idx = idx[idx >= 0]
+            add = np.zeros_like(base)
+            add[idx] = True
+            if not np.any(add & ~base):
+                continue
+            if gg.delta(base, add) >= -1e-6:
+                base = base | add
+                new_all.append(grp)
+                promoted += 1
+                changed = True
+    if new_all:
+        m_plus = m_plus.union(np.concatenate(new_all))
+    return m_plus, promoted
+
+
+def run_mmp(
+    packed: PackedCover,
+    matcher: TypeIIMatcher,
+    gg: GlobalGrounding,
+    order: list[int] | None = None,
+    max_evals: int | None = None,
+) -> EMResult:
+    """Algorithm 3 (MMP)."""
+    t0 = time.perf_counter()
+    n_nb = packed.num_neighborhoods
+    worklist = deque(order if order is not None else range(n_nb))
+    in_list = [True] * n_nb
+    m_plus = MatchStore()
+    pool = MessagePool()
+    evals = 0
+    emitted = 0
+    promoted_total = 0
+    cap = max_evals or n_nb * 64
+    while worklist and evals < cap:
+        n = worklist.popleft()
+        in_list[n] = False
+        nb, x, lab = _eval_neighborhood(matcher, packed, n, m_plus, True)
+        evals += 1
+        new = _new_gids(nb.pair_gid[0], x, m_plus)
+        m_plus = m_plus.union(new)
+        for msg in _labels_to_messages(nb.pair_gid[0], lab, m_plus):
+            pool.add_message(msg)
+            emitted += 1
+        m_plus2, promoted = _promote(pool, gg, m_plus)
+        promoted_total += promoted
+        newly = np.concatenate([new, m_plus2.difference(m_plus)]) if promoted else new
+        m_plus = m_plus2
+        if len(newly):
+            for m in packed.neighborhoods_of_pairs(np.unique(newly)):
+                if m != n and not in_list[m]:
+                    worklist.append(m)
+                    in_list[m] = True
+    return EMResult(
+        m_plus, evals, 1, emitted, promoted_total, time.perf_counter() - t0
+    )

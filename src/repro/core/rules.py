@@ -1,0 +1,101 @@
+"""The RULES matcher (paper Appendix B/C): declarative collective rules.
+
+RULES is the paper's second matcher, modeled after the Dedupalog
+framework [Arasu-Re-Suciu 2009].  It is a *Type-I* matcher — no
+probability distribution — evaluated as a monotone fixpoint of the
+Appendix-B rule set::
+
+    1. similar(e1,e2,3)                                  => equals(e1,e2)
+    2. similar(e1,e2,2) & one matched coauthor pair      => equals(e1,e2)
+    3. similar(e1,e2,1) & two distinct matched co-pairs  => equals(e1,e2)
+
+"Matched coauthor pair" counts both genuinely-matched candidate pairs
+(``link @ x``) and shared coauthors ``d`` (the reflexive ``equals(d,d)``,
+``n_shared``).  Per Prop. 5 this negation/transitivity-free fragment is
+monotone, so SMP over RULES is sound (Thm. 2); the final transitive
+closure (Appendix A) is applied by the caller via
+:mod:`repro.core.closure` after message passing terminates.
+
+TPU shape: the fixpoint body is ``n = n_shared + link @ x`` — the same
+batched mat-vec as the MLN closure sweep, dispatched to the
+``icm_sweep`` Pallas kernel.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.mln import ground_structure
+from repro.core.types import NeighborhoodBatch
+from repro.kernels.icm_sweep import ops as icm_ops
+
+
+def _rules_fixpoint(lev, n_shared, link, ev_pos, ev_neg, valid):
+    """Monotone rule fixpoint for one neighborhood. All (P,)-shaped."""
+    x0 = ev_pos & valid & ~ev_neg
+
+    def cond(state):
+        _, changed = state
+        return changed
+
+    def body(state):
+        x, _ = state
+        # matched coauthor-pair count per candidate pair
+        n = icm_ops.sweep(n_shared, link, x.astype(jnp.float32))
+        fire = (
+            (lev == 3)
+            | ((lev == 2) & (n >= 1.0 - 1e-6))
+            | ((lev == 1) & (n >= 2.0 - 1e-6))
+        )
+        x2 = (fire & valid & ~ev_neg) | x0 | x
+        return x2, jnp.any(x2 != x)
+
+    x, _ = jax.lax.while_loop(cond, body, (x0, jnp.bool_(True)))
+    return x
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_rules():
+    batched = jax.vmap(_rules_fixpoint, in_axes=(0, 0, 0, 0, 0, 0))
+    return jax.jit(batched)
+
+
+class RulesMatcher:
+    """Monotone Type-I matcher over padded neighborhood batches.
+
+    Interface mirrors :class:`repro.core.mln.MLNMatcher` minus the
+    Type-II ``score``; ``run_with_messages`` exists for driver symmetry
+    but emits no maximal messages (labels = P everywhere) because
+    maximality is a Type-II notion (Def. 8 + step 7 need ``P_E``).
+    """
+
+    is_probabilistic = False
+
+    def run(
+        self,
+        batch: NeighborhoodBatch,
+        ev_pos: np.ndarray | None = None,
+        ev_neg: np.ndarray | None = None,
+    ) -> np.ndarray:
+        lev, valid, n_shared, link = ground_structure(batch)
+        B, P = lev.shape
+        ev_pos = self._mask(ev_pos, (B, P))
+        ev_neg = self._mask(ev_neg, (B, P))
+        x = _jitted_rules()(lev, n_shared, link, ev_pos, ev_neg, valid)
+        return np.asarray(x)
+
+    def run_with_messages(self, batch, ev_pos=None, ev_neg=None):
+        x = self.run(batch, ev_pos, ev_neg)
+        B, P = x.shape
+        lab = np.full((B, P), P, dtype=np.int32)
+        return x, lab
+
+    @staticmethod
+    def _mask(m, shape) -> jax.Array:
+        if m is None:
+            return jnp.zeros(shape, dtype=bool)
+        return jnp.asarray(m, dtype=bool)

@@ -1,0 +1,133 @@
+"""LM training data pipeline: synthetic corpus + sharded loader.
+
+The training substrate needs a deterministic, infinite, restartable
+token stream.  Documents are synthesized from a power-law unigram model
+(Zipfian token frequencies, like natural text) with a controllable rate
+of *near-duplicate* documents — the workload for the EM-based corpus
+dedup (:mod:`repro.data.dedup`), which is the paper's technique applied
+at the LM data layer.
+
+Determinism + restartability: batch ``i`` is a pure function of
+``(seed, i)`` (counter-based RNG), so checkpoint restore just resumes at
+``step`` with no loader state to persist — a requirement for preemption
+recovery on large fleets.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+try:  # jax only needed for device placement helpers
+    import jax
+    from jax.sharding import Mesh, NamedSharding
+    from jax.sharding import PartitionSpec as P
+except Exception:  # pragma: no cover
+    jax = None
+
+
+@dataclasses.dataclass(frozen=True)
+class CorpusConfig:
+    vocab_size: int = 32000
+    seq_len: int = 1024
+    global_batch: int = 8
+    seed: int = 0
+    # document model
+    doc_len_mean: int = 512
+    dup_rate: float = 0.15  # fraction of near-duplicate docs
+    zipf_a: float = 1.2
+
+
+class TokenStream:
+    """Deterministic (seed, step) -> batch of token ids + targets."""
+
+    def __init__(self, cfg: CorpusConfig):
+        self.cfg = cfg
+
+    def batch(self, step: int) -> dict[str, np.ndarray]:
+        cfg = self.cfg
+        rng = np.random.default_rng(
+            np.random.SeedSequence([cfg.seed, step, 0xC0FFEE])
+        )
+        # Zipf over vocab, shifted so token 0 is reserved for padding/BOS
+        z = rng.zipf(cfg.zipf_a, size=(cfg.global_batch, cfg.seq_len + 1))
+        toks = (z % (cfg.vocab_size - 1)).astype(np.int32) + 1
+        return {
+            "tokens": toks[:, :-1],
+            "labels": toks[:, 1:],
+        }
+
+    def batches(self, start_step: int = 0):
+        step = start_step
+        while True:
+            yield self.batch(step)
+            step += 1
+
+
+def make_documents(
+    cfg: CorpusConfig, n_docs: int
+) -> tuple[list[np.ndarray], np.ndarray]:
+    """Document collection with injected near-duplicates (for dedup).
+
+    Returns (docs, dup_of) where ``dup_of[i]`` is the index of the
+    original document i duplicates, or -1 for originals — ground truth
+    for evaluating the dedup pipeline.
+    """
+    rng = np.random.default_rng(cfg.seed)
+    docs: list[np.ndarray] = []
+    dup_of = np.full(n_docs, -1, dtype=np.int64)
+    for d in range(n_docs):
+        if docs and rng.random() < cfg.dup_rate:
+            # near-duplicate of an earlier doc: token dropout + noise
+            j = int(rng.integers(0, len(docs)))
+            src = docs[j]
+            keep = rng.random(len(src)) > 0.03
+            dup = src[keep].copy()
+            flips = rng.random(len(dup)) < 0.01
+            dup[flips] = rng.integers(1, cfg.vocab_size, size=int(flips.sum()))
+            docs.append(dup)
+            dup_of[d] = dup_of[j] if dup_of[j] >= 0 else j
+        else:
+            n = max(16, int(rng.normal(cfg.doc_len_mean, cfg.doc_len_mean / 4)))
+            z = rng.zipf(cfg.zipf_a, size=n)
+            docs.append((z % (cfg.vocab_size - 1)).astype(np.int32) + 1)
+    return docs, dup_of
+
+
+def shard_batch(batch: dict[str, np.ndarray], mesh, data_axes=("data",)):
+    """Place a host batch onto the mesh, sharded along the batch axis."""
+    assert jax is not None
+    sharding = NamedSharding(mesh, P(data_axes))
+    return {k: jax.device_put(v, sharding) for k, v in batch.items()}
+
+
+class Loader:
+    """Prefetching loader bound to a mesh.
+
+    ``prefetch`` batches are staged ahead with ``device_put`` so host
+    synthesis overlaps device compute (the CPU analogue of an input
+    pipeline; on TPU this is where a real tf.data/grain feed would sit).
+    """
+
+    def __init__(self, cfg: CorpusConfig, mesh=None, prefetch: int = 2,
+                 start_step: int = 0, data_axes=("data",)):
+        self.stream = TokenStream(cfg)
+        self.mesh = mesh
+        self.prefetch = prefetch
+        self.start_step = start_step
+        self.data_axes = data_axes
+
+    def __iter__(self):
+        import collections
+
+        q: collections.deque = collections.deque()
+        step = self.start_step
+        while True:
+            while len(q) <= self.prefetch:
+                b = self.stream.batch(step)
+                if self.mesh is not None:
+                    b = shard_batch(b, self.mesh, self.data_axes)
+                q.append(b)
+                step += 1
+            yield q.popleft()

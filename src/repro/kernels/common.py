@@ -1,0 +1,62 @@
+"""Shared helpers for the Pallas TPU kernels.
+
+Routing policy (``ops.py`` of every kernel):
+
+* On TPU, run the compiled Pallas kernel.
+* On CPU/GPU, run the pure-jnp reference (identical math) so the whole
+  framework works everywhere.
+* ``REPRO_PALLAS=interpret`` forces the Pallas kernel in interpret mode
+  (kernel body executed in Python) — this is how the CPU CI validates
+  the kernels against the oracles in ``ref.py``.
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+import numpy as np
+
+
+def pallas_mode() -> str:
+    """'compiled' | 'interpret' | 'off'."""
+    env = os.environ.get("REPRO_PALLAS", "").lower()
+    if env == "interpret":
+        return "interpret"
+    if env == "off":
+        return "off"
+    try:
+        platform = jax.default_backend()
+    except Exception:  # pragma: no cover
+        platform = "cpu"
+    return "compiled" if platform == "tpu" else "off"
+
+
+def round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def pad_axis(x, axis: int, to: int, fill=0.0):
+    """Pad jnp/np array along axis to length `to`."""
+    import jax.numpy as jnp
+
+    cur = x.shape[axis]
+    if cur == to:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, to - cur)
+    return jnp.pad(x, pad, constant_values=fill)
+
+
+def pick_tile(n: int, preferred: int = 128, floor: int = 8) -> int:
+    """Largest hardware-aligned tile <= preferred that keeps padding sane."""
+    if n >= preferred:
+        return preferred
+    t = floor
+    while t * 2 <= max(n, floor):
+        t *= 2
+    return max(t, floor)
+
+
+def assert_allclose(a, b, rtol=1e-5, atol=1e-5, msg=""):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=rtol, atol=atol, err_msg=msg)

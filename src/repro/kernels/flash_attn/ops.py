@@ -1,0 +1,15 @@
+"""Jit'd dispatch: Pallas flash attention on TPU, oracles elsewhere."""
+
+from __future__ import annotations
+
+from repro.kernels import common
+from repro.kernels.flash_attn import kernel, ref
+
+
+def attention(q, k, v, scale, *, causal: bool = True):
+    mode = common.pallas_mode()
+    if mode == "compiled":
+        return kernel.flash_attention(q, k, v, scale, causal=causal)
+    if mode == "interpret":
+        return kernel.flash_attention(q, k, v, scale, causal=causal, interpret=True)
+    return ref.attention(q, k, v, scale, causal=causal)

@@ -1,0 +1,23 @@
+"""Pure-jnp oracle: naive GQA attention with full (S, T) scores."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention(q, k, v, scale, *, causal: bool = True):
+    """q (B,S,H,hd), k/v (B,T,Hkv,hd) -> (B,S,H*hd) f32."""
+    B, S, H, hd = q.shape
+    T, hkv = k.shape[1], k.shape[2]
+    g = H // hkv
+    qg = q.reshape(B, S, hkv, g, hd).astype(jnp.float32)
+    s = jnp.einsum("bskgh,btkh->bkgst", qg, k.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.arange(S)[:, None] >= jnp.arange(T)[None, :]
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgst,btkh->bskgh", p, v.astype(jnp.float32))
+    return o.reshape(B, S, H * hd)

@@ -1,0 +1,24 @@
+"""Jit'd dispatch for the ICM sweep: Pallas on TPU, jnp oracle elsewhere."""
+
+from __future__ import annotations
+
+from repro.kernels import common
+from repro.kernels.icm_sweep import kernel, ref
+
+
+def sweep_matrix(u, C, X):
+    mode = common.pallas_mode()
+    if mode == "compiled":
+        return kernel.sweep_matrix(u, C, X)
+    if mode == "interpret":
+        return kernel.sweep_matrix(u, C, X, interpret=True)
+    return ref.sweep_matrix(u, C, X)
+
+
+def sweep(u, C, x):
+    mode = common.pallas_mode()
+    if mode == "compiled":
+        return kernel.sweep(u, C, x)
+    if mode == "interpret":
+        return kernel.sweep(u, C, x, interpret=True)
+    return ref.sweep(u, C, x)

@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the ICM sweep: delta = u + X @ C."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def sweep_matrix(u, C, X):
+    """u (P,), C (P, P) symmetric, X (S, P) -> (S, P) f32."""
+    return u[None, :].astype(jnp.float32) + jnp.dot(
+        X.astype(jnp.float32), C.astype(jnp.float32)
+    )
+
+
+def sweep(u, C, x):
+    """u (P,), C (P, P), x (P,) -> (P,)."""
+    return sweep_matrix(u, C, x[None, :])[0]

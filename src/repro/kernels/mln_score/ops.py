@@ -1,0 +1,16 @@
+"""Jit'd dispatch for MLN set scoring: Pallas on TPU, jnp oracle elsewhere."""
+
+from __future__ import annotations
+
+from repro.kernels import common
+from repro.kernels.mln_score import kernel, ref
+
+
+def score_sets(u, C, X):
+    """u (B,P), C (B,P,P), X (B,S,P) -> (B,S) unnormalized log P."""
+    mode = common.pallas_mode()
+    if mode == "compiled":
+        return kernel.score_sets(u, C, X)
+    if mode == "interpret":
+        return kernel.score_sets(u, C, X, interpret=True)
+    return ref.score_sets(u, C, X)

@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for batched MLN set scoring.
+
+f(x) = x . u + 1/2 * x^T C x, per (neighborhood b, candidate set s).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def score_sets(u, C, X):
+    """u (B, P), C (B, P, P), X (B, S, P) -> (B, S) f32."""
+    u = u.astype(jnp.float32)
+    C = C.astype(jnp.float32)
+    X = X.astype(jnp.float32)
+    lin = jnp.einsum("bsp,bp->bs", X, u)
+    quad = 0.5 * jnp.einsum("bsp,bpq,bsq->bs", X, C, X)
+    return lin + quad

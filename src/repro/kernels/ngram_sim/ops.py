@@ -1,0 +1,24 @@
+"""Jit'd dispatch for n-gram similarity: Pallas on TPU, jnp elsewhere."""
+
+from __future__ import annotations
+
+from repro.kernels import common
+from repro.kernels.ngram_sim import kernel, ref
+
+
+def sim_above(A, B, threshold: float):
+    mode = common.pallas_mode()
+    if mode == "compiled":
+        return kernel.sim_above(A, B, threshold)
+    if mode == "interpret":
+        return kernel.sim_above(A, B, threshold, interpret=True)
+    return ref.sim_above(A, B, threshold)
+
+
+def sim_matrix(A, B):
+    mode = common.pallas_mode()
+    if mode == "compiled":
+        return kernel.sim_matrix(A, B)
+    if mode == "interpret":
+        return kernel.sim_matrix(A, B, interpret=True)
+    return ref.sim_matrix(A, B)

@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for blocked n-gram cosine similarity."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def sim_matrix(A, B):
+    """A (M, F), B (N, F) L2-normalized -> (M, N) cosine sims, f32."""
+    return jnp.dot(A.astype(jnp.float32), B.astype(jnp.float32).T)
+
+
+def sim_above(A, B, threshold: float):
+    """Thresholded similarity: sim where >= threshold else 0 (sparse-ish)."""
+    s = sim_matrix(A, B)
+    return jnp.where(s >= threshold, s, 0.0)

@@ -1,0 +1,455 @@
+"""Loop-aware static analysis of partitioned HLO text.
+
+``compiled.cost_analysis()`` counts a ``while`` body **once**, so any
+program built from ``lax.scan`` (every layer stack here) is massively
+under-counted.  This module re-derives the three roofline inputs from
+``compiled.as_text()`` with loop trip counts applied:
+
+* **flops** — ``dot`` ops: ``2 x result_elems x contracted_elems``;
+  convolutions ``2 x result x window``; elementwise/reduce ops 1 flop
+  per element.  ``while`` bodies are multiplied by their trip count
+  (recovered from the scan-induction-variable ``compare(iv, C)`` in the
+  loop condition); fusions/calls are recursed.
+* **bytes** — HBM traffic proxy: for every top-level op of every
+  executed computation, result bytes + operand bytes (fusion interiors
+  excluded — the fusion boundary is what touches HBM), times the
+  enclosing trip counts.
+* **collectives** — every all-reduce / all-gather / reduce-scatter /
+  all-to-all / collective-permute with per-device operand bytes, a wire
+  traffic model, replica-group size, cross-pod (DCN) classification, and
+  the enclosing loop multiplier.
+
+Shapes in a partitioned module are per-device, so every number this
+module reports is *per chip*.
+
+Fixed-point ``lax.while_loop``s (the EM matcher's convergence loops)
+have data-dependent trip counts; they are reported with trip=1 and
+flagged in ``unknown_whiles`` so callers can scale by an assumed sweep
+count.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+import numpy as np
+
+DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16, "token": 0, "s4": 1, "u4": 1,
+}
+
+SHAPE_RE = re.compile(
+    r"(f64|f32|f16|bf16|f8e4m3fn|f8e5m2|s64|s32|s16|s8|u64|u32|u16|u8|u4|s4|pred|c64|c128|token)\[([0-9,]*)\]"
+)
+COMP_HEADER_RE = re.compile(r"^(?:ENTRY\s+)?(%[\w.-]+)\s*\(.*\)\s*->\s*.*\{\s*$")
+NAME_RE = re.compile(r"^\s*(?:ROOT\s+)?(%[\w.-]+)\s*=\s*")
+ELEMWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum",
+    "exponential", "exponential-minus-one", "log", "log-plus-one", "tanh",
+    "rsqrt", "sqrt", "cbrt", "power", "negate", "abs", "floor", "ceil",
+    "round-nearest-afz", "round-nearest-even", "sign", "compare", "select",
+    "and", "or", "xor", "not", "clamp", "atan2", "remainder", "sine",
+    "cosine", "tan", "erf", "logistic", "shift-left",
+    "shift-right-arithmetic", "shift-right-logical", "clz", "popcnt",
+}
+SKIP_BYTES = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "partition-id", "replica-id",
+}
+COLLECTIVES = {
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "all-reduce-start", "all-gather-start",
+    "collective-permute-start", "ragged-all-to-all",
+}
+WIRE_FACTOR = {
+    "all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+    "all-to-all": 1.0, "collective-permute": 1.0, "ragged-all-to-all": 1.0,
+}
+
+
+def type_elems_bytes(type_str: str) -> tuple[int, int]:
+    elems = 0
+    nbytes = 0
+    for m in SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        elems += n
+        nbytes += n * DTYPE_BYTES[dt]
+    return elems, nbytes
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    type_str: str
+    opcode: str
+    rest: str  # operand list + attributes (raw tail of the line)
+
+    @property
+    def result_elems(self) -> int:
+        return type_elems_bytes(self.type_str)[0]
+
+    @property
+    def result_bytes(self) -> int:
+        return type_elems_bytes(self.type_str)[1]
+
+    def operand_names(self) -> list[str]:
+        # operands live before the closing paren that starts the attr list
+        depth, i = 1, 0
+        while i < len(self.rest) and depth:
+            if self.rest[i] == "(":
+                depth += 1
+            elif self.rest[i] == ")":
+                depth -= 1
+            i += 1
+        return re.findall(r"%[\w.-]+", self.rest[: i])
+
+    def attr(self, key: str) -> str | None:
+        m = re.search(rf"{key}=([^,]+(?:\{{[^}}]*\}})?)", self.rest)
+        return m.group(1) if m else None
+
+    def called_computations(self) -> list[str]:
+        names: list[str] = []
+        for key in ("calls", "to_apply", "condition", "body",
+                    "true_computation", "false_computation"):
+            m = re.search(rf"{key}=(%[\w.-]+)", self.rest)
+            if m:
+                names.append(m.group(1))
+        m = re.search(r"branch_computations=\{([^}]*)\}", self.rest)
+        if m:
+            names.extend(re.findall(r"%[\w.-]+", m.group(1)))
+        return names
+
+
+def _parse_instr(line: str) -> Instr | None:
+    """Split one HLO line into (name, result type, opcode, tail).
+
+    Result types can be tuples containing ``/*index=N*/`` comments, so
+    the type is scanned with a paren balance instead of a regex.
+    """
+    m = NAME_RE.match(line)
+    if m is None:
+        return None
+    name = m.group(1)
+    i = m.end()
+    n = len(line)
+    if i < n and line[i] == "(":  # tuple type
+        depth = 0
+        j = i
+        while j < n:
+            if line[j] == "(":
+                depth += 1
+            elif line[j] == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+            j += 1
+        type_str = line[i : j + 1]
+        i = j + 1
+    else:
+        j = line.find(" ", i)
+        if j < 0:
+            return None
+        type_str = line[i:j]
+        i = j
+    # opcode token, then the '(' that opens the operand list
+    rest = line[i:].lstrip()
+    p = rest.find("(")
+    if p < 0:
+        return None
+    opcode = rest[:p].strip()
+    if not re.fullmatch(r"[\w-]+", opcode):
+        return None
+    return Instr(name, type_str, opcode, rest[p + 1 :])
+
+
+def parse_module(text: str) -> tuple[dict[str, list[Instr]], str | None]:
+    comps: dict[str, list[Instr]] = {}
+    entry: str | None = None
+    cur: list[Instr] | None = None
+    for line in text.splitlines():
+        h = COMP_HEADER_RE.match(line.strip()) if "{" in line else None
+        if h and ("->" in line):
+            name = h.group(1)
+            comps[name] = []
+            cur = comps[name]
+            if line.lstrip().startswith("ENTRY"):
+                entry = name
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        ins = _parse_instr(line)
+        if ins is not None:
+            cur.append(ins)
+    return comps, entry
+
+
+# ---------------------------------------------------------------------------
+# Per-computation analysis
+# ---------------------------------------------------------------------------
+
+
+def _shape_env(instrs: list[Instr]) -> dict[str, str]:
+    return {i.name: i.type_str for i in instrs}
+
+
+def _dot_flops(instr: Instr, env: dict[str, str]) -> float:
+    ops = instr.operand_names()
+    if not ops:
+        return 0.0
+    lhs_type = env.get(ops[0], "")
+    dims_m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", instr.rest)
+    contracted = 1
+    if dims_m and lhs_type:
+        sm = SHAPE_RE.search(lhs_type)
+        if sm:
+            shape = [int(d) for d in sm.group(2).split(",") if d]
+            for di in dims_m.group(1).split(","):
+                if di:
+                    contracted *= shape[int(di)] if int(di) < len(shape) else 1
+    return 2.0 * instr.result_elems * contracted
+
+
+def _conv_flops(instr: Instr) -> float:
+    m = re.search(r"window=\{size=([0-9x]+)", instr.rest)
+    window = 1
+    if m:
+        for d in m.group(1).split("x"):
+            window *= int(d)
+    return 2.0 * instr.result_elems * window
+
+
+def _trip_count(comps: dict[str, list[Instr]], cond_name: str) -> int | None:
+    """Recover the scan trip count from the loop condition computation."""
+    seen: list[int] = []
+    stack = [cond_name]
+    visited = set()
+    while stack:
+        cn = stack.pop()
+        if cn in visited or cn not in comps:
+            continue
+        visited.add(cn)
+        for ins in comps[cn]:
+            if ins.opcode == "constant" and ins.type_str.strip() in ("s32[]", "u32[]", "s64[]", "u64[]"):
+                m = re.match(r"([0-9-]+)", ins.rest.rstrip(") "))
+                if m:
+                    seen.append(int(m.group(1)))
+            for c in ins.called_computations():
+                stack.append(c)
+    pos = [c for c in seen if c > 0]
+    return max(pos) if pos else None
+
+
+@dataclasses.dataclass
+class Analysis:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collectives: list[dict] = dataclasses.field(default_factory=list)
+    unknown_whiles: int = 0
+    bf16_upcast_bytes: float = 0.0  # CPU-backend bf16 legalization copies
+
+    def add(self, other: "Analysis", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        for c in other.collectives:
+            c2 = dict(c)
+            c2["mult"] = c.get("mult", 1.0) * mult
+            self.collectives.append(c2)
+        self.unknown_whiles += other.unknown_whiles
+        # buffer-space estimate: count each conversion site once, not
+        # per loop trip (the f32 buffer is reused across iterations)
+        self.bf16_upcast_bytes += other.bf16_upcast_bytes
+
+
+def _replica_groups(instr: Instr, n_devices: int, pod_boundary: int):
+    """(group_size, cross_pod) from either explicit or iota group syntax."""
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]<=\[([0-9,]+)\](?:T\(([0-9,]+)\))?", instr.rest)
+    if m:
+        g, s = int(m.group(1)), int(m.group(2))
+        dims = [int(d) for d in m.group(3).split(",")]
+        n = int(np.prod(dims))
+        ids = np.arange(n).reshape(dims)
+        if m.group(4):
+            perm = [int(d) for d in m.group(4).split(",")]
+            ids = ids.transpose(perm)
+        groups = ids.reshape(g, s)
+        cross = bool(np.any(groups // pod_boundary
+                            != groups[:, :1] // pod_boundary))
+        return s, cross
+    m = re.search(r"replica_groups=\{(\{[0-9, ]+\}(?:,\{[0-9, ]+\})*)\}", instr.rest)
+    if m:
+        groups = [
+            [int(x) for x in re.findall(r"\d+", grp)]
+            for grp in re.findall(r"\{([0-9, ]+)\}", m.group(1))
+        ]
+        size = max(len(g) for g in groups)
+        cross = any(
+            (max(g) // pod_boundary) != (min(g) // pod_boundary) for g in groups
+        )
+        return size, cross
+    return n_devices, False
+
+
+def analyze_computation(
+    comps: dict[str, list[Instr]],
+    name: str,
+    cache: dict[str, Analysis],
+    *,
+    n_devices: int,
+    pod_boundary: int,
+    inside_fusion: bool = False,
+) -> Analysis:
+    if name in cache:
+        return cache[name]
+    cache[name] = Analysis()  # cycle guard
+    instrs = comps.get(name, [])
+    env = _shape_env(instrs)
+    out = Analysis()
+    for ins in instrs:
+        op = ins.opcode
+        if op == "dot":
+            out.flops += _dot_flops(ins, env)
+        elif op == "convolution":
+            out.flops += _conv_flops(ins)
+        elif op in ELEMWISE:
+            out.flops += ins.result_elems
+        elif op in ("reduce", "reduce-window"):
+            ops = ins.operand_names()
+            if ops and ops[0] in env:
+                out.flops += type_elems_bytes(env[ops[0]])[0]
+        elif op == "convert" and "f32[" in ins.type_str:
+            # XLA *CPU* legalizes bf16 by inserting f32 round-trips of
+            # whole buffers (TPU executes bf16 natively).  Track large
+            # bf16->f32 converts so memory reports can be TPU-adjusted.
+            srcs = ins.operand_names()
+            if srcs and "bf16[" in env.get(srcs[0], ""):
+                if ins.result_bytes >= 32 * 2**20:
+                    out.bf16_upcast_bytes += ins.result_bytes
+        elif op in COLLECTIVES:
+            kind = op.replace("-start", "")
+            gsize, cross = _replica_groups(ins, n_devices, pod_boundary)
+            nbytes = ins.result_bytes
+            out.collectives.append({
+                "kind": kind, "bytes": nbytes,
+                "wire_bytes": nbytes * WIRE_FACTOR.get(kind, 1.0),
+                "group_size": gsize, "cross_pod": cross, "mult": 1.0,
+            })
+
+        if op == "while":
+            cond = re.search(r"condition=(%[\w.-]+)", ins.rest)
+            body = re.search(r"body=(%[\w.-]+)", ins.rest)
+            # XLA annotates statically known trip counts (scan loops)
+            ktc = re.search(r'known_trip_count[":{\s]+n[":\s]+(\d+)', ins.rest)
+            trip = int(ktc.group(1)) if ktc else (
+                _trip_count(comps, cond.group(1)) if cond else None
+            )
+            if trip is None:
+                trip = 1
+                out.unknown_whiles += 1
+            if body:
+                sub = analyze_computation(
+                    comps, body.group(1), cache,
+                    n_devices=n_devices, pod_boundary=pod_boundary,
+                )
+                out.add(sub, mult=float(trip))
+            if cond:
+                subc = analyze_computation(
+                    comps, cond.group(1), cache,
+                    n_devices=n_devices, pod_boundary=pod_boundary,
+                )
+                out.add(subc, mult=float(trip))
+        elif op == "fusion":
+            called = ins.called_computations()
+            if called:
+                sub = analyze_computation(
+                    comps, called[0], cache,
+                    n_devices=n_devices, pod_boundary=pod_boundary,
+                    inside_fusion=True,
+                )
+                # flops from the interior; bytes only at the boundary
+                out.flops += sub.flops
+                out.collectives.extend(dict(c) for c in sub.collectives)
+                out.unknown_whiles += sub.unknown_whiles
+                out.bf16_upcast_bytes += sub.bf16_upcast_bytes
+        elif op in ("call", "async-start", "custom-call"):
+            for cn in ins.called_computations():
+                sub = analyze_computation(
+                    comps, cn, cache,
+                    n_devices=n_devices, pod_boundary=pod_boundary,
+                )
+                out.add(sub)
+        elif op == "conditional":
+            branches = ins.called_computations()
+            if branches:
+                subs = [
+                    analyze_computation(
+                        comps, b, cache,
+                        n_devices=n_devices, pod_boundary=pod_boundary,
+                    )
+                    for b in branches
+                ]
+                out.add(max(subs, key=lambda a: a.flops))
+        elif op == "reduce" and not inside_fusion:
+            pass  # to_apply is a scalar computation; already counted above
+
+        # HBM-traffic proxy (fusion interiors excluded).  Elementwise /
+        # shape ops count result bytes only: a TPU build fuses the
+        # producer chain, so their operands never round-trip HBM (the
+        # CPU backend fuses far less; counting its op boundaries
+        # verbatim would inflate the memory term ~3x).
+        if not inside_fusion and op not in SKIP_BYTES and op != "while":
+            nbytes = ins.result_bytes
+            if op not in ELEMWISE and op not in (
+                "broadcast", "iota", "reshape", "transpose", "convert",
+                "reduce", "copy", "slice", "pad", "reverse", "concatenate",
+            ):
+                for o in ins.operand_names():
+                    if o in env:
+                        nbytes += type_elems_bytes(env[o])[1]
+            out.bytes += nbytes
+
+    cache[name] = out
+    return out
+
+
+def analyze(text: str, *, n_devices: int = 256, pod_boundary: int = 256) -> dict:
+    """Full-module analysis. All numbers are per device."""
+    comps, entry = parse_module(text)
+    if entry is None:
+        # fall back: the last computation is usually the entry
+        entry = list(comps)[-1] if comps else None
+    cache: dict[str, Analysis] = {}
+    res = analyze_computation(
+        comps, entry, cache, n_devices=n_devices, pod_boundary=pod_boundary
+    ) if entry else Analysis()
+
+    colls = res.collectives
+    def wsum(pred):
+        return float(sum(c["wire_bytes"] * c.get("mult", 1.0) for c in colls if pred(c)))
+
+    by_kind = {}
+    for c in colls:
+        k = c["kind"]
+        by_kind[k] = by_kind.get(k, 0.0) + c["wire_bytes"] * c.get("mult", 1.0)
+    return {
+        "flops": float(res.flops),
+        "bytes": float(res.bytes),
+        "collective_bytes": float(
+            sum(c["bytes"] * c.get("mult", 1.0) for c in colls)
+        ),
+        "collective_wire_bytes": wsum(lambda c: True),
+        "collective_cross_pod_bytes": wsum(lambda c: c["cross_pod"]),
+        "collectives_by_kind": by_kind,
+        "n_collective_sites": len(colls),
+        "unknown_whiles": int(res.unknown_whiles),
+        "bf16_upcast_bytes": float(res.bf16_upcast_bytes),
+    }

@@ -1,0 +1,51 @@
+"""Serving launcher: ``python -m repro.launch.serve --arch <id> ...``
+
+Random-weight serving driver around :class:`repro.serve.engine.Engine`
+(the jitted decode step is the same ``serve_step`` the multi-pod
+dry-run lowers at 32k/500k context).
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from repro.configs.base import ARCH_IDS, get_config, smoke_config
+from repro.models.registry import get_model
+from repro.serve.engine import demo_engine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=ARCH_IDS)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--s-max", type=int, default=128)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--requests", type=int, default=8)
+    args = ap.parse_args()
+
+    cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    api = get_model(cfg)
+    if api.prefill is None:
+        raise SystemExit(f"{cfg.name} ({cfg.family}) has no prefill path")
+    engine = demo_engine(api, batch=args.batch, s_max=args.s_max)
+
+    rng = np.random.default_rng(0)
+    prompts = [
+        rng.integers(1, cfg.vocab_size - 1, size=args.prompt_len).astype(np.int32)
+        for _ in range(args.requests)
+    ]
+    t0 = time.perf_counter()
+    outs = engine.generate(prompts, max_new=args.max_new)
+    dt = time.perf_counter() - t0
+    total = sum(len(o) for o in outs)
+    print(f"{cfg.name}: {len(prompts)} requests, {total} tokens, "
+          f"{dt:.2f}s ({total/dt:.1f} tok/s incl. compile)")
+
+
+if __name__ == "__main__":
+    main()

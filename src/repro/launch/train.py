@@ -1,0 +1,63 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> ...``
+
+Builds the mesh from whatever devices exist (1 CPU here; a pod slice in
+production), applies the launch sharding policies, and drives the
+restartable Trainer.  ``--dry`` lowers/compiles the step and prints the
+memory analysis instead of training (the single-cell analogue of
+``repro.launch.dryrun``).
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import jax
+
+from repro.configs.base import ARCH_IDS, get_config, smoke_config
+from repro.data.corpus import CorpusConfig
+from repro.launch import sharding as shardlib
+from repro.models.registry import get_model
+from repro.train.optimizer import OptConfig
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=ARCH_IDS)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced same-family config (CPU)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    n_layers = cfg.n_layers
+    cfg = dataclasses.replace(
+        cfg, remat_group=shardlib.default_remat_group(n_layers)
+    )
+    api = get_model(cfg)
+
+    n_dev = len(jax.devices())
+    mesh = jax.make_mesh((n_dev,), ("data",)) if n_dev > 1 else None
+    print(f"arch={cfg.name} devices={n_dev} steps={args.steps}")
+
+    data = CorpusConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                        global_batch=args.batch, seed=args.seed)
+    tcfg = TrainerConfig(steps=args.steps, microbatches=args.microbatches,
+                         ckpt_dir=args.ckpt_dir, seed=args.seed)
+    trainer = Trainer(api, data, OptConfig(lr=args.lr, total_steps=args.steps),
+                      tcfg, mesh=mesh)
+    out = trainer.run()
+    for step, loss in out["losses"]:
+        print(f"step {step:5d}  loss {loss:.4f}")
+    print(f"done: {out['steps_done']} steps in {out['wall_time_s']:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,225 @@
+"""Whisper-style encoder-decoder backbone (audio frontend stubbed).
+
+The conv feature extractor is a stub per the assignment:
+``input_specs()`` supplies precomputed frame embeddings
+``(B, encoder_frames, d_model)``.  Encoder: bidirectional self-attn +
+GELU MLP, pre-LayerNorm (Whisper uses LayerNorm with bias, not
+RMSNorm).  Decoder: causal self-attn + cross-attn over encoder memory +
+GELU MLP.  Decode caches both the growing self-attn KV and the static
+cross-attn KV (computed once at prefill).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import (
+    ATTN_CHUNK_THRESHOLD,
+    COMPUTE_DTYPE,
+    shard_batch,
+    attention_cache_specs,
+    attention_specs,
+    cross_attention_train,
+    embed_lookup,
+    embed_spec,
+    layernorm,
+    layernorm_spec,
+    mlp,
+    mlp_specs,
+    mp,
+    softmax_xent,
+    unembed,
+    _gqa_out,
+    _gqa_scores,
+    _qkv,
+)
+from repro.models.param import PSpec, stack
+
+NEG_INF = -1e9
+
+
+def enc_layer_specs(cfg: ModelConfig) -> dict:
+    return {
+        "ln1": layernorm_spec(cfg.d_model),
+        "attn": attention_specs(cfg),
+        "ln2": layernorm_spec(cfg.d_model),
+        "ffn": mlp_specs(cfg),
+    }
+
+
+def dec_layer_specs(cfg: ModelConfig) -> dict:
+    return {
+        "ln1": layernorm_spec(cfg.d_model),
+        "self_attn": attention_specs(cfg),
+        "ln_x": layernorm_spec(cfg.d_model),
+        "cross_attn": attention_specs(cfg),
+        "ln2": layernorm_spec(cfg.d_model),
+        "ffn": mlp_specs(cfg),
+    }
+
+
+def param_specs(cfg: ModelConfig) -> dict:
+    return {
+        "enc_pos": PSpec((cfg.encoder_frames, cfg.d_model), P(None, "model"),
+                         scale=0.02),
+        "enc_layers": stack(cfg.encoder_layers, enc_layer_specs(cfg)),
+        "enc_ln_f": layernorm_spec(cfg.d_model),
+        "embed": embed_spec(cfg.vocab_size, cfg.d_model),
+        "dec_pos": PSpec((cfg.max_position_embeddings, cfg.d_model),
+                         P(None, "model"), scale=0.02),
+        "dec_layers": stack(cfg.n_layers, dec_layer_specs(cfg)),
+        "dec_ln_f": layernorm_spec(cfg.d_model),
+    }
+
+
+def _attn_full(cfg, p, x, *, causal):
+    q, k, v = _qkv(cfg, p, x)
+    scale = 1.0 / jnp.sqrt(cfg.head_dim).astype(jnp.float32)
+    if x.shape[1] > ATTN_CHUNK_THRESHOLD:
+        from repro.models.layers import chunked_attention
+
+        o = chunked_attention(q, k, v, scale, causal=causal, out_dtype=x.dtype)
+        return jnp.einsum("bsh,hd->bsd", o, mp(p["wo"]))
+    scores = _gqa_scores(q, k, scale)
+    if causal:
+        S = x.shape[1]
+        scores = jnp.where(jnp.tril(jnp.ones((S, S), bool)), scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    o = _gqa_out(probs, v, x.dtype)
+    return jnp.einsum("bsh,hd->bsd", o, mp(p["wo"]))
+
+
+def encode(cfg: ModelConfig, params, frames):
+    """frames (B, F, D) bf16 stub embeddings -> encoder memory (B, F, D)."""
+    x = mp(frames) + mp(params["enc_pos"])[None, : frames.shape[1]]
+
+    from repro.models.scan_utils import stacked_scan
+
+    def _layer(lp, x):
+        x = shard_batch(x)
+        x = x + _attn_full(cfg, lp["attn"], layernorm(lp["ln1"], x, cfg.norm_eps),
+                           causal=False)
+        x = x + mlp(cfg, lp["ffn"], layernorm(lp["ln2"], x, cfg.norm_eps))
+        return x, jnp.float32(0.0)
+
+    x, _ = stacked_scan(_layer, x, params["enc_layers"], cfg.remat_group)
+    return layernorm(params["enc_ln_f"], x, cfg.norm_eps)
+
+
+def _dec_layer_train(cfg, lp, x, memory):
+    x = shard_batch(x)
+    x = x + _attn_full(cfg, lp["self_attn"], layernorm(lp["ln1"], x, cfg.norm_eps),
+                       causal=True)
+    x = x + cross_attention_train(
+        cfg, lp["cross_attn"], layernorm(lp["ln_x"], x, cfg.norm_eps), memory
+    )
+    x = x + mlp(cfg, lp["ffn"], layernorm(lp["ln2"], x, cfg.norm_eps))
+    return x
+
+
+def decode_train(cfg: ModelConfig, params, tokens, memory):
+    from repro.models.scan_utils import stacked_scan
+
+    B, S = tokens.shape
+    x = embed_lookup(params["embed"], tokens) + mp(params["dec_pos"])[None, :S]
+
+    def body(lp, x, memory):
+        return _dec_layer_train(cfg, lp, x, memory), jnp.float32(0.0)
+
+    x, _ = stacked_scan(body, x, params["dec_layers"], cfg.remat_group, memory)
+    return layernorm(params["dec_ln_f"], x, cfg.norm_eps)
+
+
+def loss_fn(cfg: ModelConfig, params, batch):
+    memory = encode(cfg, params, batch["frames"])
+    hidden = decode_train(cfg, params, batch["tokens"], memory)
+    logits = shard_batch(unembed(params["embed"], hidden), model_dim=-1)
+    loss = softmax_xent(logits, batch["labels"])
+    return loss, {"xent": loss, "aux": jnp.float32(0.0)}
+
+
+# ---------------------------------------------------------------------------
+# Decode with self-KV + static cross-KV caches
+# ---------------------------------------------------------------------------
+
+
+def cache_specs(cfg: ModelConfig, batch: int, s_max: int) -> dict:
+    self_kv = attention_cache_specs(cfg, batch, s_max)
+    hkv, hd = cfg.n_kv_heads, cfg.head_dim
+    cross = {
+        "k": PSpec((batch, hkv, cfg.encoder_frames, hd),
+                   P("data", "model", None, None), init="zeros", dtype=COMPUTE_DTYPE),
+        "v": PSpec((batch, hkv, cfg.encoder_frames, hd),
+                   P("data", "model", None, None), init="zeros", dtype=COMPUTE_DTYPE),
+    }
+    return {"layers": stack(cfg.n_layers, {"self": self_kv, "cross": cross})}
+
+
+def build_cross_cache(cfg: ModelConfig, params, memory):
+    """Precompute per-layer cross-attention K/V from encoder memory."""
+    B, F, _ = memory.shape
+    hkv, hd = cfg.n_kv_heads, cfg.head_dim
+
+    def per_layer(_, lp):
+        k = jnp.einsum("bfd,dh->bfh", memory, mp(lp["cross_attn"]["wk"]))
+        v = jnp.einsum("bfd,dh->bfh", memory, mp(lp["cross_attn"]["wv"]))
+        if cfg.qkv_bias:
+            k = k + mp(lp["cross_attn"]["bk"])
+            v = v + mp(lp["cross_attn"]["bv"])
+        k = k.reshape(B, F, hkv, hd).transpose(0, 2, 1, 3)
+        v = v.reshape(B, F, hkv, hd).transpose(0, 2, 1, 3)
+        return None, {"k": k.astype(COMPUTE_DTYPE), "v": v.astype(COMPUTE_DTYPE)}
+
+    _, cross = jax.lax.scan(per_layer, None, params["dec_layers"])
+    return cross
+
+
+def _cross_decode(cfg, p, x, cross):
+    B = x.shape[0]
+    h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = jnp.einsum("bsd,dh->bsh", x, mp(p["wq"]))
+    if cfg.qkv_bias:
+        q = q + mp(p["bq"])
+    q = q.reshape(B, 1, h, hd)
+    g = h // hkv
+    qg = q.reshape(B, 1, hkv, g, hd)
+    from repro.models.layers import mixed_einsum
+
+    scores = mixed_einsum(
+        "bskgh,bkth->bkgst", qg.astype(cross["k"].dtype), cross["k"]
+    ) / jnp.sqrt(hd).astype(jnp.float32)
+    probs = jax.nn.softmax(scores, axis=-1)
+    o = mixed_einsum("bkgst,bkth->bskgh", probs.astype(cross["v"].dtype),
+                     cross["v"])
+    o = o.reshape(B, 1, h * hd).astype(x.dtype)
+    return jnp.einsum("bsh,hd->bsd", o, mp(p["wo"]))
+
+
+def decode_step(cfg: ModelConfig, params, cache, batch):
+    """batch: tokens (B,1), pos (B,). Cross K/V already in the cache."""
+    from repro.models.layers import attention_decode
+
+    tokens, pos = batch["tokens"], batch["pos"]
+    x = embed_lookup(params["embed"], tokens)
+    x = x + jax.lax.dynamic_slice_in_dim(mp(params["dec_pos"]), pos[0], 1, 0)[None, 0]
+
+    def scan_body(x, args):
+        lp, lc = args
+        out, new_self = attention_decode(
+            cfg, lp["self_attn"], layernorm(lp["ln1"], x, cfg.norm_eps), lc["self"], pos
+        )
+        x = x + out
+        x = x + _cross_decode(
+            cfg, lp["cross_attn"], layernorm(lp["ln_x"], x, cfg.norm_eps), lc["cross"]
+        )
+        x = x + mlp(cfg, lp["ffn"], layernorm(lp["ln2"], x, cfg.norm_eps))
+        return x, {"self": new_self, "cross": lc["cross"]}
+
+    x, new_caches = jax.lax.scan(scan_body, x, (params["dec_layers"], cache["layers"]))
+    x = layernorm(params["dec_ln_f"], x, cfg.norm_eps)
+    return unembed(params["embed"], x), {"layers": new_caches}

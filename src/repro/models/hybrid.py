@@ -1,0 +1,168 @@
+"""Jamba-style hybrid: Mamba/attention 7:1 interleave + MoE every 2nd FFN.
+
+The stack is heterogeneous, so a plain layer-scan does not apply.
+Instead we scan over *periods*: Jamba's layer pattern has period 8
+(attention at offset 4, the rest Mamba; MoE FFN on odd layers), so a
+32-layer model is a ``lax.scan`` over 4 stacked periods, each period an
+unrolled sequence of 8 sublayers.  Compile time stays O(period), memory
+O(1) in depth.
+
+Decode carries a heterogeneous cache: per period, 7 SSM states + 1 KV
+cache.  For ``long_500k``, only the attention layers hold a 500k cache
+(4 of 32 layers) — sequence-sharded over the ``data`` axis (batch=1
+frees it), the hybrid's structural advantage the assignment calls out.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import moe as moelib
+from repro.models import ssm
+from repro.models.layers import (
+    attention_cache_specs,
+    attention_decode,
+    attention_specs,
+    attention_train,
+    embed_lookup,
+    embed_spec,
+    mlp,
+    mlp_specs,
+    rmsnorm,
+    rmsnorm_spec,
+    shard_batch,
+    softmax_xent,
+    unembed,
+)
+from repro.models.param import PSpec, stack
+
+
+def _is_attn(cfg: ModelConfig, i: int) -> bool:
+    return i % cfg.attn_layer_period == cfg.attn_layer_offset
+
+
+def _is_moe(cfg: ModelConfig, i: int) -> bool:
+    return cfg.n_experts > 0 and i % cfg.expert_layer_period == cfg.expert_layer_offset
+
+
+def _n_periods(cfg: ModelConfig) -> int:
+    per = cfg.period or cfg.attn_layer_period
+    assert cfg.n_layers % per == 0
+    return cfg.n_layers // per
+
+
+def period_specs(cfg: ModelConfig) -> dict:
+    """Specs for one period (unrolled heterogeneous sublayers)."""
+    per = cfg.period or cfg.attn_layer_period
+    layers = {}
+    for i in range(per):
+        layer = {"ln1": rmsnorm_spec(cfg.d_model), "ln2": rmsnorm_spec(cfg.d_model)}
+        layer["mixer"] = attention_specs(cfg) if _is_attn(cfg, i) else ssm.ssm_specs(cfg)
+        layer["ffn"] = moelib.moe_specs(cfg) if _is_moe(cfg, i) else mlp_specs(cfg)
+        layers[f"l{i}"] = layer
+    return layers
+
+
+def param_specs(cfg: ModelConfig) -> dict:
+    return {
+        "embed": embed_spec(cfg.vocab_size, cfg.d_model),
+        "periods": stack(_n_periods(cfg), period_specs(cfg)),
+        "ln_f": rmsnorm_spec(cfg.d_model),
+        "lm_head": embed_spec(cfg.vocab_size, cfg.d_model),
+    }
+
+
+def _period_train(cfg: ModelConfig, p, x, positions):
+    per = cfg.period or cfg.attn_layer_period
+    aux_total = jnp.float32(0.0)
+    x = shard_batch(x)
+
+    def sublayer(i, lp, x):
+        # each heterogeneous sublayer remats independently: the period
+        # backward then holds one sublayer's interior at a time instead
+        # of all eight (a Jamba period at 32k tokens is ~30 GB otherwise)
+        x = shard_batch(x)
+        h = rmsnorm(lp["ln1"], x, cfg.norm_eps)
+        if _is_attn(cfg, i):
+            x = x + attention_train(cfg, lp["mixer"], h, positions)
+        else:
+            x = x + ssm.ssm_forward(cfg, lp["mixer"], h)
+        h = rmsnorm(lp["ln2"], x, cfg.norm_eps)
+        if _is_moe(cfg, i):
+            f, aux = moelib.moe_ffn(cfg, lp["ffn"], h)
+        else:
+            f, aux = mlp(cfg, lp["ffn"], h), jnp.float32(0.0)
+        return x + f, aux
+
+    for i in range(per):
+        body = jax.checkpoint(
+            functools.partial(sublayer, i),
+            policy=jax.checkpoint_policies.nothing_saveable,
+        )
+        x, aux = body(p[f"l{i}"], x)
+        aux_total = aux_total + aux
+    return x, aux_total
+
+
+def forward_train(cfg: ModelConfig, params, tokens):
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    from repro.models.scan_utils import stacked_scan
+
+    x = shard_batch(embed_lookup(params["embed"], tokens))
+    body = functools.partial(_period_train, cfg)
+    # one period (8 heterogeneous sublayers) is already remat-group-sized
+    x, aux = stacked_scan(body, x, params["periods"], 0, positions)
+    return rmsnorm(params["ln_f"], x, cfg.norm_eps), aux
+
+
+def loss_fn(cfg: ModelConfig, params, batch):
+    hidden, aux = forward_train(cfg, params, batch["tokens"])
+    logits = shard_batch(unembed(params["lm_head"], hidden), model_dim=-1)
+    loss = softmax_xent(logits, batch["labels"])
+    return loss + cfg.router_aux_weight * aux, {"xent": loss, "aux": aux}
+
+
+def cache_specs(cfg: ModelConfig, batch: int, s_max: int) -> dict:
+    per = cfg.period or cfg.attn_layer_period
+    entry = {}
+    for i in range(per):
+        if _is_attn(cfg, i):
+            entry[f"l{i}"] = attention_cache_specs(cfg, batch, s_max)
+        else:
+            entry[f"l{i}"] = ssm.ssm_cache_specs(cfg, batch)
+    return {"periods": stack(_n_periods(cfg), entry)}
+
+
+def decode_step(cfg: ModelConfig, params, cache, batch):
+    tokens, pos = batch["tokens"], batch["pos"]
+    per = cfg.period or cfg.attn_layer_period
+    x = embed_lookup(params["embed"], tokens)
+
+    def scan_body(x, args):
+        pp, pc = args
+        new_cache = {}
+        for i in range(per):
+            lp, lc = pp[f"l{i}"], pc[f"l{i}"]
+            h = rmsnorm(lp["ln1"], x, cfg.norm_eps)
+            if _is_attn(cfg, i):
+                out, nc = attention_decode(cfg, lp["mixer"], h, lc, pos)
+            else:
+                out, nc = ssm.ssm_decode(cfg, lp["mixer"], h, lc)
+            x = x + out
+            new_cache[f"l{i}"] = nc
+            h = rmsnorm(lp["ln2"], x, cfg.norm_eps)
+            if _is_moe(cfg, i):
+                f, _ = moelib.moe_ffn(cfg, lp["ffn"], h)
+            else:
+                f = mlp(cfg, lp["ffn"], h)
+            x = x + f
+        return x, new_cache
+
+    x, new_caches = jax.lax.scan(scan_body, x, (params["periods"], cache["periods"]))
+    x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    return unembed(params["lm_head"], x), {"periods": new_caches}

@@ -1,0 +1,112 @@
+"""Mixture-of-Experts FFN: top-k token-choice routing, EP over `model`.
+
+Dispatch is the grouped one-hot einsum formulation (T5X/GSPMD-proven):
+tokens are split into groups of ``group_size``; each group builds a
+``(g, E, C)`` dispatch tensor (bf16) and the expert contraction
+``(g,E,C) x (g,D) -> (E,C,D)`` induces the EP all-to-all when experts
+are sharded.  Capacity ``C = ceil(g·k/E · capacity_factor)``; overflow
+tokens are dropped (their combine weight is 0), standard for
+capacity-based MoE.
+
+Sharding: expert weights ``(E, D, F)`` are ``P('model','data',None)`` —
+experts over the tensor axis (EP), the D dim FSDP-sharded over data and
+gathered just-in-time by GSPMD.
+
+The router aux (load-balance) loss follows Shazeer et al.:
+``E · Σ_e f_e · p_e`` with f the dispatch fraction and p the mean
+router probability.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import mp, shard_spec
+from repro.models.param import PSpec
+
+
+def moe_specs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    f = cfg.moe_d_ff or cfg.d_ff
+    e = cfg.n_experts
+    specs = {
+        "router": PSpec((d, e), P(None, None), scale=0.02),
+        "w_in": PSpec((e, d, 2 * f), P("model", "data", None)),
+        "w_out": PSpec((e, f, d), P("model", None, "data")),
+    }
+    if cfg.n_shared_experts:
+        fs = cfg.shared_d_ff or f * cfg.n_shared_experts
+        specs["shared_w_in"] = PSpec((d, 2 * fs), P("data", "model"))
+        specs["shared_w_out"] = PSpec((fs, d), P("model", "data"))
+    return specs
+
+
+def _capacity(tokens_per_group: int, cfg: ModelConfig, factor: float = 1.25) -> int:
+    k, e = cfg.experts_per_token, cfg.n_experts
+    c = int(tokens_per_group * k * factor / e) + 1
+    return max(c, k)
+
+
+def moe_ffn(cfg: ModelConfig, p, x, *, group_size: int = 512):
+    """x (B, S, D) -> (out (B, S, D), aux_loss scalar)."""
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.experts_per_token
+    T = B * S
+    g = min(group_size, T)
+    G = T // g
+    assert G * g == T, f"tokens {T} not divisible by group {g}"
+    xt = x.reshape(G, g, D)
+
+    logits = jnp.einsum("gtd,de->gte", xt.astype(jnp.float32), p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)  # (G, g, E)
+    gate, idx = jax.lax.top_k(probs, K)  # (G, g, K)
+    if K > 1:
+        gate = gate / jnp.sum(gate, axis=-1, keepdims=True)
+
+    C = _capacity(g, cfg)
+    onehot = jax.nn.one_hot(idx, E, dtype=jnp.float32)  # (G, g, K, E)
+    # position of each (token, choice) within its expert queue
+    prio = onehot.transpose(0, 2, 1, 3).reshape(G, K * g, E)  # choice-major
+    pos = jnp.cumsum(prio, axis=1) - prio  # (G, K*g, E)
+    pos = pos.reshape(G, K, g, E).transpose(0, 2, 1, 3)  # (G, g, K, E)
+    within = jnp.sum(pos * onehot, axis=-1)  # (G, g, K)
+    keep = within < C
+    gate = gate * keep.astype(gate.dtype)
+
+    slot = jax.nn.one_hot(within, C, dtype=jnp.float32)  # (G, g, K, C)
+    # combine (G,g,E,C) = Σ_k gate_k · onehot_k ⊗ slot_k
+    combine = jnp.einsum("gtk,gtke,gtkc->gtec", gate, onehot, slot)
+    # EP pins: token-group dims stay data-sharded, the expert dim lives
+    # on `model`; GSPMD turns the dispatch/combine contractions into the
+    # canonical all-to-alls instead of replicating the (G,g,E,C) tensors.
+    combine = shard_spec(combine, ("dp", None, "model", None))
+    dispatch = (combine > 0.0).astype(mp(x).dtype)
+
+    expert_in = jnp.einsum("gtec,gtd->egcd", dispatch, mp(xt))  # (E,G,C,D)
+    expert_in = shard_spec(expert_in, ("model", "dp", None, None))
+    f = p["w_out"].shape[1]
+    h = jnp.einsum("egcd,edf->egcf", expert_in, mp(p["w_in"]))
+    gate_h, up_h = h[..., :f], h[..., f:]
+    h = jax.nn.silu(gate_h.astype(jnp.float32)).astype(h.dtype) * up_h
+    expert_out = jnp.einsum("egcf,efd->egcd", h, mp(p["w_out"]))
+    expert_out = shard_spec(expert_out, ("model", "dp", None, None))
+    out = jnp.einsum("gtec,egcd->gtd", combine.astype(jnp.float32),
+                     expert_out.astype(jnp.float32))
+    out = out.reshape(B, S, D).astype(x.dtype)
+
+    # load-balance aux loss
+    frac = jnp.mean(onehot.sum(axis=2), axis=1)  # (G, E) dispatch fraction
+    pmean = jnp.mean(probs, axis=1)  # (G, E)
+    aux = E * jnp.mean(jnp.sum(frac * pmean, axis=-1))
+
+    if cfg.n_shared_experts:
+        fs = p["shared_w_out"].shape[0]
+        gu = jnp.einsum("bsd,df->bsf", x, mp(p["shared_w_in"]))
+        sg, su = gu[..., :fs], gu[..., fs:]
+        sh = jax.nn.silu(sg.astype(jnp.float32)).astype(x.dtype) * su
+        out = out + jnp.einsum("bsf,fd->bsd", sh, mp(p["shared_w_out"]))
+
+    return out, aux

@@ -1,0 +1,128 @@
+"""Parameter declaration machinery: shapes + shardings, dry-run friendly.
+
+Models declare their parameters as a pytree of :class:`PSpec` (shape,
+partition spec, init law).  From that single declaration we derive:
+
+* ``init_params``      — materialized f32 arrays (CPU smoke tests),
+* ``abstract_params``  — ``jax.ShapeDtypeStruct`` stand-ins (dry-run:
+  no allocation, exact shapes/shardings for ``.lower()``),
+* ``shardings``        — ``NamedSharding`` pytree for pjit in/out specs,
+* ``param_count``      — exact parameter count for MODEL_FLOPS and the
+  roofline's 6·N·D terms.
+
+Partition specs use *logical* mesh axes ``("data", "model")``; the
+launcher maps them onto the physical mesh (the ``pod`` axis never shards
+parameters — it is pure data parallelism).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class PSpec:
+    """One parameter tensor: shape, sharding, initialization."""
+
+    shape: tuple[int, ...]
+    spec: P = P()
+    init: str = "normal"  # 'normal' | 'zeros' | 'ones' | 'embed' | 'ssm_dt' | 'ssm_a'
+    scale: float | None = None  # None -> 1/sqrt(fan_in)
+    dtype: Any = jnp.float32
+
+    @property
+    def size(self) -> int:
+        return int(np.prod(self.shape)) if self.shape else 1
+
+
+def stack(n: int, tree):
+    """Prepend a stacked-layer axis of size n to every PSpec in a tree."""
+
+    def f(ps: PSpec) -> PSpec:
+        return dataclasses.replace(
+            ps, shape=(n, *ps.shape), spec=P(None, *ps.spec)
+        )
+
+    return jax.tree.map(f, tree, is_leaf=lambda x: isinstance(x, PSpec))
+
+
+def _materialize(ps: PSpec, key) -> jax.Array:
+    if ps.init == "zeros":
+        return jnp.zeros(ps.shape, ps.dtype)
+    if ps.init == "ones":
+        return jnp.ones(ps.shape, ps.dtype)
+    if ps.init == "ssm_a":
+        # mamba A_log init: log(1..N) broadcast over channels
+        n = ps.shape[-1]
+        a = jnp.log(jnp.arange(1, n + 1, dtype=jnp.float32))
+        return jnp.broadcast_to(a, ps.shape).astype(ps.dtype)
+    if ps.init == "ssm_dt":
+        # dt bias ~ softplus^-1 of uniform(1e-3, 1e-1)
+        u = jax.random.uniform(key, ps.shape, minval=1e-3, maxval=1e-1)
+        return jnp.log(jnp.expm1(u)).astype(ps.dtype)
+    fan_in = ps.shape[-2] if len(ps.shape) >= 2 else max(ps.shape[-1], 1)
+    if ps.init == "embed":
+        fan_in = 1.0
+    scale = ps.scale if ps.scale is not None else 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(key, ps.shape, jnp.float32) * scale).astype(ps.dtype)
+
+
+def init_params(tree, seed: int = 0):
+    """Materialize a PSpec tree into arrays (deterministic per path)."""
+    leaves, treedef = jax.tree.flatten(
+        tree, is_leaf=lambda x: isinstance(x, PSpec)
+    )
+    root = jax.random.PRNGKey(seed)
+    keys = jax.random.split(root, max(len(leaves), 1))
+    out = [_materialize(ps, k) for ps, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, out)
+
+
+def abstract_params(tree):
+    """ShapeDtypeStruct stand-ins (no allocation) for .lower()."""
+    return jax.tree.map(
+        lambda ps: jax.ShapeDtypeStruct(ps.shape, ps.dtype),
+        tree,
+        is_leaf=lambda x: isinstance(x, PSpec),
+    )
+
+
+def filter_spec(spec: P, mesh: Mesh) -> P:
+    """Drop mesh axes the physical mesh does not have (e.g. 1-dev CPU)."""
+    names = set(mesh.axis_names)
+
+    def keep(entry):
+        if entry is None:
+            return None
+        if isinstance(entry, (tuple, list)):
+            kept = tuple(e for e in entry if e in names)
+            return kept if kept else None
+        return entry if entry in names else None
+
+    return P(*(keep(e) for e in spec))
+
+
+def shardings(tree, mesh: Mesh):
+    """NamedSharding pytree from the PSpec tree for a concrete mesh."""
+    return jax.tree.map(
+        lambda ps: NamedSharding(mesh, filter_spec(ps.spec, mesh)),
+        tree,
+        is_leaf=lambda x: isinstance(x, PSpec),
+    )
+
+
+def param_count(tree) -> int:
+    leaves = jax.tree.leaves(tree, is_leaf=lambda x: isinstance(x, PSpec))
+    return sum(ps.size for ps in leaves)
+
+
+def spec_tree_map(fn: Callable[[PSpec], Any], tree):
+    return jax.tree.map(fn, tree, is_leaf=lambda x: isinstance(x, PSpec))

@@ -1,0 +1,130 @@
+"""Model registry: one uniform API over all architecture families.
+
+``get_model(cfg)`` returns a :class:`ModelAPI` exposing
+
+  * ``param_specs()``      — PSpec tree (shapes + logical shardings)
+  * ``loss(params, batch)``            — train objective (+ metrics)
+  * ``decode(params, cache, batch)``   — single-token serve step
+  * ``cache_specs(batch, s_max)``      — decode-state PSpec tree
+  * ``input_specs(shape)``  — ShapeDtypeStruct stand-ins per input
+  * ``input_pspecs(shape)`` — logical PartitionSpecs per input
+
+Input stand-ins follow the assignment: modality frontends are stubs —
+``[audio]``/``[vlm]`` entries receive precomputed frame/patch
+embeddings as inputs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import encdec, hybrid, ssm_lm, transformer
+
+
+@dataclasses.dataclass
+class ModelAPI:
+    cfg: ModelConfig
+    param_specs: Callable[[], Any]
+    loss: Callable[[Any, dict], tuple]
+    decode: Callable[[Any, Any, dict], tuple]
+    cache_specs: Callable[[int, int], Any]
+    prefill: Callable[..., tuple] | None = None
+
+    # -- inputs -----------------------------------------------------------
+    def input_specs(self, shape: ShapeConfig) -> dict[str, jax.ShapeDtypeStruct]:
+        cfg = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        i32 = jnp.int32
+        if shape.kind == "decode":
+            specs = {
+                "tokens": jax.ShapeDtypeStruct((B, 1), i32),
+                "pos": jax.ShapeDtypeStruct((B,), i32),
+            }
+            return specs
+        specs = {
+            "tokens": jax.ShapeDtypeStruct((B, S), i32),
+            "labels": jax.ShapeDtypeStruct((B, S), i32),
+        }
+        if cfg.family == "vlm":
+            specs["vision_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.vision_patches, cfg.vision_dim), jnp.bfloat16
+            )
+            specs["vision_pos"] = jax.ShapeDtypeStruct((B, cfg.vision_patches), i32)
+            specs["positions"] = jax.ShapeDtypeStruct((3, B, S), i32)
+        if cfg.family == "encdec":
+            specs["frames"] = jax.ShapeDtypeStruct(
+                (B, cfg.encoder_frames, cfg.d_model), jnp.bfloat16
+            )
+        return specs
+
+    def input_pspecs(self, shape: ShapeConfig) -> dict[str, P]:
+        cfg = self.cfg
+        batch = P("data")
+        if shape.kind == "decode":
+            return {"tokens": P("data", None), "pos": batch}
+        specs = {"tokens": P("data", None), "labels": P("data", None)}
+        if cfg.family == "vlm":
+            specs["vision_embeds"] = P("data", None, None)
+            specs["vision_pos"] = P("data", None)
+            specs["positions"] = P(None, "data", None)
+        if cfg.family == "encdec":
+            specs["frames"] = P("data", None, "model")
+        return specs
+
+    def demo_batch(self, shape: ShapeConfig, seed: int = 0) -> dict[str, np.ndarray]:
+        """Concrete random inputs matching input_specs (smoke tests)."""
+        rng = np.random.default_rng(seed)
+        out = {}
+        for name, sds in self.input_specs(shape).items():
+            if sds.dtype == jnp.int32:
+                if name == "pos":
+                    out[name] = np.zeros(sds.shape, np.int32)
+                elif name == "positions":
+                    S = sds.shape[-1]
+                    out[name] = np.broadcast_to(
+                        np.arange(S, dtype=np.int32), sds.shape
+                    ).copy()
+                elif name == "vision_pos":
+                    out[name] = np.broadcast_to(
+                        np.arange(sds.shape[-1], dtype=np.int32), sds.shape
+                    ).copy()
+                else:
+                    hi = max(self.cfg.vocab_size - 1, 2)
+                    out[name] = rng.integers(1, hi, size=sds.shape, dtype=np.int32)
+            else:
+                out[name] = rng.normal(0, 0.3, size=sds.shape).astype(np.float32)
+        return out
+
+
+def get_model(cfg: ModelConfig) -> ModelAPI:
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        mod = transformer
+    elif fam == "ssm":
+        mod = ssm_lm
+    elif fam == "hybrid":
+        mod = hybrid
+    elif fam == "encdec":
+        mod = encdec
+    else:
+        raise ValueError(f"unknown family {fam!r}")
+
+    return ModelAPI(
+        cfg=cfg,
+        param_specs=lambda: mod.param_specs(cfg),
+        loss=lambda params, batch: mod.loss_fn(cfg, params, batch),
+        decode=lambda params, cache, batch: mod.decode_step(cfg, params, cache, batch),
+        cache_specs=lambda batch, s_max: mod.cache_specs(cfg, batch, s_max),
+        prefill=(
+            (lambda params, tokens, s_max: mod.prefill(cfg, params, tokens, s_max))
+            if hasattr(mod, "prefill")
+            else None
+        ),
+    )

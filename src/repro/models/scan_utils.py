@@ -1,0 +1,80 @@
+"""Two-level layer-scan with grouped activation checkpointing.
+
+``stacked_scan(body, x, stacked_params, group)`` runs ``body(params_i,
+x)`` for each of the L stacked layers:
+
+* ``group <= 1``: one ``lax.scan`` with ``jax.checkpoint`` per layer —
+  the scan saves every layer input (L × (B,S,D) residuals live for the
+  backward pass).
+* ``group g > 1``: params are reshaped to (L/g, g, ...) and an *outer*
+  scan over groups wraps a checkpointed *inner* scan over the g layers.
+  Only L/g group-boundary activations are saved; each group's interior
+  is recomputed during backward.  Memory: L/g + g transient instead of
+  L — minimized at g ≈ √L (the classic O(√L) checkpointing schedule).
+
+``aux`` outputs (e.g. MoE load-balance losses) are summed across layers.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _leading(tree) -> int:
+    return jax.tree.leaves(tree)[0].shape[0]
+
+
+def stacked_scan(body, x, stacked_params, group: int = 0, *args):
+    """body(layer_params, x, *args) -> (x, aux). Returns (x, aux_sum).
+
+    The residual entering each checkpointed region passes through an
+    ``optimization_barrier``: without it XLA folds the backward's first
+    f32 upcast *into the saved activation stack*, storing the boundary
+    residuals twice (bf16 + f32) — 3x the intended remat footprint at
+    32k tokens (observed on qwen2-72b prefill: 35 GiB vs 12 GiB).
+    """
+    L = _leading(stacked_params)
+    g = group if group and group > 1 else 1
+
+    def barriered(lp, xx, *a):
+        xx = jax.lax.optimization_barrier(xx)
+        return body(lp, xx, *a)
+
+    inner_body = jax.checkpoint(
+        barriered, policy=jax.checkpoint_policies.nothing_saveable,
+        prevent_cse=False,  # scan already prevents CSE (jax docs)
+    )
+
+    if g == 1 or L % g != 0:
+
+        def scan_body(carry, lp):
+            x2, aux = inner_body(lp, carry, *args)
+            return x2, aux
+
+        x, auxs = jax.lax.scan(scan_body, x, stacked_params)
+        return x, jnp.sum(auxs)
+
+    regrouped = jax.tree.map(
+        lambda a: a.reshape(L // g, g, *a.shape[1:]), stacked_params
+    )
+
+    def group_body(gp, x, *inner_args):
+        def scan_body(carry, lp):
+            x2, aux = inner_body(lp, carry, *inner_args)
+            return x2, aux
+
+        x, auxs = jax.lax.scan(scan_body, x, gp)
+        return x, jnp.sum(auxs)
+
+    group_body = jax.checkpoint(
+        group_body, policy=jax.checkpoint_policies.nothing_saveable,
+        prevent_cse=False,
+    )
+
+    def outer_body(carry, gp):
+        x2, aux = group_body(gp, carry, *args)
+        return x2, aux
+
+    x, auxs = jax.lax.scan(outer_body, x, regrouped)
+    return x, jnp.sum(auxs)

@@ -1,0 +1,175 @@
+"""Mamba-1 selective SSM block (Falcon-Mamba / Jamba mixer).
+
+Training uses a *chunked associative scan*: the selective recurrence
+
+    h_t = exp(dt_t · A) ⊙ h_{t-1} + (dt_t · x_t) ⊗ B_t
+    y_t = C_t · h_t + D ⊙ x_t
+
+is a first-order linear recurrence, so within a chunk of ``chunk``
+tokens we run ``jax.lax.associative_scan`` (O(log chunk) depth — the
+TPU-native replacement for the CUDA selective-scan kernel), and chunks
+are chained with a ``lax.scan`` carrying the (B, d_inner, N) state.
+This bounds the materialized (chunk, d_inner, N) tensors — the memory
+hot spot the original CUDA kernel fuses away — while keeping MXU-sized
+batched einsums.
+
+Decode carries (conv window, ssm state): O(1) per token, which is what
+makes ``long_500k`` a pure-SSM win.
+
+Sharding: d_inner is the tensor axis (like an FFN hidden dim):
+in_proj P('data','model'), per-channel params P('model', ...),
+out_proj P('model','data').
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import mp, shard_spec
+from repro.models.param import PSpec
+
+
+def ssm_specs(cfg: ModelConfig) -> dict:
+    d, di, n, r, c = (
+        cfg.d_model,
+        cfg.d_inner,
+        cfg.ssm_state,
+        cfg.dt_rank,
+        cfg.ssm_conv,
+    )
+    return {
+        "in_proj": PSpec((d, 2 * di), P("data", "model")),
+        "conv_w": PSpec((di, c), P("model", None), scale=0.5),
+        "conv_b": PSpec((di,), P("model"), init="zeros"),
+        "x_proj": PSpec((di, r + 2 * n), P("model", None)),
+        "dt_proj": PSpec((r, di), P(None, "model")),
+        "dt_bias": PSpec((di,), P("model"), init="ssm_dt"),
+        "A_log": PSpec((di, n), P("model", None), init="ssm_a"),
+        "D": PSpec((di,), P("model"), init="ones"),
+        "out_proj": PSpec((di, d), P("model", "data")),
+    }
+
+
+def _causal_conv(p, x):
+    """Depthwise causal conv along S. x (B, S, Di)."""
+    di, width = p["conv_w"].shape
+    w = mp(p["conv_w"]).T[:, None, :]  # (width, 1, Di) for conv_general
+    out = jax.lax.conv_general_dilated(
+        mp(x),
+        w,
+        window_strides=(1,),
+        padding=[(width - 1, 0)],
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=di,
+    )
+    return out + mp(p["conv_b"])
+
+
+def _ssm_params(cfg: ModelConfig, p, u):
+    """u (B, S, Di) conv output -> dt (B,S,Di), Bm/Cm (B,S,N), A (Di,N)."""
+    n, r = cfg.ssm_state, cfg.dt_rank
+    proj = jnp.einsum("bsd,dk->bsk", u, mp(p["x_proj"]))
+    dt_r, Bm, Cm = proj[..., :r], proj[..., r : r + n], proj[..., r + n :]
+    dt = jnp.einsum("bsr,rd->bsd", dt_r, mp(p["dt_proj"])) + mp(p["dt_bias"])
+    dt = jax.nn.softplus(dt.astype(jnp.float32))  # (B,S,Di) f32
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))  # (Di, N)
+    return dt, Bm.astype(jnp.float32), Cm.astype(jnp.float32), A
+
+
+def _chunk_scan(dt, Bm, Cm, A, u, h0):
+    """Selective scan over one chunk via associative_scan.
+
+    dt (B,S,Di) f32 | Bm,Cm (B,S,N) f32 | A (Di,N) f32 | u (B,S,Di)
+    h0 (B,Di,N) f32 carried state.  Returns (y (B,S,Di) f32, hS).
+    """
+    decay = jnp.exp(dt[..., None] * A)  # (B,S,Di,N)
+    inp = (dt * u.astype(jnp.float32))[..., None] * Bm[:, :, None, :]  # (B,S,Di,N)
+    # fold the carried state into the first step
+    inp = inp.at[:, 0].add(decay[:, 0] * h0)
+
+    def op(a, b):
+        da, xa = a
+        db, xb = b
+        return da * db, db * xa + xb
+
+    _, hs = jax.lax.associative_scan(op, (decay, inp), axis=1)  # (B,S,Di,N)
+    y = jnp.einsum("bsdn,bsn->bsd", hs, Cm)
+    return y, hs[:, -1]
+
+
+def ssm_forward(cfg: ModelConfig, p, x, *, chunk: int = 128):
+    """Full-sequence selective SSM. x (B, S, D) bf16 -> (B, S, D)."""
+    B, S, D = x.shape
+    di = cfg.d_inner
+    xz = jnp.einsum("bsd,de->bse", x, mp(p["in_proj"]))
+    xs, z = xz[..., :di], xz[..., di:]
+    u = _causal_conv(p, xs)
+    u = jax.nn.silu(u.astype(jnp.float32)).astype(x.dtype)
+    # the depthwise conv loses the channel sharding in propagation;
+    # re-pin (B,S,Di) to (dp, None, model) or the f32 dt/u tensors
+    # replicate (1 GB+ per layer at 32k tokens)
+    u = shard_spec(u, ("dp", None, "model"))
+
+    dt, Bm, Cm, A = _ssm_params(cfg, p, u)
+    dt = shard_spec(dt, ("dp", None, "model"))
+
+    c = min(chunk, S)
+    n_chunks = S // c
+    assert n_chunks * c == S, f"seq {S} not divisible by chunk {c}"
+
+    # remat the chunk body: its (B, c, Di, N) decay/state tensors are
+    # recomputed in backward instead of being stacked over all chunks
+    # (which is n_chunks x 1 GB-scale at 32k tokens)
+    chunk_fn = jax.checkpoint(
+        _chunk_scan, policy=jax.checkpoint_policies.nothing_saveable
+    )
+
+    def body(h, args):
+        dtc, Bc, Cc, uc = args
+        y, h2 = chunk_fn(dtc, Bc, Cc, A, uc, h)
+        return h2, y
+
+    reshape = lambda t: t.reshape(B, n_chunks, c, *t.shape[2:]).swapaxes(0, 1)
+    h0 = jnp.zeros((B, di, cfg.ssm_state), jnp.float32)
+    _, ys = jax.lax.scan(body, h0, (reshape(dt), reshape(Bm), reshape(Cm), reshape(u)))
+    y = ys.swapaxes(0, 1).reshape(B, S, di)
+
+    y = y + u.astype(jnp.float32) * p["D"].astype(jnp.float32)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    return jnp.einsum("bsd,de->bse", y.astype(x.dtype), mp(p["out_proj"]))
+
+
+def ssm_cache_specs(cfg: ModelConfig, batch: int) -> dict:
+    di, n, c = cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+    b_ax = "data" if batch > 1 else None
+    return {
+        "conv": PSpec((batch, c - 1, di), P(b_ax, None, "model"), init="zeros",
+                      dtype=jnp.bfloat16),
+        "h": PSpec((batch, di, n), P(b_ax, "model", None), init="zeros",
+                   dtype=jnp.float32),
+    }
+
+
+def ssm_decode(cfg: ModelConfig, p, x, cache):
+    """Single-token step. x (B,1,D); cache {conv (B,c-1,Di), h (B,Di,N)}."""
+    B = x.shape[0]
+    di = cfg.d_inner
+    xz = jnp.einsum("bsd,de->bse", x, mp(p["in_proj"]))
+    xs, z = xz[..., :di], xz[..., di:]  # (B,1,Di)
+
+    window = jnp.concatenate([cache["conv"].astype(xs.dtype), xs], axis=1)  # (B,c,Di)
+    u = jnp.einsum("bcd,dc->bd", window, mp(p["conv_w"])) + mp(p["conv_b"])
+    u = jax.nn.silu(u.astype(jnp.float32)).astype(x.dtype)[:, None, :]  # (B,1,Di)
+
+    dt, Bm, Cm, A = _ssm_params(cfg, p, u)
+    decay = jnp.exp(dt[:, 0, :, None] * A)  # (B,Di,N)
+    inp = (dt[:, 0] * u[:, 0].astype(jnp.float32))[..., None] * Bm[:, 0, None, :]
+    h = decay * cache["h"] + inp
+    y = jnp.einsum("bdn,bn->bd", h, Cm[:, 0])
+    y = y + u[:, 0].astype(jnp.float32) * p["D"].astype(jnp.float32)
+    y = y * jax.nn.silu(z[:, 0].astype(jnp.float32))
+    out = jnp.einsum("bd,de->be", y.astype(x.dtype), mp(p["out_proj"]))[:, None, :]
+    return out, {"conv": window[:, 1:].astype(cache["conv"].dtype), "h": h}

@@ -1,0 +1,112 @@
+"""Pure-SSM language model (Falcon-Mamba-7B family).
+
+Stack: embed -> n_layers x (RMSNorm -> Mamba block -> residual) ->
+RMSNorm -> unembed.  Decode state is O(1) per token (conv window + SSM
+state), which is why the ``long_500k`` cell runs here but is skipped
+for full-attention archs.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import ssm
+from repro.models.layers import (
+    embed_lookup,
+    embed_spec,
+    rmsnorm,
+    rmsnorm_spec,
+    shard_batch,
+    softmax_xent,
+    unembed,
+)
+from repro.models.param import stack
+
+
+def layer_specs(cfg: ModelConfig) -> dict:
+    return {"ln": rmsnorm_spec(cfg.d_model), "mixer": ssm.ssm_specs(cfg)}
+
+
+def param_specs(cfg: ModelConfig) -> dict:
+    specs = {
+        "embed": embed_spec(cfg.vocab_size, cfg.d_model),
+        "layers": stack(cfg.n_layers, layer_specs(cfg)),
+        "ln_f": rmsnorm_spec(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = embed_spec(cfg.vocab_size, cfg.d_model)
+    return specs
+
+
+def _layer_train(cfg: ModelConfig, p, x):
+    x = shard_batch(x)
+    x = x + ssm.ssm_forward(cfg, p["mixer"], rmsnorm(p["ln"], x, cfg.norm_eps))
+    return x, jnp.float32(0.0)
+
+
+def forward_train(cfg: ModelConfig, params, tokens):
+    from repro.models.scan_utils import stacked_scan
+
+    x = shard_batch(embed_lookup(params["embed"], tokens))
+    body = functools.partial(_layer_train, cfg)
+    x, _ = stacked_scan(body, x, params["layers"], cfg.remat_group)
+    return rmsnorm(params["ln_f"], x, cfg.norm_eps)
+
+
+def logits_of(cfg: ModelConfig, params, hidden):
+    table = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    return shard_batch(unembed(table, hidden), model_dim=-1)
+
+
+def loss_fn(cfg: ModelConfig, params, batch):
+    hidden = forward_train(cfg, params, batch["tokens"])
+    logits = logits_of(cfg, params, hidden)
+    loss = softmax_xent(logits, batch["labels"])
+    return loss, {"xent": loss, "aux": jnp.float32(0.0)}
+
+
+def cache_specs(cfg: ModelConfig, batch: int, s_max: int) -> dict:
+    # SSM state does not depend on s_max — O(1) decode memory.
+    return {"layers": stack(cfg.n_layers, ssm.ssm_cache_specs(cfg, batch))}
+
+
+def decode_step(cfg: ModelConfig, params, cache, batch):
+    tokens = batch["tokens"]
+    x = embed_lookup(params["embed"], tokens)
+
+    def scan_body(x, layer):
+        lp, lc = layer
+        out, new_cache = ssm.ssm_decode(
+            cfg, lp["mixer"], rmsnorm(lp["ln"], x, cfg.norm_eps), lc
+        )
+        return x + out, new_cache
+
+    x, new_caches = jax.lax.scan(scan_body, x, (params["layers"], cache["layers"]))
+    x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    return logits_of(cfg, params, x), {"layers": new_caches}
+
+
+def prefill(cfg: ModelConfig, params, tokens, s_max: int):
+    """Sequential prefill via decode steps is O(S); for the serving demo
+    we instead run the train forward for logits and rebuild the state by
+    scanning the last ``conv`` window + a full state recompute.  For
+    simplicity (and because SSM prefill state == decode state), we run
+    chunked decode over the prompt."""
+    B, S = tokens.shape
+    cache = jax.tree.map(
+        lambda ps: jnp.zeros(ps.shape, ps.dtype),
+        cache_specs(cfg, B, s_max),
+        is_leaf=lambda x: hasattr(x, "init"),
+    )
+
+    def step(carry, t):
+        cache = carry
+        logits, cache = decode_step(cfg, params, cache, {"tokens": t[:, None]})
+        return cache, logits[:, 0]
+
+    cache, logits = jax.lax.scan(step, cache, tokens.T)
+    return logits[-1][:, None, :], cache

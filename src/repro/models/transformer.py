@@ -1,0 +1,240 @@
+"""Decoder-only transformer (dense / MoE / MLA) — train, prefill, decode.
+
+The layer stack is a ``lax.scan`` over stacked parameters (compile time
+O(1) in depth) with ``jax.checkpoint`` on the layer body (activation
+remat; the scan stores only layer inputs).  One module serves the
+dense (yi, qwen2, qwen1.5), MLA (minicpm3), MoE (moonshot, llama4) and
+VLM (qwen2-vl, via extra embedding merge + M-RoPE positions) families.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import moe as moelib
+from repro.models.layers import (
+    attention_cache_specs,
+    attention_decode,
+    attention_specs,
+    attention_train,
+    embed_lookup,
+    embed_spec,
+    mla_cache_specs,
+    mla_decode,
+    mla_specs,
+    mlp,
+    mlp_specs,
+    mp,
+    rmsnorm,
+    rmsnorm_spec,
+    shard_batch,
+    softmax_xent,
+    unembed,
+)
+from repro.models.param import PSpec, stack
+
+
+def layer_specs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    specs = {
+        "ln1": rmsnorm_spec(d),
+        "attn": mla_specs(cfg) if cfg.mla else attention_specs(cfg),
+        "ln2": rmsnorm_spec(d),
+    }
+    if cfg.n_experts:
+        specs["ffn"] = moelib.moe_specs(cfg)
+    else:
+        specs["ffn"] = mlp_specs(cfg)
+    return specs
+
+
+def param_specs(cfg: ModelConfig) -> dict:
+    specs = {
+        "embed": embed_spec(cfg.vocab_size, cfg.d_model),
+        "layers": stack(cfg.n_layers, layer_specs(cfg)),
+        "ln_f": rmsnorm_spec(cfg.d_model),
+    }
+    if cfg.vision_dim:
+        specs["vision_proj"] = PSpec((cfg.vision_dim, cfg.d_model), P(None, "model"))
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = embed_spec(cfg.vocab_size, cfg.d_model)
+    return specs
+
+
+def _ffn(cfg: ModelConfig, p, x):
+    if cfg.n_experts:
+        return moelib.moe_ffn(cfg, p, x)
+    return mlp(cfg, p, x), jnp.float32(0.0)
+
+
+def _layer_train(cfg: ModelConfig, p, x, positions):
+    x = shard_batch(x)
+    if cfg.mla:
+        from repro.models.layers import mla_train
+
+        a = mla_train(cfg, p["attn"], rmsnorm(p["ln1"], x, cfg.norm_eps), positions)
+    else:
+        a = attention_train(cfg, p["attn"], rmsnorm(p["ln1"], x, cfg.norm_eps), positions)
+    x = x + a
+    f, aux = _ffn(cfg, p["ffn"], rmsnorm(p["ln2"], x, cfg.norm_eps))
+    return x + f, aux
+
+
+def forward_train(cfg: ModelConfig, params, tokens, positions, extra=None):
+    """Hidden states for a full sequence. Returns (hidden (B,S,D), aux)."""
+    x = embed_lookup(params["embed"], tokens)
+    if extra is not None and cfg.vision_dim:
+        # merge projected vision-patch embeddings at the given positions
+        vis = jnp.einsum("bpv,vd->bpd", mp(extra["vision_embeds"]),
+                         mp(params["vision_proj"]))
+        upd = jax.vmap(lambda xb, pb, vb: xb.at[pb].set(vb))(
+            x, extra["vision_pos"], vis
+        )
+        x = upd
+
+    from repro.models.scan_utils import stacked_scan
+
+    x = shard_batch(x)
+    body = functools.partial(_layer_train, cfg)
+    x, aux = stacked_scan(body, x, params["layers"], cfg.remat_group, positions)
+    x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    return x, aux
+
+
+def logits_of(cfg: ModelConfig, params, hidden):
+    table = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    return shard_batch(unembed(table, hidden), model_dim=-1)
+
+
+def make_positions(cfg: ModelConfig, tokens):
+    B, S = tokens.shape
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    if cfg.mrope:
+        return jnp.broadcast_to(pos, (3, B, S))
+    return pos
+
+
+def loss_fn(cfg: ModelConfig, params, batch):
+    tokens = batch["tokens"]
+    positions = batch.get("positions")
+    if positions is None:
+        positions = make_positions(cfg, tokens)
+    extra = (
+        {k: batch[k] for k in ("vision_embeds", "vision_pos") if k in batch} or None
+    )
+    hidden, aux = forward_train(cfg, params, tokens, positions, extra)
+    logits = logits_of(cfg, params, hidden)
+    loss = softmax_xent(logits, batch["labels"])
+    total = loss + cfg.router_aux_weight * aux
+    return total, {"xent": loss, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# Decode (serve_step) — KV cache over stacked layers
+# ---------------------------------------------------------------------------
+
+
+def cache_specs(cfg: ModelConfig, batch: int, s_max: int) -> dict:
+    per_layer = (
+        mla_cache_specs(cfg, batch, s_max)
+        if cfg.mla
+        else attention_cache_specs(cfg, batch, s_max)
+    )
+    return {"layers": stack(cfg.n_layers, per_layer)}
+
+
+def _layer_decode(cfg: ModelConfig, p, cache, x, pos, positions):
+    if cfg.mla:
+        a, new_cache = mla_decode(
+            cfg, p["attn"], rmsnorm(p["ln1"], x, cfg.norm_eps), cache, pos
+        )
+    else:
+        a, new_cache = attention_decode(
+            cfg, p["attn"], rmsnorm(p["ln1"], x, cfg.norm_eps), cache, pos
+        )
+    x = x + a
+    f, _ = _ffn(cfg, p["ffn"], rmsnorm(p["ln2"], x, cfg.norm_eps))
+    return x + f, new_cache
+
+
+def decode_step(cfg: ModelConfig, params, cache, batch):
+    """One-token decode. batch: tokens (B,1), pos (B,). Returns
+    (logits (B,1,V), new_cache)."""
+    tokens, pos = batch["tokens"], batch["pos"]
+    x = embed_lookup(params["embed"], tokens)
+    if cfg.mrope:
+        positions = jnp.broadcast_to(pos[None, :, None], (3, pos.shape[0], 1))
+    else:
+        positions = pos[:, None]
+
+    def scan_body(x, layer):
+        lp, lc = layer
+        x = shard_batch(x)
+        x, new_cache = _layer_decode(cfg, lp, lc, x, pos, positions)
+        return x, new_cache
+
+    x, new_caches = jax.lax.scan(scan_body, x, (params["layers"], cache["layers"]))
+    x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    return logits_of(cfg, params, x), {"layers": new_caches}
+
+
+def prefill(cfg: ModelConfig, params, tokens, s_max: int):
+    """Run the prompt through the stack, returning (logits, cache).
+
+    Full-sequence attention with per-layer K/V collected into the cache
+    (MLA: compressed latents).  Used by the serving engine.
+    """
+    B, S = tokens.shape
+    positions = make_positions(cfg, tokens)
+    x = embed_lookup(params["embed"], tokens)
+
+    def scan_body(x, lp):
+        normed = rmsnorm(lp["ln1"], x, cfg.norm_eps)
+        if cfg.mla:
+            from repro.models.layers import mla_train
+
+            kr = cfg.kv_lora_rank
+            kv = jnp.einsum("bsd,dr->bsr", normed, mp(lp["attn"]["kv_down"]))
+            c_kv = rmsnorm(lp["attn"]["kv_norm"], kv[..., :kr], cfg.norm_eps)
+            from repro.models.layers import rope as rope_fn
+
+            k_rope = rope_fn(
+                kv[..., kr:][:, :, None, :], positions, cfg.rope_theta
+            )[:, :, 0, :]
+            entry = {
+                "c_kv": jnp.pad(c_kv, ((0, 0), (0, s_max - S), (0, 0))).astype(
+                    jnp.bfloat16
+                ),
+                "k_rope": jnp.pad(k_rope, ((0, 0), (0, s_max - S), (0, 0))).astype(
+                    jnp.bfloat16
+                ),
+            }
+            a = mla_train(cfg, lp["attn"], normed, positions)
+        else:
+            from repro.models.layers import _apply_rope, _qkv
+
+            q, k, v = _qkv(cfg, lp["attn"], normed)
+            if not cfg.mla:
+                q2, k2 = _apply_rope(cfg, q, k, positions)
+            entry = {
+                "k": jnp.pad(
+                    k2.transpose(0, 2, 1, 3), ((0, 0), (0, 0), (0, s_max - S), (0, 0))
+                ).astype(jnp.bfloat16),
+                "v": jnp.pad(
+                    v.transpose(0, 2, 1, 3), ((0, 0), (0, 0), (0, s_max - S), (0, 0))
+                ).astype(jnp.bfloat16),
+            }
+            a = attention_train(cfg, lp["attn"], normed, positions)
+        x = x + a
+        f, _ = _ffn(cfg, lp["ffn"], rmsnorm(lp["ln2"], x, cfg.norm_eps))
+        return x + f, entry
+
+    x, caches = jax.lax.scan(scan_body, x, params["layers"])
+    x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    logits = logits_of(cfg, params, x[:, -1:, :])
+    return logits, {"layers": caches}

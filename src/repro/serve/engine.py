@@ -1,0 +1,69 @@
+"""Batched serving engine: prefill + greedy decode over a KV cache.
+
+A deliberately small but real engine: fixed decode batch, a request
+queue filled into free slots after each generation completes (static-
+shape continuous batching), greedy sampling.  The decode step is the
+same jitted ``serve_step`` the dry-run lowers at scale.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.param import init_params
+from repro.models.registry import ModelAPI
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: np.ndarray  # (S,) int32
+    max_new: int = 16
+    out: list[int] = dataclasses.field(default_factory=list)
+
+
+class Engine:
+    def __init__(self, api: ModelAPI, params, batch: int, s_max: int):
+        assert api.prefill is not None, f"{api.cfg.family} has no prefill"
+        self.api = api
+        self.params = params
+        self.batch = batch
+        self.s_max = s_max
+        self._decode = jax.jit(api.decode)
+        self._prefill = jax.jit(
+            lambda p, t: api.prefill(p, t, s_max), static_argnums=()
+        )
+
+    def generate(self, prompts: list[np.ndarray], max_new: int = 16) -> list[list[int]]:
+        """Serve a list of equal-length prompts in batches."""
+        outs: list[list[int]] = []
+        for lo in range(0, len(prompts), self.batch):
+            group = prompts[lo : lo + self.batch]
+            pad = self.batch - len(group)
+            toks = np.stack(list(group) + [group[-1]] * pad)
+            outs.extend(self._generate_batch(toks, max_new)[: len(group)])
+        return outs
+
+    def _generate_batch(self, tokens: np.ndarray, max_new: int) -> list[list[int]]:
+        B, S = tokens.shape
+        logits, cache = self._prefill(self.params, jnp.asarray(tokens))
+        seqs: list[list[int]] = [[] for _ in range(B)]
+        cur = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        for t in range(max_new):
+            for b in range(B):
+                seqs[b].append(int(cur[b]))
+            batch = {
+                "tokens": cur[:, None],
+                "pos": jnp.full((B,), S + t, jnp.int32),
+            }
+            logits, cache = self._decode(self.params, cache, batch)
+            cur = jnp.argmax(logits[:, 0, :], axis=-1).astype(jnp.int32)
+        return seqs
+
+
+def demo_engine(api: ModelAPI, batch: int = 2, s_max: int = 64, seed: int = 0):
+    params = init_params(api.param_specs(), seed=seed)
+    return Engine(api, params, batch, s_max)

@@ -1,0 +1,155 @@
+"""Train-step factory: microbatched grad accumulation, remat, sharding,
+optional cross-pod compressed gradient exchange.
+
+The produced step is a pure jittable function
+``(params, opt_state, batch) -> (params, opt_state, metrics)`` suitable
+for ``jax.jit(..., in_shardings=..., out_shardings=...)`` and for
+``.lower().compile()`` in the multi-pod dry-run.
+
+Microbatching splits the per-step batch into ``microbatches`` chunks
+accumulated with a ``lax.scan``.  The split happens **on the host**
+(:func:`split_microbatches`): every batch leaf arrives with a leading
+``(n_mb, B/n_mb, ...)`` axis and the scan consumes it directly.  An
+in-graph ``reshape`` of a batch-sharded tensor would force GSPMD to
+reshard (the microbatch groups interleave across devices); pre-split
+input keeps every microbatch an evenly-sharded ``B/n_mb`` batch and the
+step free of layout churn.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.registry import ModelAPI
+from repro.train import compress as complib
+from repro.train.optimizer import OptConfig, adamw_update
+
+
+def _batch_dim(x) -> int:
+    """The global-batch dim of a batch leaf (positions are (3, B, S))."""
+    return 1 if (x.ndim >= 2 and x.shape[0] == 3) else 0
+
+
+def split_microbatches(batch: dict, n: int) -> dict:
+    """Host-side (B, ...) -> (n, B/n, ...) split, microbatch axis leading."""
+    if n <= 1:
+        return batch
+
+    def f(x):
+        x = np.asarray(x)
+        d = _batch_dim(x)
+        B = x.shape[d]
+        assert B % n == 0, f"batch {B} not divisible by microbatches {n}"
+        y = x.reshape(*x.shape[:d], n, B // n, *x.shape[d + 1 :])
+        return np.moveaxis(y, d, 0)
+
+    return jax.tree.map(f, batch)
+
+
+def microbatched_specs(batch_specs: dict, pspecs: dict, n: int):
+    """Abstract (ShapeDtypeStruct, PartitionSpec) trees for a pre-split batch.
+
+    Used by the dry-run: shape (B, ...) -> (n, B/n, ...) with the batch
+    sharding entries shifted right by the new leading (unsharded) axis.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    if n <= 1:
+        return batch_specs, pspecs
+    out_s, out_p = {}, {}
+    for name, sds in batch_specs.items():
+        d = _batch_dim(sds)
+        shape = list(sds.shape)
+        assert shape[d] % n == 0
+        shape[d] //= n
+        out_s[name] = jax.ShapeDtypeStruct((n, *shape), sds.dtype)
+        out_p[name] = P(None, *pspecs[name])
+    return out_s, out_p
+
+
+def make_train_step(
+    api: ModelAPI,
+    opt_cfg: OptConfig,
+    *,
+    microbatches: int = 1,
+    compress_pods: bool = False,
+    mesh=None,
+):
+    """Build the jittable train step for this model.
+
+    With ``microbatches > 1`` the batch must be pre-split on the host
+    (see :func:`split_microbatches`): every leaf has a leading
+    microbatch axis that the grad-accumulation scan consumes.
+    """
+
+    def loss_fn(params, mb):
+        loss, metrics = api.loss(params, mb)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def compute_grads(params, batch):
+        if microbatches == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+            return loss, metrics, grads
+
+        def body(acc, mb):
+            (loss, metrics), grads = grad_fn(params, mb)
+            acc = jax.tree.map(
+                lambda a, g: a + g.astype(jnp.float32) / microbatches, acc, grads
+            )
+            return acc, (loss, metrics)
+
+        zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        grads, (losses, metricses) = jax.lax.scan(body, zero, batch)
+        loss = jnp.mean(losses)
+        metrics = jax.tree.map(jnp.mean, metricses)
+        return loss, metrics, grads
+
+    if not compress_pods:
+
+        def train_step(params, opt_state, batch):
+            loss, metrics, grads = compute_grads(params, batch)
+            params, opt_state, opt_metrics = adamw_update(
+                opt_cfg, params, grads, opt_state
+            )
+            return params, opt_state, {"loss": loss, **metrics, **opt_metrics}
+
+        return train_step
+
+    # ---- compressed cross-pod DP: shard_map manual over 'pod' ------------
+    assert mesh is not None and "pod" in mesh.axis_names
+    from jax.sharding import PartitionSpec as P
+
+    def _pod_spec(v):
+        # batch leaves: pod shards the batch dim; a leading microbatch
+        # axis (and the (3, B, S) positions layout) shift it right.
+        d = _batch_dim(v) + (1 if microbatches > 1 else 0)
+        entries = [None] * v.ndim
+        entries[d] = "pod"
+        return P(*entries)
+
+    def pod_body(params, opt_state, err, batch):
+        # per-pod gradient (batch is this pod's shard; inner axes auto)
+        loss, metrics, grads = compute_grads(params, batch)
+        grads, err = complib.tree_compressed_psum(grads, "pod", err)
+        params, opt_state, opt_metrics = adamw_update(opt_cfg, params, grads, opt_state)
+        loss = jax.lax.pmean(loss, "pod")
+        metrics = jax.tree.map(lambda x: jax.lax.pmean(x, "pod"), metrics)
+        return params, opt_state, err, {"loss": loss, **metrics, **opt_metrics}
+
+    def train_step(params, opt_state, err, batch):
+        batch_specs = {k: _pod_spec(v) for k, v in batch.items()}
+        fn = jax.shard_map(
+            pod_body,
+            mesh=mesh,
+            in_specs=(P(), P(), P(), batch_specs),
+            out_specs=(P(), P(), P(), P()),
+            check_vma=False,
+            axis_names=frozenset({"pod"}),
+        )
+        return fn(params, opt_state, err, batch)
+
+    return train_step

@@ -1,0 +1,70 @@
+"""Shared fixtures. Tests run on ONE CPU device (the dry-run is the only
+place that forces 512 placeholder devices, in its own process)."""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core import fig1
+from repro.core.mln import MLNMatcher, PAPER_LEARNED, PEDAGOGICAL
+from repro.data.synthetic import SynthConfig, make_dataset
+
+
+@pytest.fixture(scope="session")
+def fig1_packed():
+    return fig1.packed_cover()
+
+
+@pytest.fixture(scope="session")
+def mln_pedagogical():
+    return MLNMatcher(PEDAGOGICAL)
+
+
+@pytest.fixture(scope="session")
+def mln_paper():
+    return MLNMatcher(PAPER_LEARNED)
+
+
+@pytest.fixture(scope="session")
+def hepth_small():
+    """A small HEPTH-like synthetic dataset (abbreviated names, clashes)."""
+    return make_dataset(SynthConfig.hepth(scale=0.035, seed=7))
+
+
+@pytest.fixture(scope="session")
+def dblp_small():
+    """A small DBLP-like synthetic dataset (full names + typo noise)."""
+    return make_dataset(SynthConfig.dblp(scale=0.035, seed=11))
+
+
+def random_neighborhood_batch(rng: np.random.Generator, B: int = 2, k: int = 6):
+    """Random padded NeighborhoodBatch for property tests."""
+    from repro.core import pairs as pairlib
+    from repro.core.types import NeighborhoodBatch
+
+    P = pairlib.num_pairs(k)
+    n_live = rng.integers(2, k + 1, size=B)
+    ids = np.full((B, k), -1, dtype=np.int64)
+    for b in range(B):
+        ids[b, : n_live[b]] = rng.choice(100, size=n_live[b], replace=False)
+    emask = ids >= 0
+    co = rng.random((B, k, k)) < 0.35
+    co = np.triu(co, 1)
+    co = co | co.transpose(0, 2, 1)
+    co &= emask[:, :, None] & emask[:, None, :]
+    ii, jj = pairlib.triu_indices(k)
+    pmask = emask[:, ii] & emask[:, jj]
+    lev = rng.integers(0, 4, size=(B, P)).astype(np.int8)
+    lev = np.where(pmask, lev, 0).astype(np.int8)
+    gid = np.where(
+        pmask,
+        pairlib.make_gid(
+            np.minimum(ids[:, ii], ids[:, jj]), np.maximum(ids[:, ii], ids[:, jj])
+        ),
+        -1,
+    )
+    return NeighborhoodBatch(
+        entity_ids=ids, entity_mask=emask, coauthor=co,
+        sim_level=lev, pair_gid=gid, pair_mask=pmask & (lev > 0),
+    )

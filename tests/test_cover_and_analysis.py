@@ -1,0 +1,130 @@
+"""Covering (§4) properties + the loop-aware HLO analyzer."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import pipeline
+from repro.core.cover import build_cover, is_total, pack_cover
+from repro.core.metrics import true_pair_gids
+from repro.data.synthetic import SynthConfig, make_dataset
+from repro.launch import hlo_analysis as ha
+
+
+# ---------------------------------------------------------------------------
+# Covering
+# ---------------------------------------------------------------------------
+
+
+def test_cover_covers_all_entities(hepth_small):
+    cover = build_cover(hepth_small.entities, hepth_small.relations)
+    covered = set()
+    for members in cover.full:
+        covered.update(int(m) for m in members)
+    assert covered == set(range(len(hepth_small.entities)))
+
+
+def test_cover_total_wrt_relations(hepth_small):
+    packed, gg, _ = pipeline.prepare(hepth_small.entities, hepth_small.relations)
+    assert is_total(packed.cover, hepth_small.relations, gg.gids)
+
+
+def test_blocking_recall(hepth_small):
+    """Most ground-truth pairs are candidates in some neighborhood —
+    the canopy blocking-recall property the paper inherits from [13]."""
+    packed, gg, _ = pipeline.prepare(hepth_small.entities, hepth_small.relations)
+    truth = hepth_small.entities.truth
+    tp = true_pair_gids(truth)
+    candidates = set(int(g) for g in gg.gids)
+    hit = sum(1 for g in tp if int(g) in candidates)
+    assert hit / max(len(tp), 1) > 0.8, (hit, len(tp))
+
+
+def test_neighborhood_size_bounded(hepth_small):
+    packed, _, _ = pipeline.prepare(
+        hepth_small.entities, hepth_small.relations, k_max=32
+    )
+    for k, nb in packed.bins.items():
+        assert nb.entity_mask.sum(axis=1).max() <= k <= 64
+
+
+# ---------------------------------------------------------------------------
+# HLO analysis
+# ---------------------------------------------------------------------------
+
+
+def test_scan_flops_multiplied_by_trip_count():
+    def f(x, ws):
+        def body(c, w):
+            return jnp.dot(c, w), None
+        y, _ = jax.lax.scan(body, x, ws)
+        return y.sum()
+
+    n = 7
+    c = jax.jit(f).lower(
+        jax.ShapeDtypeStruct((64, 64), jnp.float32),
+        jax.ShapeDtypeStruct((n, 64, 64), jnp.float32),
+    ).compile()
+    got = ha.analyze(c.as_text(), n_devices=1)["flops"]
+    want = 2 * 64 * 64 * 64 * n
+    assert want <= got <= want * 1.2, (got, want)
+    # the built-in counter misses the loop (regression guard for WHY
+    # we parse the HLO ourselves)
+    builtin = c.cost_analysis().get("flops", 0.0)
+    assert builtin < want
+
+
+def test_nested_scan_flops():
+    def f(x, ws):
+        def outer(c, wpair):
+            def inner(ci, w):
+                return jnp.dot(ci, w), None
+            c2, _ = jax.lax.scan(inner, c, wpair)
+            return c2, None
+        y, _ = jax.lax.scan(outer, x, ws)
+        return y.sum()
+
+    c = jax.jit(f).lower(
+        jax.ShapeDtypeStruct((32, 32), jnp.float32),
+        jax.ShapeDtypeStruct((3, 2, 32, 32), jnp.float32),
+    ).compile()
+    got = ha.analyze(c.as_text(), n_devices=1)["flops"]
+    want = 2 * 32**3 * 6
+    assert want <= got <= want * 1.5, (got, want)
+
+
+def test_type_parsing():
+    assert ha.type_elems_bytes("f32[4,8]{1,0}") == (32, 128)
+    assert ha.type_elems_bytes("bf16[10]") == (10, 20)
+    e, b = ha.type_elems_bytes("(f32[2,2]{1,0}, pred[], s32[3]{0})")
+    assert e == 4 + 1 + 3 and b == 16 + 1 + 12
+
+
+def test_instr_parse_tuple_with_index_comments():
+    line = ("  %w = (s32[], f32[4,4]{1,0}, /*index=5*/bf16[2]{0}) "
+            "while(%t), condition=%c, body=%b, backend_config={\"known_trip_count\":{\"n\":\"9\"}}")
+    ins = ha._parse_instr(line)
+    assert ins.opcode == "while"
+    assert ins.result_bytes == 4 + 64 + 4
+    assert "known_trip_count" in ins.rest
+
+
+@given(st.integers(2, 6), st.integers(1, 5))
+@settings(max_examples=8, deadline=None)
+def test_em_round_spmd_single_shard(k, seed):
+    """The SPMD round function on a 1-device mesh reproduces the plain
+    batched matcher (shard_map path correctness)."""
+    from repro.core.mln import MLNMatcher, PAPER_LEARNED
+    from repro.core.parallel import make_em_mesh, run_parallel
+    from repro.core.driver import run_smp
+    from tests.conftest import random_neighborhood_batch
+
+    ds = make_dataset(SynthConfig.hepth(scale=0.01, seed=seed))
+    packed, gg, _ = pipeline.prepare(ds.entities, ds.relations, k_max=8 * k)
+    m = MLNMatcher(PAPER_LEARNED)
+    seq = run_smp(packed, m)
+    par = run_parallel(packed, m, gg, scheme="smp", mesh=make_em_mesh(1))
+    assert seq.matches.as_set() == par.matches.as_set()

@@ -1,0 +1,121 @@
+"""End-to-end EM on synthetic bibliographic data (paper §6 protocol).
+
+HEPTH-like (abbreviated names, collisions) and DBLP-like (full names +
+typos) datasets; canopy total cover; NO-MP / SMP / MMP with the
+Appendix-B MLN and the RULES matcher.  Checks the paper's qualitative
+claims: soundness vs UB, recall ordering NO-MP <= SMP <= MMP, high
+precision, near-1 completeness of MMP vs UB.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core import metrics as metricslib
+from repro.core import pipeline
+from repro.core.cover import is_total
+from repro.core.mln import MLNMatcher, PAPER_LEARNED
+from repro.core.rules import RulesMatcher
+
+
+@pytest.fixture(scope="module")
+def prepared(hepth_small):
+    packed, gg, t = pipeline.prepare(hepth_small.entities, hepth_small.relations)
+    return packed, gg
+
+
+@pytest.fixture(scope="module")
+def results(hepth_small, prepared):
+    packed, gg = prepared
+    out = {}
+    for scheme in ("nomp", "smp", "mmp"):
+        out[scheme] = pipeline.resolve(
+            hepth_small.entities, hepth_small.relations,
+            scheme=scheme, packed=packed, gg=gg,
+        )
+    return out
+
+
+def test_cover_is_total(hepth_small, prepared):
+    packed, gg = prepared
+    assert is_total(packed.cover, hepth_small.relations, gg.gids)
+
+
+def test_recall_ordering(hepth_small, results):
+    truth = hepth_small.entities.truth
+    rec = {
+        s: pipeline.evaluate(results[s], truth).recall for s in results
+    }
+    assert rec["nomp"] <= rec["smp"] + 1e-9
+    assert rec["smp"] <= rec["mmp"] + 1e-9
+    assert rec["mmp"] > 0.5, rec
+
+
+def test_precision_high(hepth_small, results):
+    truth = hepth_small.entities.truth
+    for s in results:
+        prf = pipeline.evaluate(results[s], truth)
+        assert prf.precision > 0.9, (s, prf)
+
+
+def test_soundness_vs_ub(hepth_small, results):
+    """UB (§6.1) upper-bounds the full-run matches; soundness of every
+    message-passing scheme implies its matches are inside UB."""
+    truth = hepth_small.entities.truth
+    ub = pipeline.upper_bound(results["mmp"], truth)
+    for s in results:
+        snd = metricslib.soundness(results[s].result.matches, ub)
+        assert snd >= 0.99, (s, snd)
+
+
+def test_mmp_completeness_near_one(hepth_small, results):
+    """Paper finds completeness ~1 for MMP (Fig. 3c)."""
+    truth = hepth_small.entities.truth
+    ub = pipeline.upper_bound(results["mmp"], truth)
+    comp = metricslib.completeness(results["mmp"].result.matches, ub)
+    assert comp >= 0.9, comp
+
+
+def test_rules_matcher_e2e(dblp_small):
+    res = pipeline.resolve(
+        dblp_small.entities, dblp_small.relations,
+        scheme="smp", matcher=RulesMatcher(),
+    )
+    prf = pipeline.evaluate(res, dblp_small.entities.truth)
+    assert prf.precision > 0.9 and prf.recall > 0.4, prf
+
+
+def test_linear_scaling_in_neighborhoods(hepth_small, prepared):
+    """Theorem 3: evals grow linearly (bounded re-activations)."""
+    packed, gg = prepared
+    m = MLNMatcher(PAPER_LEARNED)
+    from repro.core.driver import run_smp
+
+    res = run_smp(packed, m)
+    assert res.neighborhood_evals <= 4 * packed.num_neighborhoods
+
+
+def test_dedup_pipeline(dblp_small):
+    """The EM technique as the LM-corpus dedup stage (DESIGN §4)."""
+    from repro.data.dedup import dedup_documents
+
+    rng = np.random.default_rng(0)
+    base = [rng.integers(0, 1000, size=200) for _ in range(12)]
+    docs = []
+    source = []
+    for i, d in enumerate(base):
+        docs.append(d)
+        source.append(i % 4)  # crawl-source relation (the Coauthor analogue)
+        if i % 3 == 0:  # near-duplicate: small mutation
+            d2 = d.copy()
+            d2[::17] += 1
+            docs.append(d2)
+            source.append(i % 4)
+    report = dedup_documents(docs, source_of=np.asarray(source))
+    # the engineered near-duplicates form multi-document clusters and
+    # one representative per cluster is kept
+    multi = [c for c in report.clusters if len(c) >= 2]
+    assert len(multi) >= 3, report
+    assert report.n_removed >= 3
+    assert report.keep_mask.sum() == len(docs) - report.n_removed

@@ -1,0 +1,102 @@
+"""Replay of the paper's running example (Figures 1-2, §2.1-§2.2).
+
+The pedagogical MLN (R1 = -5, R2 = +8) on the C1/C2/C3 cover must
+reproduce the paper's narrative exactly:
+
+* NO-MP finds only (c1, c2)                                    [§2.2]
+* SMP additionally recovers (b1, b2) via a simple message      [§2.2]
+* MMP completes the {(a1,a2), (b2,b3), (c2,c3)} chain via
+  maximal messages                                             [§5.2]
+* the full-instance run equals the MMP output (completeness)
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core import fig1
+from repro.core.driver import run_mmp, run_nomp, run_smp
+from repro.core.global_grounding import build_global_grounding
+from repro.core.mln import MLNMatcher, PEDAGOGICAL
+from repro.core.types import MatchStore
+
+
+@pytest.fixture(scope="module")
+def gg():
+    packed = fig1.packed_cover()
+    return build_global_grounding(packed.pair_levels, fig1.relations(), PEDAGOGICAL)
+
+
+def test_nomp_matches_paper(fig1_packed, mln_pedagogical):
+    res = run_nomp(fig1_packed, mln_pedagogical)
+    assert fig1.names_of(res.matches) == fig1.EXPECTED_NOMP
+
+
+def test_smp_matches_paper(fig1_packed, mln_pedagogical):
+    res = run_smp(fig1_packed, mln_pedagogical)
+    assert fig1.names_of(res.matches) == fig1.EXPECTED_SMP
+
+
+def test_mmp_matches_paper(fig1_packed, mln_pedagogical, gg):
+    res = run_mmp(fig1_packed, mln_pedagogical, gg)
+    assert fig1.names_of(res.matches) == fig1.EXPECTED_MMP
+
+
+def test_full_instance_run(mln_pedagogical):
+    """One neighborhood containing everything = the 'run EM on all of E'
+    reference.  The purely-collective chain activates (§2.1 arithmetic:
+    3 x (-5) + 2 x 8 = +1 > 0)."""
+    batch = fig1.full_batch()
+    x = mln_pedagogical.run(batch)
+    got = fig1.names_of(MatchStore(batch.pair_gid[x & (batch.pair_gid >= 0)]))
+    assert got == fig1.EXPECTED_FULL
+
+
+def test_mmp_complete_on_fig1(fig1_packed, mln_pedagogical, gg):
+    """MMP == full run here: completeness 1 on the paper's example."""
+    res = run_mmp(fig1_packed, mln_pedagogical, gg)
+    assert fig1.names_of(res.matches) == fig1.EXPECTED_FULL
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_consistency_order_invariance(fig1_packed, mln_pedagogical, gg, seed):
+    """Theorem 2/4 (consistency): any neighborhood order, same fixpoint."""
+    rng = np.random.default_rng(seed)
+    order = list(rng.permutation(fig1_packed.num_neighborhoods))
+    smp = run_smp(fig1_packed, mln_pedagogical, order=order)
+    assert fig1.names_of(smp.matches) == fig1.EXPECTED_SMP
+    mmp = run_mmp(fig1_packed, mln_pedagogical, gg, order=order)
+    assert fig1.names_of(mmp.matches) == fig1.EXPECTED_MMP
+
+
+def test_smp_soundness_on_fig1(fig1_packed, mln_pedagogical):
+    """Theorem 2 (soundness): SMP output subset of full-run output."""
+    res = run_smp(fig1_packed, mln_pedagogical)
+    assert fig1.names_of(res.matches) <= fig1.EXPECTED_FULL
+
+
+def test_score_arithmetic_of_section_2_1(mln_pedagogical):
+    """The -5/+8 arithmetic: {c1,c2} scores +3; the 3-chain adds +1."""
+    batch = fig1.full_batch()
+    B, P = batch.sim_level.shape
+    x0 = np.zeros((B, P), dtype=bool)
+    s_empty = mln_pedagogical.score(batch, x0)
+
+    def with_pairs(pairs):
+        x = x0.copy()
+        for a, b in pairs:
+            g = fig1.gid_of(a, b)
+            slot = np.where(batch.pair_gid[0] == g)[0]
+            assert len(slot) == 1
+            x[0, slot[0]] = True
+        return x
+
+    s_c = mln_pedagogical.score(batch, with_pairs([("c1", "c2")]))
+    assert np.isclose(s_c[0] - s_empty[0], 3.0, atol=1e-4)  # -5 + 8
+
+    chain = [("a1", "a2"), ("b2", "b3"), ("c2", "c3")]
+    base = [("c1", "c2"), ("b1", "b2")]
+    s_base = mln_pedagogical.score(batch, with_pairs(base))
+    s_all = mln_pedagogical.score(batch, with_pairs(base + chain))
+    assert np.isclose(s_all[0] - s_base[0], 1.0, atol=1e-4)  # -15 + 16

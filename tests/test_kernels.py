@@ -1,0 +1,137 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode on CPU).
+
+Every kernel is swept over shapes (aligned + deliberately unaligned,
+forcing the padding path) and dtypes, asserting allclose against its
+``ref.py`` oracle.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.common import assert_allclose
+
+jax.config.update("jax_enable_x64", False)
+
+SHAPES_PP = [(8, 8), (16, 16), (128, 128), (96, 96), (130, 130), (33, 33)]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+def _rand(rng, shape, dtype):
+    return jnp.asarray(rng.standard_normal(shape), dtype=dtype)
+
+
+# ---------------------------------------------------------------------------
+# icm_sweep: delta = u + X @ C
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("P", [p for p, _ in SHAPES_PP])
+@pytest.mark.parametrize("S", [1, 8, 96])
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_icm_sweep_matrix(P, S, dtype):
+    from repro.kernels.icm_sweep import kernel, ref
+
+    rng = np.random.default_rng(P * 1000 + S)
+    u = _rand(rng, (P,), jnp.float32)
+    C = np.abs(rng.standard_normal((P, P))).astype(np.float32)
+    C = jnp.asarray(np.triu(C, 1) + np.triu(C, 1).T)
+    X = (rng.random((S, P)) < 0.3).astype(np.float32)
+    X = jnp.asarray(X, dtype=dtype)
+    got = kernel.sweep_matrix(u, C, X, interpret=True)
+    want = ref.sweep_matrix(u, C, X)
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    assert_allclose(got, want, rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("P", [8, 128, 57])
+def test_icm_sweep_vector(P):
+    from repro.kernels.icm_sweep import kernel, ref
+
+    rng = np.random.default_rng(P)
+    u = _rand(rng, (P,), jnp.float32)
+    C = jnp.asarray(np.abs(rng.standard_normal((P, P))).astype(np.float32))
+    x = jnp.asarray((rng.random((P,)) < 0.5).astype(np.float32))
+    assert_allclose(
+        kernel.sweep(u, C, x, interpret=True), ref.sweep(u, C, x), rtol=1e-5
+    )
+
+
+# ---------------------------------------------------------------------------
+# mln_score: f(X_s) = u . x_s + 1/2 x_s C x_s  batched over candidate sets
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("B,S,P", [(1, 1, 8), (2, 4, 16), (3, 5, 96), (2, 2, 130)])
+@pytest.mark.parametrize("dtype", [jnp.float32])
+def test_mln_score_sets(B, S, P, dtype):
+    from repro.kernels.mln_score import kernel, ref
+
+    rng = np.random.default_rng(B * 100 + S * 10 + P)
+    u = jnp.asarray(rng.standard_normal((B, P)).astype(np.float32))
+    C = np.abs(rng.standard_normal((B, P, P))).astype(np.float32)
+    C = jnp.asarray(np.triu(C, 1) + np.transpose(np.triu(C, 1), (0, 2, 1)))
+    X = jnp.asarray((rng.random((B, S, P)) < 0.4).astype(dtype))
+    got = kernel.score_sets(u, C, X, interpret=True)
+    want = ref.score_sets(u, C, X)
+    assert_allclose(got, want, rtol=2e-5, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# ngram_sim: thresholded cosine similarity A @ B^T
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("M,N,F", [(8, 8, 32), (128, 64, 128), (100, 70, 96)])
+@pytest.mark.parametrize("threshold", [0.0, 0.7])
+def test_ngram_sim(M, N, F, threshold):
+    from repro.kernels.ngram_sim import kernel, ref
+
+    rng = np.random.default_rng(M + N + F)
+    A = rng.standard_normal((M, F)).astype(np.float32)
+    B = rng.standard_normal((N, F)).astype(np.float32)
+    A /= np.linalg.norm(A, axis=1, keepdims=True)
+    B /= np.linalg.norm(B, axis=1, keepdims=True)
+    got = kernel.sim_above(jnp.asarray(A), jnp.asarray(B), threshold, interpret=True)
+    want = ref.sim_above(jnp.asarray(A), jnp.asarray(B), threshold)
+    assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# flash_attn: online-softmax attention vs the naive oracle
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("S,H,hkv,hd", [(128, 4, 2, 32), (256, 2, 2, 64), (192, 4, 1, 32)])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attn(S, H, hkv, hd, causal):
+    from repro.kernels.flash_attn import kernel, ref
+
+    rng = np.random.default_rng(S + H)
+    B = 2
+    q = jnp.asarray(rng.standard_normal((B, S, H, hd)).astype(np.float32))
+    k = jnp.asarray(rng.standard_normal((B, S, hkv, hd)).astype(np.float32))
+    v = jnp.asarray(rng.standard_normal((B, S, hkv, hd)).astype(np.float32))
+    scale = 1.0 / np.sqrt(hd)
+    got = kernel.flash_attention(q, k, v, scale, causal=causal, interpret=True)
+    want = ref.attention(q, k, v, scale, causal=causal)
+    assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+
+def test_flash_attn_matches_chunked_xla():
+    """The Pallas kernel, the XLA chunked path and the naive path agree."""
+    from repro.kernels.flash_attn import kernel
+    from repro.models import layers
+
+    rng = np.random.default_rng(0)
+    B, S, H, hkv, hd = 2, 256, 4, 2, 32
+    q = jnp.asarray(rng.standard_normal((B, S, H, hd)).astype(np.float32))
+    k = jnp.asarray(rng.standard_normal((B, S, hkv, hd)).astype(np.float32))
+    v = jnp.asarray(rng.standard_normal((B, S, hkv, hd)).astype(np.float32))
+    scale = 1.0 / np.sqrt(hd)
+    xla = layers.chunked_attention(q, k, v, scale, causal=True, q_block=64)
+    pallas = kernel.flash_attention(q, k, v, scale, causal=True, interpret=True)
+    assert_allclose(pallas.reshape(xla.shape), xla, rtol=2e-3, atol=2e-3)

@@ -1,0 +1,170 @@
+"""Property-based tests (hypothesis) for the paper's §3 axioms.
+
+The MLN matcher must be *well-behaved* (Def. 4 = idempotent Def. 2 +
+monotone Def. 3) and supermodular (Def. 6); RULES must be monotone
+Type-I.  These are the exact hypotheses of Theorems 1/2/4 — if they
+hold, soundness/consistency of SMP/MMP follow.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import matcher as axioms
+from repro.core.mln import MLNMatcher, MLNWeights, PAPER_LEARNED, PEDAGOGICAL
+from repro.core.rules import RulesMatcher
+from tests.conftest import random_neighborhood_batch
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+matchers = {
+    "mln_paper": MLNMatcher(PAPER_LEARNED),
+    "mln_pedagogical": MLNMatcher(PEDAGOGICAL),
+    "mln_greedy": MLNMatcher(PAPER_LEARNED, collective=False),
+    "rules": RulesMatcher(),
+}
+
+
+def _batch(seed: int, B: int = 2, k: int = 6):
+    return random_neighborhood_batch(np.random.default_rng(seed), B=B, k=k)
+
+
+def _random_masks(rng, shape, p=0.25):
+    return rng.random(shape) < p
+
+
+@pytest.mark.parametrize("name", list(matchers))
+@given(seed=st.integers(0, 10**6))
+@settings(**SETTINGS)
+def test_idempotence(name, seed):
+    """Def. 2: E(E, E(E, V+), V-) == E(E, V+, V-)."""
+    m = matchers[name]
+    rng = np.random.default_rng(seed)
+    batch = _batch(seed)
+    ev = _random_masks(rng, batch.sim_level.shape) & np.asarray(batch.pair_mask)
+    ok, detail = axioms.check_idempotence(m, batch, ev_pos=ev)
+    assert ok, detail
+
+
+@pytest.mark.parametrize("name", list(matchers))
+@given(seed=st.integers(0, 10**6))
+@settings(**SETTINGS)
+def test_monotone_positive_evidence(name, seed):
+    """Def. 3(ii): growing V+ grows the output."""
+    m = matchers[name]
+    rng = np.random.default_rng(seed)
+    batch = _batch(seed)
+    small = _random_masks(rng, batch.sim_level.shape, 0.15) & np.asarray(batch.pair_mask)
+    big = (small | _random_masks(rng, batch.sim_level.shape, 0.15)) & np.asarray(
+        batch.pair_mask
+    )
+    ok, detail = axioms.check_monotone_evidence(m, batch, small, big)
+    assert ok, detail
+
+
+@pytest.mark.parametrize("name", list(matchers))
+@given(seed=st.integers(0, 10**6))
+@settings(**SETTINGS)
+def test_monotone_negative_evidence(name, seed):
+    """Def. 3(iii): growing V- shrinks the output."""
+    m = matchers[name]
+    rng = np.random.default_rng(seed)
+    batch = _batch(seed)
+    small = _random_masks(rng, batch.sim_level.shape, 0.15)
+    big = small | _random_masks(rng, batch.sim_level.shape, 0.15)
+    ok, detail = axioms.check_monotone_negative(m, batch, small, big)
+    assert ok, detail
+
+
+@given(seed=st.integers(0, 10**6))
+@settings(**SETTINGS)
+def test_supermodularity_mln(seed):
+    """Def. 6: delta(p | T) >= delta(p | S) for S subset T (log space)."""
+    m = matchers["mln_paper"]
+    rng = np.random.default_rng(seed)
+    batch = _batch(seed)
+    B, P = batch.sim_level.shape
+    s = _random_masks(rng, (B, P), 0.2)
+    t = s | _random_masks(rng, (B, P), 0.3)
+    p_idx = rng.integers(0, P, size=B)
+    # Def. 6 is the standard supermodular inequality, i.e. for p not
+    # already in T (else P(T u p)/P(T) = 1 trivially breaks it).
+    s[np.arange(B), p_idx] = False
+    t[np.arange(B), p_idx] = False
+    ok, detail = axioms.check_supermodular(m, batch, s, t, p_idx)
+    assert ok, detail
+
+
+@given(seed=st.integers(0, 10**6))
+@settings(**SETTINGS)
+def test_monotone_entities_mln(seed):
+    """Def. 3(i): adding entities (a bigger neighborhood) grows matches."""
+    rng = np.random.default_rng(seed)
+    m = matchers["mln_paper"]
+    big = _batch(seed, B=1, k=8)
+    # drop the last live entity -> sub-neighborhood
+    ids = big.entity_ids.copy()
+    live = np.where(ids[0] >= 0)[0]
+    drop = live[-1]
+    import dataclasses as dc
+
+    from repro.core import pairs as pairlib
+
+    k = big.k
+    emask = big.entity_mask.copy()
+    emask[0, drop] = False
+    ids[0, drop] = -1
+    co = big.coauthor.copy()
+    co[0, drop, :] = False
+    co[0, :, drop] = False
+    ii, jj = pairlib.triu_indices(k)
+    pmask = emask[0, ii] & emask[0, jj]
+    lev = np.where(pmask, big.sim_level[0], 0).astype(np.int8)[None]
+    gid = np.where(pmask, big.pair_gid[0], -1)[None]
+    small = dc.replace(
+        big, entity_ids=ids, entity_mask=emask, coauthor=co,
+        sim_level=lev, pair_gid=gid, pair_mask=pmask[None] & (lev > 0),
+    )
+    ok, detail = axioms.check_monotone_entities(m, small, big, None)
+    assert ok, detail
+
+
+@given(seed=st.integers(0, 10**6))
+@settings(max_examples=15, deadline=None)
+def test_maximal_messages_are_maximal(seed):
+    """Def. 8 on random instances: every emitted component is all-or-
+    nothing under the matcher when given any one member as evidence."""
+    m = matchers["mln_paper"]
+    batch = _batch(seed, B=1, k=6)
+    x, lab = m.run_with_messages(batch)
+    P = lab.shape[1]
+    valid = np.asarray(batch.pair_mask[0])
+    for l in set(lab[0][lab[0] < P].tolist()):
+        members = np.where((lab[0] == l) & valid & ~x[0])[0]
+        if len(members) < 2:
+            continue
+        # evidence = one member -> all members must activate
+        ev = np.zeros((1, P), dtype=bool)
+        ev[0, members[0]] = True
+        x2 = m.run(batch, ev)
+        assert x2[0][members].all(), (members, x2[0])
+
+
+def test_paper_learned_weights_are_appendix_b():
+    """Faithfulness pin: Appendix B weights -2.28/-3.84/12.75, +2.46."""
+    w = PAPER_LEARNED
+    assert w.w_sim == (0.0, -2.28, -3.84, 12.75)
+    assert w.w_co == 2.46
+
+
+@given(seed=st.integers(0, 10**6))
+@settings(max_examples=10, deadline=None)
+def test_greedy_subset_of_collective(seed):
+    """The iterative (closure-only) matcher under-matches the purely-
+    collective one — the App. D iterative-vs-collective gap."""
+    batch = _batch(seed, B=2, k=6)
+    greedy = matchers["mln_greedy"].run(batch)
+    coll = matchers["mln_paper"].run(batch)
+    assert np.all(coll | ~greedy)

@@ -1,0 +1,182 @@
+"""Per-architecture smoke tests (assignment requirement).
+
+Each of the 10 assigned architectures instantiates a REDUCED config of
+the same family and runs one forward/train step on CPU, asserting
+output shapes and the absence of NaNs; decode paths run one cached
+serve step; prefill==forward consistency is checked for the dense
+family.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ARCH_IDS, ShapeConfig, get_config, smoke_config
+from repro.models.param import init_params, param_count
+from repro.models.registry import get_model
+
+SMOKE_SHAPE = ShapeConfig("smoke", seq_len=32, global_batch=4, kind="train")
+
+
+@pytest.fixture(scope="module")
+def smoke_models():
+    cache = {}
+
+    def get(arch):
+        if arch not in cache:
+            cfg = smoke_config(arch)
+            api = get_model(cfg)
+            params = init_params(api.param_specs(), seed=0)
+            cache[arch] = (cfg, api, params)
+        return cache[arch]
+
+    return get
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_train_step_shapes_and_finite(arch, smoke_models):
+    cfg, api, params = smoke_models(arch)
+    batch = api.demo_batch(SMOKE_SHAPE)
+    loss, metrics = jax.jit(api.loss)(params, batch)
+    assert np.isfinite(float(loss)), f"{arch}: loss {loss}"
+    assert float(loss) > 0
+    for k, v in metrics.items():
+        assert np.all(np.isfinite(np.asarray(v))), f"{arch}: metric {k}"
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_decode_step(arch, smoke_models):
+    cfg, api, params = smoke_models(arch)
+    B, s_max = 2, 16
+    cache = init_params(api.cache_specs(B, s_max), seed=1)
+    batch = {
+        "tokens": jnp.ones((B, 1), jnp.int32),
+        "pos": jnp.zeros((B,), jnp.int32),
+    }
+    logits, new_cache = jax.jit(api.decode)(params, cache, batch)
+    assert logits.shape == (B, 1, cfg.vocab_size)
+    assert np.all(np.isfinite(np.asarray(logits, dtype=np.float32)))
+    # cache tree structure is preserved
+    assert jax.tree.structure(cache) == jax.tree.structure(new_cache)
+
+
+@pytest.mark.parametrize("arch", ["yi_6b", "qwen1_5_0_5b", "minicpm3_4b", "falcon_mamba_7b"])
+def test_prefill_decode_consistency(arch, smoke_models):
+    """Greedy continuation via prefill+decode == teacher-forced forward."""
+    cfg, api, params = smoke_models(arch)
+    if api.prefill is None:
+        pytest.skip("no prefill")
+    B, S, s_max = 2, 8, 16
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(rng.integers(1, cfg.vocab_size - 1, (B, S)), jnp.int32)
+    logits_p, cache = jax.jit(lambda p, t: api.prefill(p, t, s_max))(params, toks)
+
+    batch = {"tokens": np.asarray(toks), "labels": np.asarray(toks)}
+    if cfg.family == "vlm":
+        pytest.skip("vlm needs vision inputs")
+    # teacher-forced logits at the last position from the train path
+    from repro.models import registry  # noqa: F401
+
+    if cfg.family == "ssm":
+        from repro.models import ssm_lm as mod
+
+        hidden = mod.forward_train(cfg, params, toks)
+        logits_t = mod.logits_of(cfg, params, hidden)
+    else:
+        from repro.models import transformer as mod
+
+        hidden, _ = mod.forward_train(cfg, params, toks, mod.make_positions(cfg, toks))
+        logits_t = mod.logits_of(cfg, params, hidden)
+    np.testing.assert_allclose(
+        np.asarray(logits_p[:, -1], np.float32),
+        np.asarray(logits_t[:, -1], np.float32),
+        rtol=2e-2, atol=2e-2,
+    )
+    # one decode step at position S matches the next teacher-forced pos
+    nxt = jnp.argmax(logits_p[:, -1, :], axis=-1).astype(jnp.int32)
+    logits_d, _ = jax.jit(api.decode)(
+        params, cache, {"tokens": nxt[:, None], "pos": jnp.full((B,), S, jnp.int32)}
+    )
+    toks2 = jnp.concatenate([toks, nxt[:, None]], axis=1)
+    if cfg.family == "ssm":
+        hidden2 = mod.forward_train(cfg, params, toks2)
+    else:
+        hidden2, _ = mod.forward_train(
+            cfg, params, toks2, mod.make_positions(cfg, toks2)
+        )
+    logits_t2 = mod.logits_of(cfg, params, hidden2)
+    np.testing.assert_allclose(
+        np.asarray(logits_d[:, 0], np.float32),
+        np.asarray(logits_t2[:, -1], np.float32),
+        rtol=5e-2, atol=5e-2,
+    )
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_full_config_matches_assignment(arch):
+    """The FULL configs pin the assigned literature hyperparameters."""
+    cfg = get_config(arch)
+    expected = {
+        "moonshot_v1_16b_a3b": (48, 2048, 16, 16, 1408, 163840),
+        "llama4_scout_17b_a16e": (48, 5120, 40, 8, 8192, 202048),
+        "qwen2_vl_7b": (28, 3584, 28, 4, 18944, 152064),
+        "falcon_mamba_7b": (64, 4096, 0, 0, 0, 65024),
+        "jamba_v0_1_52b": (32, 4096, 32, 8, 14336, 65536),
+        "whisper_medium": (24, 1024, 16, 16, 4096, 51865),
+        "yi_6b": (32, 4096, 32, 4, 11008, 64000),
+        "qwen2_72b": (80, 8192, 64, 8, 29568, 152064),
+        "minicpm3_4b": (62, 2560, 40, 40, 6400, 73448),
+        "qwen1_5_0_5b": (24, 1024, 16, 16, 2816, 151936),
+    }[arch]
+    got = (cfg.n_layers, cfg.d_model,
+           cfg.n_heads if cfg.family != "ssm" else 0,
+           cfg.n_kv_heads if cfg.family != "ssm" else 0,
+           cfg.d_ff if cfg.family != "ssm" else 0,
+           cfg.vocab_size)
+    assert got == expected, f"{arch}: {got} != {expected}"
+
+
+def test_moe_expert_counts():
+    assert get_config("moonshot_v1_16b_a3b").n_experts == 64
+    assert get_config("moonshot_v1_16b_a3b").experts_per_token == 6
+    assert get_config("llama4_scout_17b_a16e").n_experts == 16
+    assert get_config("llama4_scout_17b_a16e").experts_per_token == 1
+    assert get_config("jamba_v0_1_52b").n_experts == 16
+    assert get_config("jamba_v0_1_52b").experts_per_token == 2
+
+
+def test_param_counts_plausible():
+    """Full configs land near their nameplate sizes."""
+    for arch, lo, hi in [
+        ("qwen1_5_0_5b", 0.3e9, 0.8e9),
+        ("yi_6b", 5e9, 7e9),
+        ("falcon_mamba_7b", 6e9, 8.5e9),
+        ("qwen2_72b", 65e9, 80e9),
+        ("minicpm3_4b", 3e9, 5e9),
+        # assignment pins 48L x 64 experts x d_ff 1408 => ~28B total (3B-active
+        # class); the hf nameplate "16B" reflects a shallower public config
+        ("moonshot_v1_16b_a3b", 24e9, 32e9),
+        ("jamba_v0_1_52b", 45e9, 60e9),
+    ]:
+        api = get_model(get_config(arch))
+        n = param_count(api.param_specs())
+        assert lo <= n <= hi, f"{arch}: {n/1e9:.2f}B not in [{lo/1e9}, {hi/1e9}]"
+
+
+def test_chunked_attention_equals_fused_path(smoke_models):
+    """The >threshold chunked path is numerically the fused path."""
+    from repro.models import layers
+
+    rng = np.random.default_rng(0)
+    B, S, H, hkv, hd = 2, 128, 4, 2, 16
+    q = jnp.asarray(rng.standard_normal((B, S, H, hd)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, S, hkv, hd)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, S, hkv, hd)), jnp.float32)
+    o1 = layers.chunked_attention(q, k, v, 0.25, causal=True, q_block=32)
+    s = layers._gqa_scores(q, k, 0.25)
+    s = jnp.where(jnp.tril(jnp.ones((S, S), bool)), s, layers.NEG_INF)
+    o2 = layers._gqa_out(jax.nn.softmax(s, -1), v, jnp.float32)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), rtol=1e-5, atol=1e-5)

@@ -1,0 +1,94 @@
+"""Round-parallel SPMD message passing == sequential drivers (Thm 2/4
+consistency), plus an 8-shard subprocess run proving the multi-device
+path (this process holds exactly one CPU device).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.core import fig1, pipeline
+from repro.core.driver import run_mmp, run_smp
+from repro.core.global_grounding import build_global_grounding
+from repro.core.mln import MLNMatcher, PAPER_LEARNED, PEDAGOGICAL
+from repro.core.parallel import run_parallel
+from repro.core.rules import RulesMatcher
+
+
+def test_parallel_smp_equals_sequential_fig1(fig1_packed, mln_pedagogical):
+    seq = run_smp(fig1_packed, mln_pedagogical)
+    par = run_parallel(fig1_packed, mln_pedagogical, scheme="smp")
+    assert seq.matches.as_set() == par.matches.as_set()
+
+
+def test_parallel_mmp_equals_sequential_fig1(fig1_packed, mln_pedagogical):
+    gg = build_global_grounding(
+        fig1_packed.pair_levels, fig1.relations(), PEDAGOGICAL
+    )
+    seq = run_mmp(fig1_packed, mln_pedagogical, gg)
+    par = run_parallel(fig1_packed, mln_pedagogical, gg, scheme="mmp")
+    assert seq.matches.as_set() == par.matches.as_set()
+    assert fig1.names_of(par.matches) == fig1.EXPECTED_MMP
+
+
+def test_parallel_equals_sequential_synthetic(hepth_small):
+    packed, gg, _ = pipeline.prepare(hepth_small.entities, hepth_small.relations)
+    m = MLNMatcher(PAPER_LEARNED)
+    seq = run_smp(packed, m)
+    par = run_parallel(packed, m, gg, scheme="smp")
+    assert seq.matches.as_set() == par.matches.as_set()
+
+
+def test_parallel_rules(hepth_small):
+    packed, gg, _ = pipeline.prepare(hepth_small.entities, hepth_small.relations)
+    m = RulesMatcher()
+    seq = run_smp(packed, m)
+    par = run_parallel(packed, m, scheme="smp")
+    assert seq.matches.as_set() == par.matches.as_set()
+
+
+@pytest.mark.slow
+def test_parallel_8_shards_subprocess():
+    """The paper's §6.3 grid experiment in miniature: 8 SPMD shards
+    reach the same fixpoint as 1 (device count is locked at jax init,
+    hence the subprocess)."""
+    code = textwrap.dedent(
+        """
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import json
+        import numpy as np
+        from repro.core import fig1, pipeline
+        from repro.core.mln import MLNMatcher, PAPER_LEARNED
+        from repro.core.parallel import run_parallel
+        from repro.data.synthetic import SynthConfig, make_dataset
+
+        ds = make_dataset(SynthConfig.hepth(scale=0.02, seed=3))
+        packed, gg, _ = pipeline.prepare(ds.entities, ds.relations)
+        m = MLNMatcher(PAPER_LEARNED)
+        par = run_parallel(packed, m, gg, scheme="mmp")
+        print(json.dumps(sorted(int(g) for g in par.matches.gids)))
+        """
+    )
+    env = dict(os.environ, PYTHONPATH="src")
+    out = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True, env=env,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        timeout=600,
+    )
+    assert out.returncode == 0, out.stderr[-2000:]
+    got = set(json.loads(out.stdout.strip().splitlines()[-1]))
+
+    from repro.data.synthetic import SynthConfig, make_dataset
+
+    ds = make_dataset(SynthConfig.hepth(scale=0.02, seed=3))
+    packed, gg, _ = pipeline.prepare(ds.entities, ds.relations)
+    seq = run_mmp(packed, MLNMatcher(PAPER_LEARNED), gg)
+    assert got == seq.matches.as_set()

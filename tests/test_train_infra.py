@@ -1,0 +1,163 @@
+"""Training-infrastructure tests: checkpoint/restart determinism,
+preemption, elastic restore, gradient compression, launch heuristics.
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.configs.base import smoke_config
+from repro.data.corpus import CorpusConfig
+from repro.launch.sharding import default_remat_group, pick_microbatches
+from repro.models.registry import get_model
+from repro.train.optimizer import OptConfig
+from repro.train.train_step import split_microbatches
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def _mk_trainer(tmp, steps, ckpt_every=4, microbatches=1):
+    cfg = smoke_config("qwen1_5_0_5b")
+    api = get_model(cfg)
+    data = CorpusConfig(vocab_size=cfg.vocab_size, seq_len=16, global_batch=4, seed=0)
+    tcfg = TrainerConfig(
+        steps=steps, ckpt_every=ckpt_every, log_every=2,
+        microbatches=microbatches, ckpt_dir=tmp, async_ckpt=False,
+    )
+    return Trainer(api, data, OptConfig(lr=1e-3, warmup_steps=2), tcfg)
+
+
+def test_train_loss_decreases(tmp_path):
+    t = _mk_trainer(str(tmp_path / "a"), steps=12)
+    out = t.run()
+    losses = [l for _, l in out["losses"]]
+    assert losses[-1] < losses[0], losses
+
+
+def test_checkpoint_restart_bitwise(tmp_path):
+    """Crash at step 8, restart, finish: bitwise == uninterrupted run."""
+    d1, d2 = str(tmp_path / "x"), str(tmp_path / "y")
+    full = _mk_trainer(d1, steps=10).run()
+
+    t = _mk_trainer(d2, steps=8)
+    t.run()
+    resumed = _mk_trainer(d2, steps=10).run()
+
+    f1 = jax.tree.leaves(full["params"])
+    f2 = jax.tree.leaves(resumed["params"])
+    for a, b in zip(f1, f2):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_preemption_checkpoints_and_stops(tmp_path):
+    t = _mk_trainer(str(tmp_path / "p"), steps=100, ckpt_every=1000)
+    t.preempted = True
+    t.run()
+    ck = Checkpointer(str(tmp_path / "p"))
+    assert ck.latest_step() is not None  # the preemption save happened
+
+
+def test_checkpointer_keep_gc(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=2, async_save=False)
+    state = {"w": np.arange(8, dtype=np.float32)}
+    for s in (1, 2, 3, 4):
+        ck.save(s, state)
+    assert ck.all_steps() == [3, 4]
+    got = ck.restore(4, {"w": np.zeros(8, dtype=np.float32)})
+    np.testing.assert_array_equal(got["w"], state["w"])
+
+
+def test_checkpoint_atomicity(tmp_path):
+    """A torn write (missing manifest) is never listed as restorable."""
+    ck = Checkpointer(str(tmp_path), async_save=False)
+    ck.save(1, {"w": np.ones(4, np.float32)})
+    step_dir = os.path.join(str(tmp_path), "step_00000002")
+    os.makedirs(step_dir)  # fake partial checkpoint, no manifest
+    np.save(os.path.join(step_dir, "w.npy"), np.zeros(4))
+    assert ck.all_steps() == [1]
+
+
+def test_elastic_restore_under_new_mesh(tmp_path):
+    """Restore re-places arrays under whatever mesh exists now — the
+    elastic-rescale path (save on N devices, restore on M)."""
+    ck = Checkpointer(str(tmp_path), async_save=False)
+    w = np.arange(64, dtype=np.float32).reshape(8, 8)
+    ck.save(3, {"w": w})
+    mesh = jax.make_mesh((1,), ("data",))
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    got = ck.restore(
+        3, {"w": np.zeros((8, 8), np.float32)},
+        shardings={"w": NamedSharding(mesh, P("data", None))},
+    )
+    np.testing.assert_array_equal(np.asarray(got["w"]), w)
+
+
+def test_compressed_psum_error_feedback():
+    """int8 compression with error feedback: quantize+dequantize error
+    is carried, so the running sum stays unbiased."""
+    from repro.train.compress import quantize
+
+    rng = np.random.default_rng(0)
+    g = jnp.asarray(rng.standard_normal((128,)).astype(np.float32))
+    q, scale = quantize(g, None)
+    deq = q.astype(jnp.float32) * scale
+    rel = float(jnp.linalg.norm(deq - g) / jnp.linalg.norm(g))
+    assert rel < 0.02, rel
+
+
+def test_split_microbatches_layout():
+    batch = {
+        "tokens": np.arange(8 * 4).reshape(8, 4),
+        "positions": np.arange(3 * 8 * 4).reshape(3, 8, 4),
+    }
+    out = split_microbatches(batch, 2)
+    assert out["tokens"].shape == (2, 4, 4)
+    assert out["positions"].shape == (2, 3, 4, 4)
+    np.testing.assert_array_equal(out["tokens"][0], batch["tokens"][:4])
+    np.testing.assert_array_equal(out["positions"][1], batch["positions"][:, 4:])
+
+
+def test_launch_heuristics():
+    assert pick_microbatches(256, 16, 4096) == 8      # 8k tokens/dev/mb
+    assert pick_microbatches(32, 16, 32768) == 2
+    assert pick_microbatches(128, 32, 32768) == 4
+    assert pick_microbatches(4, 16, 128) == 1
+    assert default_remat_group(80) == 8
+    assert default_remat_group(24) == 4
+    assert default_remat_group(62) == 2
+    assert default_remat_group(28) == 4
+
+
+def test_microbatched_train_matches_single(tmp_path):
+    """Grad accumulation over 2 microbatches == one full batch step
+    (up to accumulation-order float error)."""
+    cfg = smoke_config("qwen1_5_0_5b")
+    api = get_model(cfg)
+    from repro.models.param import init_params
+    from repro.train.optimizer import init_opt_state
+    from repro.train.train_step import make_train_step
+
+    params = init_params(api.param_specs(), seed=0)
+    opt = init_opt_state(params)
+    batch = api.demo_batch(
+        __import__("repro.configs.base", fromlist=["ShapeConfig"]).ShapeConfig(
+            "t", 16, 4, "train"
+        )
+    )
+    s1 = jax.jit(make_train_step(api, OptConfig(lr=1e-3)))
+    s2 = jax.jit(make_train_step(api, OptConfig(lr=1e-3), microbatches=2))
+    p1, _, m1 = s1(params, opt, batch)
+    p2, _, m2 = s2(params, opt, split_microbatches(batch, 2))
+    l1 = jax.tree.leaves(p1)
+    l2 = jax.tree.leaves(p2)
+    for a, b in zip(l1, l2):
+        np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b, np.float32),
+            rtol=2e-3, atol=2e-4,
+        )
