@@ -15,6 +15,7 @@ MODULES = [
     ("fig3_scaling", "Fig 3(f): time vs #neighborhoods"),
     ("table1_parallel", "Table 1: parallel rounds / grid speedup"),
     ("fig4_rules", "Fig 4: RULES matcher"),
+    ("stream_throughput", "Streaming ingest: entities/sec vs micro-batch size"),
     ("kernels_bench", "Pallas-kernel roofline microbench"),
 ]
 

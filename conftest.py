@@ -9,3 +9,9 @@ _ROOT = os.path.dirname(os.path.abspath(__file__))
 for p in (_ROOT, os.path.join(_ROOT, "src")):
     if p not in sys.path:
         sys.path.insert(0, p)
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "slow: long-running tests (subprocess multi-shard runs etc.)"
+    )

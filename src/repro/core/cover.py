@@ -120,7 +120,35 @@ def build_cover(
             [simlib.block_key(n) for n in entities.names], dim=feature_dim
         )
     canopies = build_canopies(entities.features, t_loose, t_tight)
+    return assemble_cover(
+        canopies,
+        entities,
+        relations,
+        k_max=k_max,
+        boundary_relation=boundary_relation,
+    )
 
+
+def assemble_cover(
+    canopies: list[np.ndarray],
+    entities: EntityTable,
+    relations: Relations,
+    *,
+    k_max: int = 32,
+    boundary_relation: str = "coauthor",
+    present: set[int] | None = None,
+) -> Cover:
+    """Deterministic canopies -> total cover assembly (split + boundary +
+    totality sweep + leftovers).
+
+    Shared by the batch path (:func:`build_cover`) and the streaming
+    delta-maintenance path (:mod:`repro.stream.delta`): given the *same*
+    canopies in the same order, both produce the identical Cover, which
+    is what makes the streaming fixpoint bit-for-bit equal to the batch
+    one.  ``present`` restricts the entity-coverage sweep to ids that
+    actually exist (a streaming service ingesting batches out of id
+    order has temporary holes in the id space).
+    """
     adj = relations.adjacency_sets(boundary_relation)
     core_sets: list[np.ndarray] = []
     full_sets: list[np.ndarray] = []
@@ -187,7 +215,8 @@ def build_cover(
     covered_entities: set[int] = set()
     for members in full_sets:
         covered_entities.update(int(e) for e in members)
-    leftovers = sorted(set(range(len(entities))) - covered_entities)
+    universe = set(range(len(entities))) if present is None else set(present)
+    leftovers = sorted(universe - covered_entities)
     for lo in range(0, len(leftovers), k_max):
         arr = np.asarray(leftovers[lo : lo + k_max], dtype=np.int64)
         core_sets.append(arr)
@@ -228,6 +257,10 @@ class PackedCover:
     neighborhood_row: np.ndarray  # (N,) row within its bin
     pair_levels: dict[int, int]  # global gid -> sim level (>=1)
     cover: Cover
+    # per-neighborhood row keys (bin, members, intra-relation edges) —
+    # populated only when packing with a row_cache; the streaming path
+    # diffs them across ingests to find dirty neighborhoods.
+    row_keys: list[tuple] | None = None
 
     @property
     def num_neighborhoods(self) -> int:
@@ -264,10 +297,25 @@ def pack_cover(
     k_bins: tuple[int, ...] = DEFAULT_BINS,
     thresholds=simlib.DEFAULT_THRESHOLDS,
     boundary_relation: str = "coauthor",
+    level_cache: dict[int, int] | None = None,
+    row_cache: dict[tuple, dict] | None = None,
 ) -> PackedCover:
+    """Pack a cover into size-binned padded tensors.
+
+    ``level_cache`` and ``row_cache`` are optional *persistent* caches
+    for the streaming path: ``level_cache`` memoizes the host-side
+    Jaro-Winkler discretization per global pair, and ``row_cache``
+    memoizes fully staged neighborhood rows keyed by
+    ``(k, members, intra-relation edges)`` — a key that changes whenever
+    anything that feeds the row tensors changes, so stale entries can
+    never be reused.  Batch callers omit both and get the original
+    behavior; repacking after a micro-batch only stages rows for
+    new/changed neighborhoods ("repack only affected bins").
+    """
     adj = relations.adjacency_sets(boundary_relation)
     names = entities.names
-    level_cache: dict[int, int] = {}
+    if level_cache is None:
+        level_cache = {}
 
     def pair_level(a: int, b: int) -> int:
         gid = int(pairlib.make_gid(a, b))
@@ -286,46 +334,63 @@ def pack_cover(
     neighborhood_bin = np.zeros(n_nb, dtype=np.int64)
     neighborhood_row = np.zeros(n_nb, dtype=np.int64)
     staged: dict[int, list[dict]] = {k: [] for k in k_bins}
+    row_keys: list[tuple] | None = [] if row_cache is not None else None
 
     for n, members in enumerate(cover.full):
         size = len(members)
         k = next((kb for kb in k_bins if size <= kb), k_bins[-1])
         members = members[:k]  # safety clip (build_cover respects k_max)
         k_eff = k
-        P = pairlib.num_pairs(k_eff)
-        ii, jj = pairlib.triu_indices(k_eff)
 
-        ids = np.full(k_eff, -1, dtype=np.int64)
-        ids[: len(members)] = members
-        emask = ids >= 0
-        co = np.zeros((k_eff, k_eff), dtype=bool)
-        for a_slot in range(len(members)):
-            a = int(members[a_slot])
-            nbrs = adj.get(a, set())
-            for b_slot in range(a_slot + 1, len(members)):
-                if int(members[b_slot]) in nbrs:
-                    co[a_slot, b_slot] = True
-                    co[b_slot, a_slot] = True
+        row = None
+        row_key = None
+        if row_cache is not None:
+            mkey = tuple(int(e) for e in members)
+            intra = tuple(
+                (a, b)
+                for ai, a in enumerate(mkey)
+                for b in mkey[ai + 1 :]
+                if b in adj.get(a, set())
+            )
+            row_key = (k, mkey, intra)
+            row_keys.append(row_key)
+            row = row_cache.get(row_key)
+        if row is None:
+            P = pairlib.num_pairs(k_eff)
+            ii, jj = pairlib.triu_indices(k_eff)
 
-        lev = np.zeros(P, dtype=np.int8)
-        gid = np.full(P, -1, dtype=np.int64)
-        pmask = np.zeros(P, dtype=bool)
-        for p in range(P):
-            i, j = int(ii[p]), int(jj[p])
-            if not (emask[i] and emask[j]):
-                continue
-            a, b = int(ids[i]), int(ids[j])
-            lv = pair_level(a, b)
-            if lv >= 1:
-                lev[p] = lv
-                gid[p] = pairlib.make_gid(a, b)
-                pmask[p] = True
+            ids = np.full(k_eff, -1, dtype=np.int64)
+            ids[: len(members)] = members
+            emask = ids >= 0
+            co = np.zeros((k_eff, k_eff), dtype=bool)
+            for a_slot in range(len(members)):
+                a = int(members[a_slot])
+                nbrs = adj.get(a, set())
+                for b_slot in range(a_slot + 1, len(members)):
+                    if int(members[b_slot]) in nbrs:
+                        co[a_slot, b_slot] = True
+                        co[b_slot, a_slot] = True
+
+            lev = np.zeros(P, dtype=np.int8)
+            gid = np.full(P, -1, dtype=np.int64)
+            pmask = np.zeros(P, dtype=bool)
+            for p in range(P):
+                i, j = int(ii[p]), int(jj[p])
+                if not (emask[i] and emask[j]):
+                    continue
+                a, b = int(ids[i]), int(ids[j])
+                lv = pair_level(a, b)
+                if lv >= 1:
+                    lev[p] = lv
+                    gid[p] = pairlib.make_gid(a, b)
+                    pmask[p] = True
+            row = dict(ids=ids, emask=emask, co=co, lev=lev, gid=gid, pmask=pmask)
+            if row_cache is not None:
+                row_cache[row_key] = row
 
         neighborhood_bin[n] = k
         neighborhood_row[n] = len(staged[k])
-        staged[k].append(
-            dict(ids=ids, emask=emask, co=co, lev=lev, gid=gid, pmask=pmask)
-        )
+        staged[k].append(row)
 
     bins: dict[int, NeighborhoodBatch] = {}
     bin_rows: dict[int, np.ndarray] = {}
@@ -343,7 +408,14 @@ def pack_cover(
         rows_idx = np.where(neighborhood_bin == k)[0]
         bin_rows[k] = rows_idx
 
-    pair_levels = {g: l for g, l in level_cache.items() if l >= 1}
+    # pair_levels must reflect pairs co-resident in *this* cover — not the
+    # level cache, which on the streaming path persists across covers and
+    # would leak retracted candidate pairs into the global grounding.
+    pair_levels: dict[int, int] = {}
+    for rows in staged.values():
+        for r in rows:
+            for g, l in zip(r["gid"][r["pmask"]], r["lev"][r["pmask"]]):
+                pair_levels[int(g)] = int(l)
     return PackedCover(
         bins=bins,
         bin_rows=bin_rows,
@@ -351,4 +423,5 @@ def pack_cover(
         neighborhood_row=neighborhood_row,
         pair_levels=pair_levels,
         cover=cover,
+        row_keys=row_keys,
     )

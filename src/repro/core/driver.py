@@ -69,13 +69,26 @@ def run_smp(
     matcher: TypeIMatcher,
     order: list[int] | None = None,
     max_evals: int | None = None,
+    *,
+    init_matches: MatchStore | None = None,
 ) -> EMResult:
-    """Algorithm 1 (SMP)."""
+    """Algorithm 1 (SMP).
+
+    ``order`` doubles as a *partial* worklist hook for the streaming
+    engine: with ``init_matches`` set to a previous fixpoint and
+    ``order`` to the dirty neighborhoods only, the run continues the
+    monotone closure from that state — re-activation through
+    ``neighborhoods_of_pairs`` pulls in any neighborhood that new
+    evidence touches, so the fixpoint equals a full run (Thm. 2).
+    """
     t0 = time.perf_counter()
     n_nb = packed.num_neighborhoods
-    worklist = deque(order if order is not None else range(n_nb))
-    in_list = [True] * n_nb
-    m_plus = MatchStore()
+    seeds = list(order if order is not None else range(n_nb))
+    worklist = deque(seeds)
+    in_list = [False] * n_nb
+    for n in seeds:
+        in_list[n] = True
+    m_plus = init_matches if init_matches is not None else MatchStore()
     evals = 0
     cap = max_evals or n_nb * 64
     while worklist and evals < cap:
@@ -145,7 +158,14 @@ def _labels_to_messages(nb_gid: np.ndarray, lab: np.ndarray, m_plus) -> list[lis
 
 
 def _promote(pool: MessagePool, gg: GlobalGrounding, m_plus: MatchStore):
-    """Step 7: promote every message with nonneg global delta; to fixpoint."""
+    """Step 7: promote every message with nonneg global delta; to fixpoint.
+
+    Only the group's gids present in the grounding are promoted: in a
+    batch run that is the whole group, but the streaming engine replays
+    a *persistent* pool against a grounding whose candidate set may have
+    retracted some gids (canopy re-splits) — those must not leak back
+    into the match store.
+    """
     promoted = 0
     new_all: list[np.ndarray] = []
     base = gg.bool_of(m_plus)
@@ -154,7 +174,10 @@ def _promote(pool: MessagePool, gg: GlobalGrounding, m_plus: MatchStore):
         changed = False
         for grp in pool.groups():
             idx = gg.index_of(grp)
+            grp = grp[idx >= 0]
             idx = idx[idx >= 0]
+            if len(grp) < 2:
+                continue
             add = np.zeros_like(base)
             add[idx] = True
             if not np.any(add & ~base):
@@ -175,14 +198,28 @@ def run_mmp(
     gg: GlobalGrounding,
     order: list[int] | None = None,
     max_evals: int | None = None,
+    *,
+    init_matches: MatchStore | None = None,
+    pool: MessagePool | None = None,
 ) -> EMResult:
-    """Algorithm 3 (MMP)."""
+    """Algorithm 3 (MMP).
+
+    ``order``/``init_matches``/``pool`` are the streaming hooks: the
+    incremental engine passes only the dirty neighborhoods plus the
+    persistent maximal-message pool — step-7 promotion re-checks every
+    stored group against the *current* global grounding, which is how
+    the affected slice of the pool gets replayed after a cover delta.
+    """
     t0 = time.perf_counter()
     n_nb = packed.num_neighborhoods
-    worklist = deque(order if order is not None else range(n_nb))
-    in_list = [True] * n_nb
-    m_plus = MatchStore()
-    pool = MessagePool()
+    seeds = list(order if order is not None else range(n_nb))
+    worklist = deque(seeds)
+    in_list = [False] * n_nb
+    for n in seeds:
+        in_list[n] = True
+    m_plus = init_matches if init_matches is not None else MatchStore()
+    if pool is None:
+        pool = MessagePool()
     evals = 0
     emitted = 0
     promoted_total = 0

@@ -46,6 +46,7 @@ from repro.core.global_grounding import GlobalGrounding
 from repro.core.mln import MLNMatcher, MLNWeights, _infer_one, ground
 from repro.core.rules import RulesMatcher, _rules_fixpoint
 from repro.core.types import MatchStore, NeighborhoodBatch
+from repro.kernels import common as kcommon
 
 
 def make_em_mesh(n_shards: int | None = None, axis: str = "data") -> Mesh:
@@ -125,12 +126,11 @@ def build_round_fn(spec: RoundSpec, mesh: Mesh, axes: tuple[str, ...]):
     batch_spec = P(axes)
     rep = P()
     fn = functools.partial(_device_round, spec, axes)
-    mapped = jax.shard_map(
+    mapped = kcommon.shard_map(
         fn,
-        mesh=mesh,
-        in_specs=(batch_spec, batch_spec, batch_spec, batch_spec, batch_spec, rep),
-        out_specs=(batch_spec, batch_spec, rep),
-        check_vma=False,
+        mesh,
+        (batch_spec, batch_spec, batch_spec, batch_spec, batch_spec, rep),
+        (batch_spec, batch_spec, rep),
     )
     return jax.jit(mapped)
 
@@ -211,6 +211,9 @@ def run_parallel(
     mesh: Mesh | None = None,
     max_rounds: int = 256,
     fast_rounds: bool = True,
+    active: list[int] | None = None,
+    init_matches: MatchStore | None = None,
+    pool: MessagePool | None = None,
 ) -> EMResult:
     """Round-parallel NO-MP / SMP / MMP over the mesh's data axes.
 
@@ -218,6 +221,11 @@ def run_parallel(
     scheme='smp' exchanges match bitsets per round (Alg. 1 in rounds);
     scheme='mmp' additionally maintains the maximal-message pool and the
     step-7 promotion on the host (needs a Type-II matcher and ``gg``).
+
+    ``active``/``init_matches``/``pool`` are the streaming hooks
+    (mirroring the sequential drivers): seed round 1 with only the
+    dirty neighborhoods and continue the closure from a previous
+    fixpoint / maximal-message pool.
 
     ``fast_rounds`` (MMP only): re-activation rounds run the *greedy
     closure* variant — evidence-driven propagation needs no entailment
@@ -241,10 +249,17 @@ def run_parallel(
         return EMResult(MatchStore(), 0, 0, 0, 0, time.perf_counter() - t0)
     bins = _prepare_bins(packed, universe)
 
+    m_plus = init_matches if init_matches is not None else MatchStore()
     m_bits = np.zeros(Np, dtype=bool)
-    m_plus = MatchStore()
-    pool = MessagePool()
-    active = list(range(packed.num_neighborhoods))
+    if len(m_plus):
+        idx = np.searchsorted(universe, m_plus.gids)
+        idx = np.clip(idx, 0, Np - 1)
+        m_bits[idx[universe[idx] == m_plus.gids]] = True
+    if pool is None:
+        pool = MessagePool()
+    active = (
+        list(active) if active is not None else list(range(packed.num_neighborhoods))
+    )
     evals = 0
     emitted = 0
     promoted_total = 0

@@ -281,3 +281,93 @@ def make_dataset(cfg: SynthConfig) -> SynthDataset:
         paper_of=np.asarray(paper_of, dtype=np.int64),
         author_names=canon,
     )
+
+
+# ---------------------------------------------------------------------------
+# Synthetic arrival streams (for repro.stream)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ArrivalBatch:
+    """One micro-batch of arriving references, in *global* entity ids.
+
+    ``edges`` may reference earlier arrivals (boundary-crossing relation
+    tuples are exactly what delta cover maintenance has to handle); in
+    the paper-shaped generator every coauthor edge is intra-paper, so
+    cutting at paper boundaries keeps each edge inside one batch.
+    """
+
+    ids: np.ndarray  # (B,) int64 global reference ids
+    names: list[str]
+    truth: np.ndarray  # (B,) int64 ground-truth author ids
+    edges: np.ndarray  # (E, 2) int64 coauthor edges, global ids
+
+    def __len__(self) -> int:
+        return len(self.names)
+
+
+def truncate(ds: SynthDataset, n_refs: int) -> SynthDataset:
+    """Prefix of a dataset: the first ``n_refs`` references plus every
+    relation edge among them — the "corpus as of arrival t" instance a
+    from-scratch re-run would resolve (used by the streaming tests and
+    benchmarks as the baseline at each arrival point)."""
+    out_edges = {}
+    for name, e in ds.relations.edges.items():
+        keep = (e[:, 0] < n_refs) & (e[:, 1] < n_refs)
+        out_edges[name] = e[keep]
+    return SynthDataset(
+        entities=EntityTable(
+            names=ds.entities.names[:n_refs],
+            truth=None if ds.entities.truth is None else ds.entities.truth[:n_refs],
+        ),
+        relations=Relations(edges=out_edges),
+        paper_of=ds.paper_of[:n_refs],
+        author_names=ds.author_names,
+    )
+
+
+def arrival_stream(ds: SynthDataset, n_batches: int) -> list[ArrivalBatch]:
+    """Split a dataset into paper-aligned micro-batches (id order).
+
+    References arrive paper by paper (ids are emitted in paper order by
+    the generator), mimicking a live bibliographic feed; each coauthor
+    edge is assigned to the batch of its latest endpoint.
+    """
+    n = ds.n_refs
+    n_batches = max(1, min(n_batches, n))
+    # candidate cut points: paper boundaries (id i starts a new paper)
+    bounds = [
+        i for i in range(1, n) if ds.paper_of[i] != ds.paper_of[i - 1]
+    ]
+    cuts = []
+    for j in range(1, n_batches):
+        target = round(j * n / n_batches)
+        if not bounds:
+            break
+        best = min(bounds, key=lambda b: abs(b - target))
+        if best not in cuts:
+            cuts.append(best)
+    cuts = sorted(cuts)
+    starts = [0] + cuts
+    stops = cuts + [n]
+
+    edges = ds.relations.edges.get("coauthor")
+    if edges is None:
+        edges = np.zeros((0, 2), dtype=np.int64)
+    latest = np.maximum(edges[:, 0], edges[:, 1]) if len(edges) else np.zeros(0)
+
+    out = []
+    for lo, hi in zip(starts, stops):
+        if lo >= hi:
+            continue
+        sel = (latest >= lo) & (latest < hi) if len(edges) else np.zeros(0, bool)
+        out.append(
+            ArrivalBatch(
+                ids=np.arange(lo, hi, dtype=np.int64),
+                names=ds.entities.names[lo:hi],
+                truth=ds.entities.truth[lo:hi],
+                edges=edges[sel] if len(edges) else edges,
+            )
+        )
+    return out

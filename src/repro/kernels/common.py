@@ -18,6 +18,38 @@ import jax
 import numpy as np
 
 
+def compiler_params(**kwargs):
+    """Version-compat constructor for Pallas TPU compiler params.
+
+    jax renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams``;
+    depending on the installed version exactly one of the two exists.
+    Every kernel builds its params through this helper so the repo works
+    on either side of the rename.
+    """
+    from jax.experimental.pallas import tpu as pltpu
+
+    cls = getattr(pltpu, "CompilerParams", None)
+    if cls is None:
+        cls = pltpu.TPUCompilerParams
+    return cls(**kwargs)
+
+
+def shard_map(fn, mesh, in_specs, out_specs):
+    """Version-compat ``shard_map``: ``jax.shard_map`` (new) falls back to
+    ``jax.experimental.shard_map.shard_map`` (<= 0.4.x), and the disabled
+    replication check is passed under whichever kwarg the version takes
+    (``check_vma`` post-rename, ``check_rep`` before)."""
+    if hasattr(jax, "shard_map"):
+        _shard_map = jax.shard_map
+    else:
+        from jax.experimental.shard_map import shard_map as _shard_map
+    kw = dict(mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+    try:
+        return _shard_map(fn, **kw, check_vma=False)
+    except TypeError:
+        return _shard_map(fn, **kw, check_rep=False)
+
+
 def pallas_mode() -> str:
     """'compiled' | 'interpret' | 'off'."""
     env = os.environ.get("REPRO_PALLAS", "").lower()

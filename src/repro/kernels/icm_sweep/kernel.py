@@ -20,7 +20,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.common import pad_axis, pick_tile, round_up
+from repro.kernels.common import compiler_params, pad_axis, pick_tile, round_up
 
 
 def _sweep_kernel(u_ref, x_ref, c_ref, o_ref, acc_ref):
@@ -63,7 +63,7 @@ def sweep_matrix(u, C, X, *, interpret: bool = False, bs=128, bp=128, bk=128):
         out_specs=pl.BlockSpec((bs, bp), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((Sp, Pp), jnp.float32),
         scratch_shapes=[pltpu.VMEM((bs, bp), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -1,0 +1,28 @@
+"""Jit'd dispatch for MinHash signatures: Pallas on TPU, jnp elsewhere."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.kernels import common
+from repro.kernels.minhash import kernel, ref
+
+
+def minhash(X, A):
+    mode = common.pallas_mode()
+    if mode == "compiled":
+        return kernel.minhash(X, A)
+    if mode == "interpret":
+        return kernel.minhash(X, A, interpret=True)
+    return ref.minhash(X, A)
+
+
+def hash_table(num_hashes: int, dim: int, seed: int = 0) -> np.ndarray:
+    """(H, D) int32 table of independent random hash values in [0, EMPTY).
+
+    One tabulated draw of ``num_hashes`` random orderings of the shingle
+    vocabulary; collisions across slots are harmless (MinHash only needs
+    the argmin distribution to be uniform-ish).
+    """
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, int(ref.EMPTY), size=(num_hashes, dim), dtype=np.int32)

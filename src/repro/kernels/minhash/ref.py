@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for batched MinHash signatures.
+
+``X`` is a (N, D) shingle-presence matrix (nonzero = shingle present),
+``A`` is an (H, D) table of per-hash-function values for every shingle
+slot (one draw of H random permutations of the shingle vocabulary,
+tabulated).  The MinHash signature of row ``n`` under hash function
+``h`` is the minimum of ``A[h, d]`` over the present shingles ``d``.
+Rows with no shingles get the ``EMPTY`` sentinel.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Hash values live in [0, EMPTY); EMPTY marks "no shingle present".
+# Kept a plain int so kernels can close over it as a literal.
+EMPTY = 2**30
+
+
+def minhash(X, A):
+    """X (N, D) presence, A (H, D) int32 -> (N, H) int32 signatures."""
+    present = (X > 0)[:, None, :]  # (N, 1, D)
+    vals = jnp.where(present, A[None, :, :], EMPTY)  # (N, H, D)
+    return vals.min(axis=2).astype(jnp.int32)

@@ -28,7 +28,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.common import pad_axis, pick_tile, round_up
+from repro.kernels.common import compiler_params, pad_axis, pick_tile, round_up
 
 
 def _score_kernel(u_ref, x_ref, xj_ref, c_ref, o_ref, y_acc, f_acc):
@@ -93,7 +93,7 @@ def score_sets(u, C, X, *, interpret: bool = False, bs=128, bj=128, bk=128):
             pltpu.VMEM((1, bs, bj), jnp.float32),
             pltpu.VMEM((1, bs, 1), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary", "arbitrary"),
         ),
         interpret=interpret,

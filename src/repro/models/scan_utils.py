@@ -17,12 +17,26 @@ x)`` for each of the L stacked layers:
 
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 
 
 def _leading(tree) -> int:
     return jax.tree.leaves(tree)[0].shape[0]
+
+
+@functools.cache
+def _differentiable_barrier():
+    """Probed once per process: older jax lacks a differentiation rule
+    for optimization_barrier; there the barrier is dropped (correctness
+    is unaffected — it only pins the remat memory layout)."""
+    try:
+        jax.grad(lambda t: jnp.sum(jax.lax.optimization_barrier(t)))(jnp.ones(()))
+    except NotImplementedError:  # pragma: no cover - version dependent
+        return lambda t: t
+    return jax.lax.optimization_barrier
 
 
 def stacked_scan(body, x, stacked_params, group: int = 0, *args):
@@ -37,8 +51,10 @@ def stacked_scan(body, x, stacked_params, group: int = 0, *args):
     L = _leading(stacked_params)
     g = group if group and group > 1 else 1
 
+    _barrier = _differentiable_barrier()
+
     def barriered(lp, xx, *a):
-        xx = jax.lax.optimization_barrier(xx)
+        xx = _barrier(xx)
         return body(lp, xx, *a)
 
     inner_body = jax.checkpoint(

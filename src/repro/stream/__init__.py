@@ -1,0 +1,18 @@
+"""Streaming incremental entity matching.
+
+The batch pipeline (``repro.core.pipeline``) builds a total cover once
+and runs message passing to a global fixpoint.  This package keeps that
+fixpoint *current* under a stream of arriving entities:
+
+* :mod:`repro.stream.index` — incremental MinHash-LSH blocking index
+  (signatures computed on-device by the ``minhash`` Pallas kernel);
+* :mod:`repro.stream.delta` — delta cover maintenance: maps an arriving
+  micro-batch to the set of dirty neighborhoods and repacks only the
+  affected bins, preserving totality (Def. 7);
+* :mod:`repro.stream.engine` — incremental driver seeding the batch
+  drivers' worklists with only the dirty neighborhoods;
+* :mod:`repro.stream.service` — ``ingest(batch)`` / ``resolve(id)``
+  facade backed by an incrementally maintained union-find.
+"""
+
+from repro.stream.service import IngestReport, ResolveService  # noqa: F401

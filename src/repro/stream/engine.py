@@ -1,0 +1,127 @@
+"""Incremental message-passing engine: dirty-seeded fixpoint advance.
+
+Each ingest hands the engine a freshly maintained ``PackedCover`` and
+the dirty-neighborhood set; the engine re-enters the batch drivers
+(``core.driver`` / ``core.parallel``) through their partial-worklist
+hooks, warm-starting from the previous fixpoint:
+
+* the worklist is seeded with *only* the dirty neighborhoods — clean
+  neighborhoods re-enter solely through evidence-driven re-activation
+  (``neighborhoods_of_pairs``), exactly as in Algorithm 1/3;
+* ``M+`` starts from the carried previous fixpoint (the matcher is
+  monotone in entities and evidence, so previous matches remain valid
+  as the instance grows — the continuation computes the least fixpoint
+  above them, which by Thm. 2/4 equals the from-scratch fixpoint);
+* for MMP the maximal-message pool persists across ingests, and step-7
+  promotion re-checks every stored group against the current global
+  grounding — the "replay of the affected slice" of the pool.
+
+Carried matches are *invalidated* when a cover delta retracts their
+candidate pair (possible when an oversized canopy re-splits): the whole
+match-graph component is dropped and every neighborhood touching it is
+marked dirty, so the affected region is re-derived from scratch rather
+than trusting evidence that may no longer be derivable.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import pairs as pairlib
+from repro.core.closure import clusters_of
+from repro.core.cover import PackedCover
+from repro.core.driver import EMResult, MessagePool, run_mmp, run_smp
+from repro.core.global_grounding import GlobalGrounding
+from repro.core.types import MatchStore
+
+
+@dataclasses.dataclass
+class AdvanceStats:
+    result: EMResult
+    n_dirty: int
+    n_invalidated: int
+
+
+class IncrementalEngine:
+    def __init__(self, matcher, *, scheme: str = "smp", parallel: bool = False):
+        if scheme not in ("smp", "mmp"):
+            raise ValueError(f"streaming scheme must be smp|mmp, got {scheme!r}")
+        self.matcher = matcher
+        self.scheme = scheme
+        self.parallel = parallel
+        self.m_plus = MatchStore()
+        self.pool = MessagePool()
+        self.total_evals = 0
+        self.total_rounds = 0
+
+    def _invalidate(
+        self, packed: PackedCover, dirty: set[int]
+    ) -> tuple[MatchStore, set[int], int]:
+        """Drop carried matches whose pair left the candidate set.
+
+        Retraction is component-granular: evidence flows inside match
+        components, so everything a stale pair could have influenced is
+        re-derived.  Returns (carried matches, grown dirty set, #dropped).
+        """
+        cand = packed.pair_levels
+        stale = [g for g in self.m_plus.gids if int(g) not in cand]
+        if not stale:
+            return self.m_plus, dirty, 0
+        bad: set[int] = set()
+        stale_set = {int(g) for g in stale}
+        for comp in clusters_of(self.m_plus):
+            cset = {int(x) for x in comp}
+            for g in stale_set:
+                a, b = pairlib.split_gid(np.int64(g))
+                if int(a) in cset:
+                    bad |= cset
+                    break
+        keep = [
+            int(g)
+            for g in self.m_plus.gids
+            if int(pairlib.split_gid(np.int64(g))[0]) not in bad
+        ]
+        idx = packed.cover.entity_index()
+        for e in bad:
+            dirty |= set(idx.get(e, ()))
+        carried = MatchStore(np.asarray(keep, dtype=np.int64))
+        return carried, dirty, len(self.m_plus) - len(carried)
+
+    def advance(
+        self,
+        packed: PackedCover,
+        dirty: list[int],
+        gg: GlobalGrounding | None = None,
+    ) -> AdvanceStats:
+        carried, dirty_set, dropped = self._invalidate(packed, set(dirty))
+        order = sorted(dirty_set)
+        if self.parallel:
+            from repro.core.parallel import run_parallel
+
+            result = run_parallel(
+                packed,
+                self.matcher,
+                gg,
+                scheme=self.scheme,
+                active=order,
+                init_matches=carried,
+                pool=self.pool if self.scheme == "mmp" else None,
+            )
+        elif self.scheme == "smp":
+            result = run_smp(packed, self.matcher, order, init_matches=carried)
+        else:
+            assert gg is not None, "mmp needs the global grounding"
+            result = run_mmp(
+                packed,
+                self.matcher,
+                gg,
+                order,
+                init_matches=carried,
+                pool=self.pool,
+            )
+        self.m_plus = result.matches
+        self.total_evals += result.neighborhood_evals
+        self.total_rounds += result.rounds
+        return AdvanceStats(result=result, n_dirty=len(order), n_invalidated=dropped)

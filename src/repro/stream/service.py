@@ -1,0 +1,170 @@
+"""Resolve-query service: ``ingest(batch)`` / ``resolve(id) -> cluster``.
+
+The user-facing streaming facade.  Each ingest runs the full incremental
+path — LSH probe, delta cover maintenance, dirty-seeded fixpoint advance
+— and folds the new matches into a persistent union-find, so resolve
+queries are O(alpha) lookups between ingests.  The service's invariant,
+checked by the streaming tests: after any sequence of micro-batches its
+match fixpoint is bit-for-bit the one the batch pipeline computes over
+the union of everything ingested.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.core.closure import UnionFind
+from repro.core.cover import DEFAULT_BINS
+from repro.core.global_grounding import GlobalGrounding, build_global_grounding
+from repro.core.mln import MLNMatcher, MLNWeights, PAPER_LEARNED
+from repro.core.types import MatchStore
+from repro.core import pairs as pairlib
+from repro.stream.delta import DeltaCover
+from repro.stream.engine import IncrementalEngine
+from repro.stream.index import LSHConfig
+
+
+@dataclasses.dataclass
+class IngestReport:
+    ids: list[int]  # global entity ids assigned to the batch
+    n_entities: int  # total entities resolved so far
+    n_neighborhoods: int  # current cover size
+    n_dirty: int  # neighborhoods re-seeded this ingest
+    n_invalidated: int  # carried matches dropped by cover retraction
+    neighborhood_evals: int  # matcher evaluations this ingest
+    new_matches: int  # matches added this ingest
+    wall_time_s: float
+
+
+class ResolveService:
+    """Streaming entity resolution over micro-batches."""
+
+    def __init__(
+        self,
+        *,
+        scheme: str = "smp",
+        matcher=None,
+        weights: MLNWeights = PAPER_LEARNED,
+        parallel: bool = False,
+        t_loose: float = 0.70,
+        t_tight: float = 0.90,
+        k_max: int = 32,
+        feature_dim: int = 128,
+        k_bins: tuple[int, ...] = DEFAULT_BINS,
+        thresholds=None,
+        boundary_relation: str = "coauthor",
+        lsh: LSHConfig | None = None,
+    ):
+        self.weights = weights
+        self.scheme = scheme
+        self.delta = DeltaCover(
+            t_loose=t_loose,
+            t_tight=t_tight,
+            k_max=k_max,
+            feature_dim=feature_dim,
+            k_bins=k_bins,
+            thresholds=thresholds,
+            boundary_relation=boundary_relation,
+            lsh=lsh,
+        )
+        self.engine = IncrementalEngine(
+            matcher if matcher is not None else MLNMatcher(weights),
+            scheme=scheme,
+            parallel=parallel,
+        )
+        self.uf = UnionFind()
+        self._members: dict[int, set[int]] = {}  # uf root -> cluster members
+        self.reports: list[IngestReport] = []
+
+    # -- ingest path ------------------------------------------------------
+
+    def ingest(
+        self,
+        names: list[str],
+        edges: np.ndarray | None = None,
+        ids: list[int] | None = None,
+    ) -> IngestReport:
+        """Resolve a micro-batch of arriving entity references.
+
+        ``ids`` (optional) are explicit global entity ids — they must be
+        fresh; relation ``edges`` are given in global ids and may point
+        at earlier arrivals.  Without ``ids``, fresh sequential ids are
+        assigned.
+        """
+        t0 = time.perf_counter()
+        if ids is None:
+            base = len(self.delta.names)
+            ids = list(range(base, base + len(names)))
+        else:
+            ids = [int(i) for i in ids]
+        prev_matches = self.engine.m_plus
+        d = self.delta.ingest(ids, list(names), edges)
+        gg = self._grounding(d.packed) if self.scheme == "mmp" else None
+        stats = self.engine.advance(d.packed, d.dirty, gg)
+
+        new = stats.result.matches.difference(prev_matches)
+        if stats.n_invalidated:
+            self.uf = UnionFind()
+            self._members = {}
+            new = stats.result.matches.gids
+        for g in new:
+            a, b = pairlib.split_gid(np.int64(g))
+            self._add_match(int(a), int(b))
+
+        report = IngestReport(
+            ids=ids,
+            n_entities=self.delta.n_entities,
+            n_neighborhoods=len(d.cover),
+            n_dirty=stats.n_dirty,
+            n_invalidated=stats.n_invalidated,
+            neighborhood_evals=stats.result.neighborhood_evals,
+            new_matches=int(len(new)),
+            wall_time_s=time.perf_counter() - t0,
+        )
+        self.reports.append(report)
+        return report
+
+    def _grounding(self, packed) -> GlobalGrounding:
+        return build_global_grounding(
+            packed.pair_levels,
+            self.delta.relations(),
+            self.weights,
+            boundary_relation=self.delta.boundary_relation,
+        )
+
+    # -- query path -------------------------------------------------------
+
+    @property
+    def matches(self) -> MatchStore:
+        return self.engine.m_plus
+
+    @property
+    def total_evals(self) -> int:
+        return self.engine.total_evals
+
+    def _add_match(self, a: int, b: int) -> None:
+        """Union a matched pair, keeping the root -> members map current
+        so resolve queries stay O(alpha) + O(|cluster|)."""
+        ra, rb = self.uf.find(a), self.uf.find(b)
+        ma = self._members.pop(ra, {ra})
+        mb = self._members.pop(rb, {rb})
+        self.uf.union(a, b)
+        self._members[self.uf.find(a)] = ma | mb
+
+    def resolve(self, entity_id: int) -> np.ndarray:
+        """Cluster of ``entity_id`` under the current match fixpoint."""
+        eid = int(entity_id)
+        if eid not in self.uf.parent:
+            return np.asarray([eid], dtype=np.int64)
+        members = self._members[self.uf.find(eid)]
+        return np.asarray(sorted(members), dtype=np.int64)
+
+    def clusters(self) -> list[np.ndarray]:
+        return [
+            np.asarray(sorted(m), dtype=np.int64)
+            for m in self._members.values()
+            if len(m) >= 2
+        ]

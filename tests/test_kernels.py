@@ -101,6 +101,50 @@ def test_ngram_sim(M, N, F, threshold):
 
 
 # ---------------------------------------------------------------------------
+# minhash: masked-min signatures for streaming LSH blocking
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("N,D,H", [(8, 64, 16), (128, 512, 128), (33, 96, 50), (1, 512, 128)])
+def test_minhash(N, D, H):
+    from repro.kernels.minhash import kernel, ops, ref
+
+    rng = np.random.default_rng(N * 7 + D + H)
+    X = jnp.asarray((rng.random((N, D)) < 0.1).astype(np.float32))
+    A = jnp.asarray(ops.hash_table(H, D, seed=3))
+    got = kernel.minhash(X, A, interpret=True)
+    want = ref.minhash(X, A)
+    assert got.dtype == jnp.int32
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_minhash_empty_rows():
+    from repro.kernels.minhash import ops, ref
+
+    A = jnp.asarray(ops.hash_table(32, 64, seed=0))
+    sig = ref.minhash(jnp.zeros((3, 64)), A)
+    assert np.all(np.asarray(sig) == ref.EMPTY)
+
+
+def test_minhash_jaccard_estimate():
+    """Signature agreement rate estimates Jaccard similarity."""
+    from repro.kernels.minhash import ops, ref
+
+    rng = np.random.default_rng(0)
+    D, H = 512, 256
+    a = rng.random(D) < 0.2
+    b = a.copy()
+    flip = rng.choice(D, size=40, replace=False)
+    b[flip] = ~b[flip]
+    jac = (a & b).sum() / (a | b).sum()
+    X = jnp.asarray(np.stack([a, b]).astype(np.float32))
+    A = jnp.asarray(ops.hash_table(H, D, seed=1))
+    sig = np.asarray(ref.minhash(X, A))
+    est = (sig[0] == sig[1]).mean()
+    assert abs(est - jac) < 0.12, (est, jac)
+
+
+# ---------------------------------------------------------------------------
 # flash_attn: online-softmax attention vs the naive oracle
 # ---------------------------------------------------------------------------
 

@@ -1,0 +1,265 @@
+"""Streaming incremental EM (repro.stream) — the paper's consistency
+property extended to arrivals.
+
+The core contract: ingesting any sequence of micro-batches reaches the
+*same* MatchStore fixpoint the batch pipeline computes over the union,
+while evaluating strictly fewer neighborhoods than re-running from
+scratch at every arrival.  Delta cover maintenance must reproduce the
+batch cover exactly (equality is asserted structurally), and the LSH
+index must have full candidate recall at the canopy threshold on the
+synthetic corpora — that recall is what makes the cover equality hold.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core import pipeline
+from repro.core.cover import is_total
+from repro.core.driver import run_mmp, run_smp
+from repro.core.mln import MLNMatcher, PAPER_LEARNED
+from repro.data.synthetic import SynthConfig, arrival_stream, make_dataset, truncate
+from repro.stream import ResolveService
+from repro.stream.index import LSHConfig, MinHashLSHIndex
+
+
+@pytest.fixture(scope="module")
+def stream_ds(hepth_small):
+    return hepth_small
+
+
+@pytest.fixture(scope="module")
+def batch_state(stream_ds):
+    packed, gg, _ = pipeline.prepare(stream_ds.entities, stream_ds.relations)
+    return packed, gg
+
+
+@pytest.fixture(scope="module")
+def batch_smp(batch_state):
+    packed, _ = batch_state
+    return run_smp(packed, MLNMatcher(PAPER_LEARNED))
+
+
+def _stream(ds, n_batches, order=None, **kwargs):
+    batches = arrival_stream(ds, n_batches)
+    svc = ResolveService(**kwargs)
+    for i in order if order is not None else range(len(batches)):
+        b = batches[i]
+        svc.ingest(b.names, b.edges, ids=b.ids)
+    return svc
+
+
+# ---------------------------------------------------------------------------
+# Equivalence: stream N batches == batch run on the union
+# ---------------------------------------------------------------------------
+
+
+def test_stream_equals_batch_smp(stream_ds, batch_state, batch_smp):
+    packed, _ = batch_state
+    svc = _stream(stream_ds, 4, scheme="smp")
+    assert svc.matches.as_set() == batch_smp.matches.as_set()
+    # ... while having evaluated strictly fewer neighborhoods than
+    # re-running from scratch at each of the 4 arrival points.
+    batches = arrival_stream(stream_ds, 4)
+    scratch_evals = 0
+    for b in batches:
+        pre = truncate(stream_ds, int(b.ids[-1]) + 1)
+        p, _, _ = pipeline.prepare(pre.entities, pre.relations)
+        scratch_evals += run_smp(p, MLNMatcher(PAPER_LEARNED)).neighborhood_evals
+    assert svc.total_evals < scratch_evals, (svc.total_evals, scratch_evals)
+
+
+def test_stream_cover_equals_batch_cover(stream_ds, batch_state):
+    """Delta maintenance reproduces the batch cover structurally."""
+    packed, _ = batch_state
+    svc = _stream(stream_ds, 4, scheme="smp")
+    sp = svc.delta.packed
+    assert len(sp.cover) == len(packed.cover)
+    for a, b in zip(sp.cover.full, packed.cover.full):
+        assert np.array_equal(a, b)
+    for a, b in zip(sp.cover.core, packed.cover.core):
+        assert np.array_equal(a, b)
+    assert set(sp.bins) == set(packed.bins)
+    for k in packed.bins:
+        for field in ("entity_ids", "entity_mask", "coauthor", "sim_level",
+                      "pair_gid", "pair_mask"):
+            assert np.array_equal(
+                getattr(sp.bins[k], field), getattr(packed.bins[k], field)
+            ), (k, field)
+    assert sp.pair_levels == packed.pair_levels
+
+
+def test_stream_equals_batch_mmp(stream_ds, batch_state):
+    packed, gg = batch_state
+    mm = run_mmp(packed, MLNMatcher(PAPER_LEARNED), gg)
+    svc = _stream(stream_ds, 5, scheme="mmp")
+    assert svc.matches.as_set() == mm.matches.as_set()
+
+
+def test_stream_parallel_engine(stream_ds, batch_smp):
+    """The SPMD round driver accepts the partial-worklist seed too."""
+    svc = _stream(stream_ds, 3, scheme="smp", parallel=True)
+    assert svc.matches.as_set() == batch_smp.matches.as_set()
+
+
+# ---------------------------------------------------------------------------
+# Ingest-order invariance
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("order", [[2, 0, 4, 1, 3], [4, 3, 2, 1, 0]])
+def test_ingest_order_invariance(stream_ds, batch_smp, order):
+    svc = _stream(stream_ds, 5, order=order, scheme="smp")
+    assert svc.matches.as_set() == batch_smp.matches.as_set()
+
+
+def test_single_batch_equals_batch(stream_ds, batch_smp):
+    """Degenerate stream (one batch = everything) is the batch pipeline."""
+    svc = _stream(stream_ds, 1, scheme="smp")
+    assert svc.matches.as_set() == batch_smp.matches.as_set()
+
+
+# ---------------------------------------------------------------------------
+# Totality is preserved at every ingest (Def. 7)
+# ---------------------------------------------------------------------------
+
+
+def test_totality_preserved_per_ingest(stream_ds):
+    batches = arrival_stream(stream_ds, 4)
+    svc = ResolveService(scheme="smp")
+    for b in batches:
+        svc.ingest(b.names, b.edges, ids=b.ids)
+        cand = np.asarray(sorted(svc.delta.packed.pair_levels), dtype=np.int64)
+        assert is_total(svc.delta.cover, svc.delta.relations(), cand)
+
+
+# ---------------------------------------------------------------------------
+# The resolve-query path
+# ---------------------------------------------------------------------------
+
+
+def test_resolve_returns_truth_cluster(stream_ds):
+    svc = _stream(stream_ds, 4, scheme="smp")
+    truth = stream_ds.entities.truth
+    groups: dict[int, list[int]] = {}
+    for i, t in enumerate(truth):
+        groups.setdefault(int(t), []).append(i)
+    checked = 0
+    for g in groups.values():
+        if len(g) < 2:
+            continue
+        cluster = set(int(x) for x in svc.resolve(g[0]))
+        if cluster == {g[0]}:
+            continue  # unresolved singleton: recall is not 1.0
+        # precision-style check: resolved cluster stays inside the truth group
+        assert cluster <= set(g) or len(cluster & set(g)) >= 2
+        checked += 1
+    assert checked >= 3  # the engineered duplicates actually resolve
+
+
+def test_resolve_unknown_is_singleton(stream_ds):
+    svc = _stream(stream_ds, 2, scheme="smp")
+    far = 10_000_000
+    assert list(svc.resolve(far)) == [far]
+
+
+def test_clusters_match_closure(stream_ds):
+    from repro.core.closure import clusters_of
+
+    svc = _stream(stream_ds, 4, scheme="smp")
+    want = {tuple(int(x) for x in c) for c in clusters_of(svc.matches)}
+    got = {tuple(int(x) for x in c) for c in svc.clusters()}
+    assert got == want
+
+
+# ---------------------------------------------------------------------------
+# LSH index: recall at the canopy threshold, filtering below it
+# ---------------------------------------------------------------------------
+
+
+def test_lsh_full_recall_at_t_loose(stream_ds):
+    """Every >= t_loose pair collides in the index — the condition under
+    which delta cover maintenance is exact (see stream.delta docstring)."""
+    from repro.core import similarity as simlib
+
+    names = stream_ds.entities.names
+    feats = simlib.ngram_profiles([simlib.block_key(n) for n in names], dim=128)
+    sims = feats @ feats.T
+    idx = MinHashLSHIndex()
+    sigs = idx.add(list(range(len(names))), names)
+    for i in range(len(names)):
+        cands = idx.query(sigs[i : i + 1])
+        for j in np.where(sims[i] >= 0.70)[0]:
+            assert int(j) in cands, (i, int(j), names[i], names[int(j)])
+
+
+def test_lsh_filters_dissimilar():
+    rng = np.random.default_rng(0)
+    names = [
+        "".join(chr(ord("a") + int(c)) for c in rng.integers(0, 26, size=12))
+        for _ in range(200)
+    ]
+    idx = MinHashLSHIndex(LSHConfig(num_bands=32, rows_per_band=4))
+    sigs = idx.add(list(range(len(names))), names)
+    hits = sum(len(idx.query(sigs[i : i + 1]) - {i}) for i in range(len(names)))
+    # random 12-char strings share almost no 3-grams: candidates ~ none
+    assert hits < 0.02 * len(names) ** 2
+
+
+def test_resplit_retraction_still_equals_batch():
+    """Adversarial canopy re-split: a dense near-duplicate clique larger
+    than k_core, ingested in two interleaved halves, forces the second
+    ingest to re-split the canopy into different windows — retracting
+    candidate pairs and firing the engine's match-invalidation path.
+    The final fixpoint must still equal the batch run, and the retracted
+    pairs must have left ``pair_levels`` (regression: a persistent level
+    cache once leaked them into the global grounding)."""
+    from repro.core.types import EntityTable, Relations
+
+    names = [f"john smithsonian{chr(97 + i // 26)}{chr(97 + i % 26)}" for i in range(28)]
+    first = [i for i in range(28) if i % 2 == 0]
+    second = [i for i in range(28) if i % 2 == 1]
+
+    svc = ResolveService(scheme="smp")
+    svc.ingest([names[i] for i in first], ids=first)
+    svc.ingest([names[i] for i in second], ids=second)
+    assert svc.reports[-1].n_invalidated > 0  # the retraction path fired
+
+    packed, _, _ = pipeline.prepare(EntityTable(names=list(names)), Relations(edges={}))
+    seq = run_smp(packed, MLNMatcher(PAPER_LEARNED))
+    assert svc.delta.packed.pair_levels == packed.pair_levels
+    assert svc.matches.as_set() == seq.matches.as_set()
+
+
+def test_resplit_retraction_mmp_pool_replay():
+    """Same adversarial re-split under scheme='mmp': the persistent
+    message pool must not promote gids retracted from the grounding
+    (regression: _promote once unioned whole groups, leaking retracted
+    pairs back into the match store)."""
+    from repro.core.global_grounding import build_global_grounding
+    from repro.core.types import EntityTable, Relations
+
+    names = [f"john smithsonian{chr(97 + i // 26)}{chr(97 + i % 26)}" for i in range(28)]
+    first = [i for i in range(28) if i % 2 == 0]
+    second = [i for i in range(28) if i % 2 == 1]
+
+    svc = ResolveService(scheme="mmp")
+    svc.ingest([names[i] for i in first], ids=first)
+    svc.ingest([names[i] for i in second], ids=second)
+
+    ents = EntityTable(names=list(names))
+    rels = Relations(edges={})
+    packed, _, _ = pipeline.prepare(ents, rels)
+    gg = build_global_grounding(packed.pair_levels, rels, PAPER_LEARNED)
+    seq = run_mmp(packed, MLNMatcher(PAPER_LEARNED), gg)
+    cand = set(packed.pair_levels)
+    assert all(int(g) in cand for g in svc.matches.gids)  # no retracted leaks
+    assert svc.matches.as_set() == seq.matches.as_set()
+
+
+def test_ingest_duplicate_id_rejected(stream_ds):
+    svc = ResolveService(scheme="smp")
+    svc.ingest(["john doe"], ids=[0])
+    with pytest.raises(ValueError):
+        svc.ingest(["john doe"], ids=[0])
