@@ -1,21 +1,28 @@
-"""Shared benchmark utilities: datasets, timing, CSV emission."""
+"""Shared benchmark utilities: datasets, timing, CSV emission.
+
+``SMOKE`` (env ``BENCH_SMOKE=1``, set by ``benchmarks.run --smoke``)
+shrinks the default corpora so CI can exercise every benchmark module
+end to end in seconds; modules consult it to trim their own grids too.
+"""
 
 from __future__ import annotations
 
 import functools
+import os
 import time
-
-import numpy as np
 
 from repro.core import metrics as metricslib
 from repro.core import pipeline
 from repro.data.synthetic import SynthConfig, make_dataset
 
+SMOKE = os.environ.get("BENCH_SMOKE") == "1"
+
 # CPU-CI scale factors; the generators scale to the paper's full sizes
 # (HEPTH 58,515 refs / DBLP 50,195 / DBLP-BIG 4.6M) with scale=1.0 and
 # scale~90 respectively.
-HEPTH_SCALE = float(__import__("os").environ.get("BENCH_HEPTH_SCALE", 0.12))
-DBLP_SCALE = float(__import__("os").environ.get("BENCH_DBLP_SCALE", 0.12))
+_DEFAULT_SCALE = "0.03" if SMOKE else "0.12"
+HEPTH_SCALE = float(os.environ.get("BENCH_HEPTH_SCALE", _DEFAULT_SCALE))
+DBLP_SCALE = float(os.environ.get("BENCH_DBLP_SCALE", _DEFAULT_SCALE))
 
 
 @functools.lru_cache(maxsize=None)

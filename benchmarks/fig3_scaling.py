@@ -11,7 +11,6 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import prepared, row, timed
-from repro.core import pipeline
 from repro.core.cover import Cover, pack_cover
 from repro.core.driver import run_mmp
 from repro.core.global_grounding import build_global_grounding

@@ -15,7 +15,6 @@ from repro.core.closure import transitive_closure
 from repro.core.cover import Cover, pack_cover
 from repro.core.driver import run_smp
 from repro.core.rules import RulesMatcher
-from repro.core.types import MatchStore
 
 
 def full_run(ds, gg):

@@ -15,10 +15,17 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import row
+from benchmarks.common import SMOKE, row
 
 PEAK_FLOPS = 197e12
 HBM_BW = 819e9
+
+# --smoke: one small shape per kernel so CI exercises every code path
+# without paying for the full grid.
+ICM_SIZES = (128,) if SMOKE else (128, 512)
+SCORE_SIZES = ((4, 16, 64),) if SMOKE else ((8, 64, 128),)
+SIM_SIZES = ((256, 128),) if SMOKE else ((1024, 128),)
+ATTN_SEQ = 256 if SMOKE else 1024
 
 
 def _time(fn, *args, reps=5):
@@ -36,7 +43,7 @@ def main():
 
     from repro.kernels.icm_sweep import ref as icm_ref
 
-    for P in (128, 512):
+    for P in ICM_SIZES:
         u = jnp.asarray(rng.standard_normal(P).astype(np.float32))
         C = jnp.asarray(rng.standard_normal((P, P)).astype(np.float32))
         X = jnp.asarray((rng.random((P, P)) < 0.3).astype(np.float32))
@@ -50,7 +57,7 @@ def main():
 
     from repro.kernels.mln_score import ref as score_ref
 
-    for B, S, P in ((8, 64, 128),):
+    for B, S, P in SCORE_SIZES:
         u = jnp.asarray(rng.standard_normal((B, P)).astype(np.float32))
         C = jnp.asarray(rng.standard_normal((B, P, P)).astype(np.float32))
         X = jnp.asarray((rng.random((B, S, P)) < 0.3).astype(np.float32))
@@ -64,7 +71,7 @@ def main():
 
     from repro.kernels.ngram_sim import ref as sim_ref
 
-    for M, F in ((1024, 128),):
+    for M, F in SIM_SIZES:
         A = jnp.asarray(rng.standard_normal((M, F)).astype(np.float32))
         f = jax.jit(lambda a: sim_ref.sim_above(a, a, 0.7))
         t = _time(f, A)
@@ -76,7 +83,7 @@ def main():
 
     from repro.kernels.flash_attn import ref as fa_ref
 
-    B, S, H, hkv, hd = 1, 1024, 8, 2, 64
+    B, S, H, hkv, hd = 1, ATTN_SEQ, 8, 2, 64
     q = jnp.asarray(rng.standard_normal((B, S, H, hd)).astype(np.float32))
     k = jnp.asarray(rng.standard_normal((B, S, hkv, hd)).astype(np.float32))
     v = jnp.asarray(rng.standard_normal((B, S, hkv, hd)).astype(np.float32))

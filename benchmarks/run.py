@@ -1,13 +1,27 @@
 """Benchmark harness: one module per paper table/figure.
 
-``python -m benchmarks.run [name ...]`` — default runs all.  Output is
-CSV-ish blocks, one per artifact.
+``python -m benchmarks.run [--smoke] [name ...]`` — default runs all.
+Output is CSV-ish blocks, one per artifact.
+
+``--smoke`` shrinks every benchmark to a CI-sized instance (tiny
+corpora, fewer shapes) so the benchmark modules are exercised end to
+end on every push without burning CI minutes — the numbers are
+meaningless at that scale; the point is that the modules can't silently
+rot.  It must be handled here, before any benchmark module (and hence
+``benchmarks.common``) is imported, because the scale factors are read
+from the environment at import time.
 """
 
 from __future__ import annotations
 
+import os
 import sys
 import time
+
+try:  # installed package (pip install -e .) ...
+    import repro  # noqa: F401
+except ImportError:  # ... or the src-layout checkout without install
+    sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(__file__)), "src"))
 
 MODULES = [
     ("fig3_accuracy", "Fig 3(a)-(c): P/R/F1 + completeness, MLN"),
@@ -21,7 +35,14 @@ MODULES = [
 
 
 def main() -> None:
-    want = set(sys.argv[1:])
+    args = [a for a in sys.argv[1:]]
+    if "--smoke" in args:
+        args = [a for a in args if a != "--smoke"]
+        os.environ["BENCH_SMOKE"] = "1"
+    want = set(args)
+    unknown = want - {name for name, _ in MODULES}
+    if unknown:
+        raise SystemExit(f"unknown benchmark(s): {sorted(unknown)}")
     for name, desc in MODULES:
         if want and name not in want:
             continue

@@ -2,22 +2,29 @@
 
 For each micro-batch size the whole corpus is streamed through
 ``ResolveService`` and we report sustained ingest throughput, the mean
-dirty-neighborhood fraction (how much of the cover each arrival
-re-activates — the quantity delta maintenance exists to keep small),
-and the matcher-evaluation saving vs re-running the batch pipeline from
-scratch at every arrival point.
+dirty-neighborhood fraction, the mean *replay fraction* (ids swept by
+the localized canopy replay over corpus size — the quantity that was
+1.0 per ingest before localization), and the matcher-evaluation saving
+vs re-running the batch pipeline from scratch at every arrival point.
+
+A second block measures the incremental-grounding cost on the MMP path:
+mean/max candidate pairs visited per ``GroundingMaintainer.apply_delta``
+against the total candidate-pair count — the O(dirty) claim for the
+grounding, measurable per ingest (a from-scratch rebuild would visit
+every pair every time).
 """
 
 from __future__ import annotations
 
-from benchmarks.common import hepth, row, timed
+from benchmarks.common import SMOKE, hepth, row, timed
 from repro.core import pipeline
 from repro.core.driver import run_smp
 from repro.core.mln import MLNMatcher, PAPER_LEARNED
 from repro.data.synthetic import arrival_stream, truncate
 from repro.stream import ResolveService
 
-BATCH_SIZES = (16, 64, 256)
+BATCH_SIZES = (8, 32) if SMOKE else (16, 64, 256)
+GROUNDING_BATCH_SIZES = (32,) if SMOKE else (64,)
 
 
 def _scratch_evals(ds, batches) -> int:
@@ -31,17 +38,20 @@ def _scratch_evals(ds, batches) -> int:
     return total
 
 
+def _mean(xs) -> float:
+    return sum(xs) / max(len(xs), 1)
+
+
 def main():
     ds = hepth()
     n = ds.n_refs
     row("# stream_throughput: hepth, scheme=smp")
     row(
         "batch_size,n_batches,entities,ingest_s,entities_per_s,"
-        "dirty_frac,stream_evals,scratch_evals,eval_saving"
+        "dirty_frac,replay_frac,stream_evals,scratch_evals,eval_saving"
     )
     for bs in BATCH_SIZES:
-        n_batches = max(1, n // bs)
-        batches = arrival_stream(ds, n_batches)
+        batches = arrival_stream(ds, batch_size=bs)
         svc = ResolveService(scheme="smp")
 
         def _run():
@@ -49,9 +59,12 @@ def main():
                 svc.ingest(b.names, b.edges, ids=b.ids)
 
         _, t = timed(_run)
-        dirty_frac = sum(
-            r.n_dirty / max(r.n_neighborhoods, 1) for r in svc.reports
-        ) / len(svc.reports)
+        dirty_frac = _mean(
+            [r.n_dirty / max(r.n_neighborhoods, 1) for r in svc.reports]
+        )
+        replay_frac = _mean(
+            [r.replay_visits / max(r.n_entities, 1) for r in svc.reports]
+        )
         scratch = _scratch_evals(ds, batches)
         row(
             bs,
@@ -60,9 +73,32 @@ def main():
             f"{t:.2f}",
             f"{n / t:.1f}",
             f"{dirty_frac:.3f}",
+            f"{replay_frac:.3f}",
             svc.total_evals,
             scratch,
             f"{scratch / max(svc.total_evals, 1):.1f}x",
+        )
+
+    row("")
+    row("# stream_throughput: incremental grounding cost, scheme=mmp")
+    row(
+        "batch_size,entities,total_pairs,grounding_visits_mean,"
+        "grounding_visits_max,visit_frac_mean"
+    )
+    for bs in GROUNDING_BATCH_SIZES:
+        batches = arrival_stream(ds, batch_size=bs)
+        svc = ResolveService(scheme="mmp")
+        for b in batches:
+            svc.ingest(b.names, b.edges, ids=b.ids)
+        total_pairs = len(svc.delta.packed.pair_levels)
+        visits = [r.grounding_pair_visits for r in svc.reports]
+        row(
+            bs,
+            n,
+            total_pairs,
+            f"{_mean(visits):.1f}",
+            max(visits),
+            f"{_mean(visits) / max(total_pairs, 1):.4f}",
         )
 
 

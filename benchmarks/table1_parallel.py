@@ -15,7 +15,6 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import prepared, row, timed
-from repro.core import pipeline
 from repro.core.parallel import run_parallel
 
 

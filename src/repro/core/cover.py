@@ -28,7 +28,7 @@ import numpy as np
 
 from repro.core import pairs as pairlib
 from repro.core import similarity as simlib
-from repro.core.types import EntityTable, MatchStore, NeighborhoodBatch, Relations
+from repro.core.types import EntityTable, NeighborhoodBatch, Relations
 from repro.kernels.ngram_sim import ops as sim_ops
 
 DEFAULT_BINS = (8, 16, 24, 32)
@@ -40,17 +40,27 @@ class Cover:
 
     core: list[np.ndarray]
     full: list[np.ndarray]
+    _entity_index: dict[int, list[int]] | None = dataclasses.field(
+        default=None, repr=False, compare=False
+    )
 
     def __len__(self) -> int:
         return len(self.full)
 
     def entity_index(self) -> dict[int, list[int]]:
-        """entity id -> neighborhoods (by full membership)."""
-        idx: dict[int, list[int]] = {}
-        for n, members in enumerate(self.full):
-            for e in members:
-                idx.setdefault(int(e), []).append(n)
-        return idx
+        """entity id -> neighborhoods (by full membership).
+
+        Memoized: a Cover is immutable once assembled, and the drivers
+        consult this index on every evidence-driven re-activation — an
+        O(n) rebuild per worklist step without the cache.
+        """
+        if self._entity_index is None:
+            idx: dict[int, list[int]] = {}
+            for n, members in enumerate(self.full):
+                for e in members:
+                    idx.setdefault(int(e), []).append(n)
+            self._entity_index = idx
+        return self._entity_index
 
 
 def build_canopies(
@@ -304,8 +314,9 @@ def pack_cover(
 
     ``level_cache`` and ``row_cache`` are optional *persistent* caches
     for the streaming path: ``level_cache`` memoizes the host-side
-    Jaro-Winkler discretization per global pair, and ``row_cache``
-    memoizes fully staged neighborhood rows keyed by
+    Jaro-Winkler discretization per global pair (a pure memo — the
+    streaming layer may bound it, see ``DeltaCover.level_cache_max``),
+    and ``row_cache`` memoizes fully staged neighborhood rows keyed by
     ``(k, members, intra-relation edges)`` — a key that changes whenever
     anything that feeds the row tensors changes, so stale entries can
     never be reused.  Batch callers omit both and get the original
@@ -414,8 +425,8 @@ def pack_cover(
     pair_levels: dict[int, int] = {}
     for rows in staged.values():
         for r in rows:
-            for g, l in zip(r["gid"][r["pmask"]], r["lev"][r["pmask"]]):
-                pair_levels[int(g)] = int(l)
+            for g, lv in zip(r["gid"][r["pmask"]], r["lev"][r["pmask"]]):
+                pair_levels[int(g)] = int(lv)
     return PackedCover(
         bins=bins,
         bin_rows=bin_rows,

@@ -15,7 +15,6 @@ from collections import deque
 
 import numpy as np
 
-from repro.core import pairs as pairlib
 from repro.core.cover import PackedCover
 from repro.core.global_grounding import GlobalGrounding
 from repro.core.matcher import TypeIIMatcher, TypeIMatcher
@@ -141,19 +140,36 @@ class MessagePool:
             by_root.setdefault(self._find(g), []).append(g)
         return [np.asarray(sorted(v), dtype=np.int64) for v in by_root.values() if len(v) >= 2]
 
+    def discard(self, gids) -> None:
+        """Remove gids from the pool, keeping the remaining group structure.
+
+        The streaming engine calls this when a cover delta retracts
+        candidate pairs: step-7 promotion already filters retracted gids
+        against the current grounding, but pruning them here patches the
+        pool in place so groups that shrink below two members stop being
+        replayed at every subsequent promotion pass.
+        """
+        drop = {int(g) for g in gids}
+        if not drop or not (drop & self.parent.keys()):
+            return
+        groups = self.groups()
+        self.parent = {}
+        for grp in groups:
+            self.add_message([int(g) for g in grp if int(g) not in drop])
+
 
 def _labels_to_messages(nb_gid: np.ndarray, lab: np.ndarray, m_plus) -> list[list[int]]:
     """Component labels (P,) -> groups of >= 2 unmatched global pairs."""
     P = lab.shape[0]
     msgs: dict[int, list[int]] = {}
     for p in range(P):
-        l = int(lab[p])
-        if l >= P:
+        lab_p = int(lab[p])
+        if lab_p >= P:
             continue
         g = int(nb_gid[p])
         if g < 0 or g in m_plus:
             continue
-        msgs.setdefault(l, []).append(g)
+        msgs.setdefault(lab_p, []).append(g)
     return [v for v in msgs.values() if len(v) >= 2]
 
 

@@ -18,7 +18,7 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core import pairs as pairlib
-from repro.core.cover import Cover, PackedCover, pack_cover
+from repro.core.cover import Cover, PackedCover
 from repro.core.types import EntityTable, MatchStore, NeighborhoodBatch, Relations
 
 NAMES = ["a1", "a2", "b1", "b2", "b3", "c1", "c2", "c3", "d1"]
@@ -148,9 +148,9 @@ def packed_cover(k: int = 8) -> PackedCover:
     )
     levels = {}
     for r in rows:
-        for g, l in zip(r["gid"], r["lev"]):
+        for g, lv in zip(r["gid"], r["lev"]):
             if g >= 0:
-                levels[int(g)] = int(l)
+                levels[int(g)] = int(lv)
     return PackedCover(
         bins={k: nb},
         bin_rows={k: np.arange(3, dtype=np.int64)},

@@ -19,7 +19,6 @@ from repro.core.driver import EMResult, run_mmp, run_nomp, run_smp
 from repro.core.global_grounding import GlobalGrounding, build_global_grounding, ub_matches
 from repro.core.mln import MLNMatcher, MLNWeights, PAPER_LEARNED
 from repro.core.parallel import run_parallel
-from repro.core.rules import RulesMatcher
 from repro.core.types import EntityTable, MatchStore, Relations
 
 

@@ -21,7 +21,7 @@ import numpy as np
 
 try:  # jax only needed for device placement helpers
     import jax
-    from jax.sharding import Mesh, NamedSharding
+    from jax.sharding import NamedSharding
     from jax.sharding import PartitionSpec as P
 except Exception:  # pragma: no cover
     jax = None

@@ -327,14 +327,30 @@ def truncate(ds: SynthDataset, n_refs: int) -> SynthDataset:
     )
 
 
-def arrival_stream(ds: SynthDataset, n_batches: int) -> list[ArrivalBatch]:
+def arrival_stream(
+    ds: SynthDataset,
+    n_batches: int | None = None,
+    *,
+    batch_size: int | None = None,
+) -> list[ArrivalBatch]:
     """Split a dataset into paper-aligned micro-batches (id order).
 
     References arrive paper by paper (ids are emitted in paper order by
     the generator), mimicking a live bibliographic feed; each coauthor
     edge is assigned to the batch of its latest endpoint.
+
+    Pass either ``n_batches`` or ``batch_size`` (target references per
+    micro-batch) — the latter is the natural knob for long streams,
+    where the batch count grows with the corpus (the streaming
+    benchmark drives thousands of micro-batches this way).
     """
     n = ds.n_refs
+    if batch_size is not None:
+        if n_batches is not None:
+            raise ValueError("pass n_batches or batch_size, not both")
+        n_batches = max(1, round(n / max(1, batch_size)))
+    elif n_batches is None:
+        raise ValueError("pass n_batches or batch_size")
     n_batches = max(1, min(n_batches, n))
     # candidate cut points: paper boundaries (id i starts a new paper)
     bounds = [

@@ -28,7 +28,6 @@ Usage::
 import argparse
 import dataclasses
 import json
-import re
 import time
 import traceback
 
@@ -70,7 +69,7 @@ def active_param_count(cfg, specs) -> int:
     f = cfg.moe_d_ff or cfg.d_ff
     per_expert = cfg.d_model * 2 * f + f * cfg.d_model
     if cfg.family == "hybrid":
-        from repro.models.hybrid import _is_moe, _n_periods
+        from repro.models.hybrid import _is_moe
 
         n_moe = sum(_is_moe(cfg, i) for i in range(cfg.n_layers))
     else:
@@ -252,7 +251,9 @@ def lower_em_cell(multi_pod: bool, *, k: int = 32, neighborhoods: int = 8192,
                      matcher_kind=matcher_kind, weights=PAPER_LEARNED)
     fn = build_round_fn(spec, mesh, axes)
 
-    sds = lambda shape, dt: jax.ShapeDtypeStruct(shape, dt)
+    def sds(shape, dt):
+        return jax.ShapeDtypeStruct(shape, dt)
+
     args = (
         sds((B, k), jnp.bool_),         # entity_mask
         sds((B, k, k), jnp.bool_),      # coauthor

@@ -11,8 +11,6 @@ cross-attn KV (computed once at prefill).
 
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P

@@ -38,7 +38,7 @@ from repro.models.layers import (
     softmax_xent,
     unembed,
 )
-from repro.models.param import PSpec, stack
+from repro.models.param import stack
 
 
 def _is_attn(cfg: ModelConfig, i: int) -> bool:

@@ -132,7 +132,9 @@ def ssm_forward(cfg: ModelConfig, p, x, *, chunk: int = 128):
         y, h2 = chunk_fn(dtc, Bc, Cc, A, uc, h)
         return h2, y
 
-    reshape = lambda t: t.reshape(B, n_chunks, c, *t.shape[2:]).swapaxes(0, 1)
+    def reshape(t):
+        return t.reshape(B, n_chunks, c, *t.shape[2:]).swapaxes(0, 1)
+
     h0 = jnp.zeros((B, di, cfg.ssm_state), jnp.float32)
     _, ys = jax.lax.scan(body, h0, (reshape(dt), reshape(Bm), reshape(Cm), reshape(u)))
     y = ys.swapaxes(0, 1).reshape(B, S, di)

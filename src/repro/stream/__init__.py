@@ -2,17 +2,28 @@
 
 The batch pipeline (``repro.core.pipeline``) builds a total cover once
 and runs message passing to a global fixpoint.  This package keeps that
-fixpoint *current* under a stream of arriving entities:
+fixpoint *current* under a stream of arriving entities, with per-ingest
+cost proportional to the dirty set rather than the corpus:
 
 * :mod:`repro.stream.index` — incremental MinHash-LSH blocking index
-  (signatures computed on-device by the ``minhash`` Pallas kernel);
-* :mod:`repro.stream.delta` — delta cover maintenance: maps an arriving
-  micro-batch to the set of dirty neighborhoods and repacks only the
-  affected bins, preserving totality (Def. 7);
+  (signatures computed on-device by the ``minhash`` Pallas kernel),
+  optionally memory-bounded via ``LSHConfig.max_ids`` / ``ttl_adds``;
+* :mod:`repro.stream.delta` — delta cover maintenance: localized canopy
+  replay over the touched similarity components, dirty-neighborhood
+  diffing, repacking only the affected bins, preserving totality
+  (Def. 7);
 * :mod:`repro.stream.engine` — incremental driver seeding the batch
-  drivers' worklists with only the dirty neighborhoods;
+  drivers' worklists with only the dirty neighborhoods and patching the
+  persistent MMP message pool on candidate retraction;
 * :mod:`repro.stream.service` — ``ingest(batch)`` / ``resolve(id)``
-  facade backed by an incrementally maintained union-find.
+  facade backed by an incrementally maintained union-find and the
+  incrementally patched global grounding
+  (``core.global_grounding.GroundingMaintainer``), with
+  ``snapshot()`` / ``resolve_many()`` for consistent concurrent reads.
 """
 
-from repro.stream.service import IngestReport, ResolveService  # noqa: F401
+from repro.stream.service import (  # noqa: F401
+    IngestReport,
+    ResolveService,
+    ResolveSnapshot,
+)

@@ -18,6 +18,16 @@ streaming arrivals without recomputing the O(n^2) similarity structure:
    cannot change the result (ingest-order invariance), and because new
    entities get fresh ids, old seeds keep their canopies and only gain
    members.
+
+   The replay is *localized*: suppression and membership only propagate
+   along similarity edges, so the sweep decomposes exactly over the
+   connected components of the sparse graph.  Each ingest expands a
+   frontier from the LSH-touched seeds (the arrivals plus every
+   existing entity that gained a similarity edge) to the union of their
+   components, re-sweeps only that region, and reuses cached canopies
+   for every untouched component — O(region), not O(n), per ingest
+   (``last_replay_visits`` counts the region; the tests assert both the
+   bit-for-bit equality with the full sweep and the locality bound).
 3. **Assemble** — ``core.cover.assemble_cover`` (shared with the batch
    path) rebuilds the Cover; totality (Def. 7) is preserved per ingest
    because the assembly re-runs the relation-edge sweep against the
@@ -63,6 +73,12 @@ class DeltaResult:
     cover: Cover
     packed: PackedCover
     dirty: list[int]  # neighborhood indices whose row key is new
+    # candidate-pair delta vs the previous cover — the exact input the
+    # incremental grounding maintainer consumes (gid -> level / gids):
+    added_pairs: dict[int, int] = dataclasses.field(default_factory=dict)
+    retracted_pairs: list[int] = dataclasses.field(default_factory=list)
+    new_edges: np.ndarray | None = None  # this ingest's relation tuples
+    replay_visits: int = 0  # ids swept by the localized canopy replay
 
 
 class DeltaCover:
@@ -79,6 +95,7 @@ class DeltaCover:
         thresholds=None,
         boundary_relation: str = "coauthor",
         lsh: LSHConfig | None = None,
+        level_cache_max: int | None = None,
     ):
         self.t_loose = t_loose
         self.t_tight = t_tight
@@ -97,8 +114,17 @@ class DeltaCover:
         self.sim_adj: dict[int, dict[int, float]] = {}
         # persistent packing caches (see pack_cover)
         self.level_cache: dict[int, int] = {}
+        # cap on the Jaro-Winkler level memo: eviction is safe (a miss
+        # recomputes the level from the name-static strings), so a
+        # long-lived service can bound this without losing exactness.
+        self.level_cache_max = level_cache_max
         self.row_cache: dict[tuple, dict] = {}
         self.prev_row_keys: set[tuple] = set()
+        # localized-replay state: seed id -> canopy members, plus the
+        # visit counters the O(dirty) tests/benchmarks read.
+        self._canopy_cache: dict[int, np.ndarray] = {}
+        self.last_replay_visits = 0
+        self.total_replay_visits = 0
 
         self.cover: Cover | None = None
         self.packed: PackedCover | None = None
@@ -139,15 +165,21 @@ class DeltaCover:
 
     # -- probe ------------------------------------------------------------
 
-    def _probe(self, ids: list[int], names: list[str]) -> int:
-        """LSH-gated exact similarity probes; returns #candidate rows."""
+    def _probe(self, ids: list[int], names: list[str]) -> set[int]:
+        """LSH-gated exact similarity probes.
+
+        Returns the set of ids whose similarity adjacency changed — the
+        arrivals plus every existing entity that gained an edge — which
+        seeds the localized canopy replay's frontier expansion.
+        """
         sigs = self.index.add(ids, names)
         # LSH collisions plus the batch itself: intra-batch similarity is
         # always exact, so a service ingesting everything in one batch
         # reproduces build_canopies regardless of banding parameters.
         cands = sorted(self.index.query(sigs) | set(ids))
+        touched = set(ids)
         if not cands:
-            return 0
+            return touched
         q = self.features[np.asarray(ids, dtype=np.int64)]
         p = self.features[np.asarray(cands, dtype=np.int64)]
         sims = np.asarray(sim_ops.sim_above(q, p, 0.0))
@@ -160,17 +192,62 @@ class DeltaCover:
                 s = float(row[int(c)])
                 self.sim_adj.setdefault(a, {})[b] = s
                 self.sim_adj.setdefault(b, {})[a] = s
-        return len(cands)
+                touched.add(b)
+        return touched
 
     # -- replay -----------------------------------------------------------
 
-    def _canopies(self) -> list[np.ndarray]:
-        """Canonical canopy sweep over the sparse similarity graph.
+    def _replay_region(self, touched: set[int]) -> set[int]:
+        """Frontier expansion: close the touched ids over the sparse
+        similarity graph.  Suppression and membership only propagate
+        along similarity edges, so the union of the touched connected
+        components is exactly the slice of the sweep that can change."""
+        region: set[int] = set()
+        stack = [e for e in touched if e in self.present]
+        while stack:
+            e = stack.pop()
+            if e in region:
+                continue
+            region.add(e)
+            stack.extend(o for o in self.sim_adj.get(e, ()) if o not in region)
+        return region
 
-        Exactly ``build_canopies``: seeds in ascending id order, every
-        >= t_loose partner is a member, >= t_tight partners stop being
-        seeds.  O(n + edges) host work per ingest.
+    def _canopies(self, touched: set[int]) -> list[np.ndarray]:
+        """Localized canonical canopy sweep.
+
+        Re-sweeps only the connected region of the touched ids (exactly
+        ``build_canopies`` restricted to it: seeds in ascending id
+        order, every >= t_loose partner a member, >= t_tight partners
+        suppressed as seeds) and reuses cached canopies everywhere else.
+        Bit-for-bit equal to the full sweep (``_canopies_full``) because
+        the sweep decomposes over similarity components — O(region)
+        set-ops per ingest instead of O(n).
         """
+        region = self._replay_region(touched)
+        self.last_replay_visits = len(region)
+        self.total_replay_visits += len(region)
+        for seed in region:
+            self._canopy_cache.pop(seed, None)
+        suppressed: set[int] = set()
+        for e in sorted(region):
+            if e in suppressed:
+                continue
+            nbrs = self.sim_adj.get(e, {})
+            self._canopy_cache[e] = np.asarray(
+                sorted({e} | set(nbrs)), dtype=np.int64
+            )
+            for o, s in nbrs.items():
+                if s >= self.t_tight:
+                    suppressed.add(o)
+        return [self._canopy_cache[s] for s in sorted(self._canopy_cache)]
+
+    def canopies(self) -> list[np.ndarray]:
+        """Current canopies (seed-id order), from the replay cache."""
+        return [self._canopy_cache[s] for s in sorted(self._canopy_cache)]
+
+    def _canopies_full(self) -> list[np.ndarray]:
+        """Reference full-id sweep (the pre-localization loop); kept for
+        the equality tests proving the replayed slice reproduces it."""
         suppressed: set[int] = set()
         out: list[np.ndarray] = []
         for e in sorted(self.present):
@@ -196,6 +273,13 @@ class DeltaCover:
             raise ValueError(f"{len(ids)} ids for {len(names)} names")
         if edges is not None and len(edges):
             edges = np.asarray(edges, dtype=np.int64)
+            if np.any(edges[:, 0] == edges[:, 1]):
+                # A self-loop carries no pairwise evidence but *would*
+                # perturb the batch grounding's common-neighbor counts
+                # (adjacency_sets puts i in adj(i)); rejecting it keeps
+                # the stream == batch equality contract honest instead
+                # of silently diverging.
+                raise ValueError("self-loop relation edges are not allowed")
             unknown = sorted(
                 {int(e) for e in edges.reshape(-1)} - self.present - set(ids)
             )
@@ -209,19 +293,19 @@ class DeltaCover:
         self._grow(ids, names)
         if edges is not None:
             self.edge_chunks.append(edges)
-        if ids:
-            self._probe(ids, names)
+        touched = self._probe(ids, names) if ids else set()
 
         entities = self.entities()
         relations = self.relations()
         cover = assemble_cover(
-            self._canopies(),
+            self._canopies(touched),
             entities,
             relations,
             k_max=self.k_max,
             boundary_relation=self.boundary_relation,
             present=self.present,
         )
+        prev_levels = self.packed.pair_levels if self.packed is not None else {}
         packed = pack_cover(
             cover,
             entities,
@@ -240,8 +324,23 @@ class DeltaCover:
         # Evict staged rows for neighborhoods no longer in the cover: a
         # grown/re-split neighborhood never reuses its old key, so without
         # eviction a long-lived service accumulates one row copy per
-        # historical neighborhood version.  (level_cache stays unbounded
-        # on purpose — it memoizes the name-static Jaro-Winkler levels.)
+        # historical neighborhood version.
         self.row_cache = {k: self.row_cache[k] for k in self.prev_row_keys}
+        # Bound the Jaro-Winkler level memo (oldest-inserted first; pure
+        # memo, so eviction never changes the cover or the fixpoint).
+        if self.level_cache_max is not None:
+            while len(self.level_cache) > self.level_cache_max:
+                self.level_cache.pop(next(iter(self.level_cache)))
         self.cover, self.packed = cover, packed
-        return DeltaResult(cover=cover, packed=packed, dirty=dirty)
+        cur_levels = packed.pair_levels
+        return DeltaResult(
+            cover=cover,
+            packed=packed,
+            dirty=dirty,
+            added_pairs={
+                g: lv for g, lv in cur_levels.items() if g not in prev_levels
+            },
+            retracted_pairs=[g for g in prev_levels if g not in cur_levels],
+            new_edges=edges,
+            replay_visits=self.last_replay_visits,
+        )

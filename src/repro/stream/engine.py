@@ -94,7 +94,20 @@ class IncrementalEngine:
         packed: PackedCover,
         dirty: list[int],
         gg: GlobalGrounding | None = None,
+        *,
+        retracted=None,
     ) -> AdvanceStats:
+        """Advance the fixpoint over a freshly maintained cover.
+
+        ``gg`` (MMP only) is the *incrementally maintained* global
+        grounding — the service patches it via
+        ``GroundingMaintainer.apply_delta`` instead of rebuilding it per
+        ingest.  ``retracted`` lists the candidate gids the cover delta
+        dropped; they are pruned from the persistent message pool so
+        stale groups stop being replayed at every promotion pass.
+        """
+        if retracted and self.scheme == "mmp":
+            self.pool.discard(retracted)
         carried, dirty_set, dropped = self._invalidate(packed, set(dirty))
         order = sorted(dirty_set)
         if self.parallel:

@@ -18,6 +18,7 @@ near-1 and below which work is saved.
 from __future__ import annotations
 
 import dataclasses
+from collections import deque
 
 import numpy as np
 
@@ -33,16 +34,31 @@ class LSHConfig:
     defaults (r=2, b=64) put the S-curve knee near J~0.1 so candidate
     recall at the canopy t_loose threshold is effectively 1 while
     unrelated names rarely collide.
+
+    ``max_ids`` / ``ttl_adds`` bound the bucket tables for long-lived
+    serving: ``max_ids`` caps the number of indexed entities (oldest
+    evicted first), ``ttl_adds`` evicts entities older than that many
+    ``add`` calls.  Both are **off by default** because eviction trades
+    exactness for memory — an evicted entity can no longer collide with
+    future arrivals, so the delta cover is only guaranteed equal to the
+    batch cover for corpora whose >= t_loose partners arrive within the
+    retention window.
     """
 
     num_bands: int = 64
     rows_per_band: int = 2
     shingle_dim: int = 512
     seed: int = 0
+    max_ids: int | None = None
+    ttl_adds: int | None = None
 
     @property
     def num_hashes(self) -> int:
         return self.num_bands * self.rows_per_band
+
+    @property
+    def bounded(self) -> bool:
+        return self.max_ids is not None or self.ttl_adds is not None
 
 
 def shingle_presence(names: list[str], dim: int) -> np.ndarray:
@@ -58,10 +74,13 @@ def shingle_presence(names: list[str], dim: int) -> np.ndarray:
 
 
 class MinHashLSHIndex:
-    """Append-only LSH index over MinHash signatures.
+    """Incremental LSH index over MinHash signatures.
 
     ``add`` ingests a batch (signatures computed on-device), ``query``
     returns the union of bucket members colliding with each probe.
+    With ``LSHConfig.max_ids`` / ``ttl_adds`` set, the bucket tables are
+    bounded: the oldest entities are evicted (and scrubbed from their
+    buckets) once the cap or age limit is exceeded.
     """
 
     def __init__(self, cfg: LSHConfig | None = None):
@@ -73,7 +92,15 @@ class MinHashLSHIndex:
         self.buckets: list[dict[tuple, list[int]]] = [
             {} for _ in range(self.cfg.num_bands)
         ]
-        self.n_indexed = 0
+        self.n_indexed = 0  # currently live (indexed minus evicted)
+        self.n_evicted = 0
+        self.n_adds = 0
+        # eviction bookkeeping, kept only when a bound is configured:
+        # per-id band keys (for O(bands) bucket scrubbing), insertion
+        # order, and the add-call stamp for TTL.
+        self._keys_of: dict[int, list[tuple[int, tuple]]] = {}
+        self._added_at: dict[int, int] = {}
+        self._order: deque[int] = deque()
 
     def signatures(self, names: list[str]) -> np.ndarray:
         x = shingle_presence(names, self.cfg.shingle_dim)
@@ -85,13 +112,60 @@ class MinHashLSHIndex:
             yield b, tuple(int(v) for v in sig[b * r : (b + 1) * r])
 
     def add(self, ids: list[int], names: list[str]) -> np.ndarray:
-        """Index a batch; returns the (B, H) signature matrix."""
+        """Index a batch; returns the (B, H) signature matrix.
+
+        On a *bounded* index, re-adding an id is tolerated: the old
+        bucket entries are scrubbed first and the TTL stamp refreshes.
+        An unbounded index keeps the original append-only semantics —
+        a re-add duplicates bucket entries and counts in ``n_indexed``
+        again (the streaming layer rejects duplicate ids before they
+        reach the index).
+        """
         sigs = self.signatures(names)
+        self.n_adds += 1
         for eid, sig in zip(ids, sigs):
-            for b, key in self._band_keys(sig):
-                self.buckets[b].setdefault(key, []).append(int(eid))
-        self.n_indexed += len(ids)
+            eid = int(eid)
+            keys = list(self._band_keys(sig))
+            if self.cfg.bounded and eid in self._keys_of:
+                self._scrub(eid)
+                self._order.remove(eid)
+                self.n_indexed -= 1
+            for b, key in keys:
+                self.buckets[b].setdefault(key, []).append(eid)
+            if self.cfg.bounded:
+                self._keys_of[eid] = keys
+                self._added_at[eid] = self.n_adds
+                self._order.append(eid)
+            self.n_indexed += 1
+        self._evict()
         return sigs
+
+    def _scrub(self, eid: int) -> None:
+        """Remove an id's entries from its recorded buckets."""
+        del self._added_at[eid]
+        for b, key in self._keys_of.pop(eid):
+            members = self.buckets[b].get(key)
+            if members is None:
+                continue
+            members.remove(eid)
+            if not members:
+                del self.buckets[b][key]
+
+    def _evict(self) -> None:
+        cfg = self.cfg
+        while self._order:
+            oldest = self._order[0]
+            over_cap = cfg.max_ids is not None and len(self._order) > cfg.max_ids
+            expired = (
+                cfg.ttl_adds is not None
+                and self._added_at[oldest] <= self.n_adds - cfg.ttl_adds
+            )
+            if not (over_cap or expired):
+                break
+            self._order.popleft()
+            self._scrub(oldest)
+            self.n_indexed -= 1
+            self.n_evicted += 1
 
     def query(self, sigs: np.ndarray, exclude: set[int] | None = None) -> set[int]:
         """Union of indexed entities colliding with any probe signature."""

@@ -1,27 +1,44 @@
 """Resolve-query service: ``ingest(batch)`` / ``resolve(id) -> cluster``.
 
 The user-facing streaming facade.  Each ingest runs the full incremental
-path — LSH probe, delta cover maintenance, dirty-seeded fixpoint advance
-— and folds the new matches into a persistent union-find, so resolve
-queries are O(alpha) lookups between ingests.  The service's invariant,
-checked by the streaming tests: after any sequence of micro-batches its
-match fixpoint is bit-for-bit the one the batch pipeline computes over
-the union of everything ingested.
+path — LSH probe, delta cover maintenance, incremental grounding patch,
+dirty-seeded fixpoint advance — and folds the new matches into a
+persistent union-find, so resolve queries are O(alpha) lookups between
+ingests.  The service's invariant, checked by the streaming tests:
+after any sequence of micro-batches its match fixpoint is bit-for-bit
+the one the batch pipeline computes over the union of everything
+ingested.
+
+Every per-ingest cost tracks the dirty set, not the corpus:
+
+* the canopy replay sweeps only the touched similarity components
+  (``IngestReport.replay_visits``);
+* for MMP, the global grounding is patched in place via
+  ``GroundingMaintainer.apply_delta`` instead of rebuilt
+  (``IngestReport.grounding_pair_visits``);
+* only dirty neighborhoods seed the fixpoint advance.
+
+Serving reads don't race ingests: :meth:`ResolveService.snapshot`
+returns an immutable :class:`ResolveSnapshot` of a consistent fixpoint
+(cluster mutation happens atomically under a lock at the end of each
+ingest), and :meth:`ResolveService.resolve_many` answers a batch of
+queries under one lock acquisition.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 
 import numpy as np
 
+from repro.core import pairs as pairlib
 from repro.core.closure import UnionFind
 from repro.core.cover import DEFAULT_BINS
-from repro.core.global_grounding import GlobalGrounding, build_global_grounding
+from repro.core.global_grounding import GroundingMaintainer
 from repro.core.mln import MLNMatcher, MLNWeights, PAPER_LEARNED
 from repro.core.types import MatchStore
-from repro.core import pairs as pairlib
 from repro.stream.delta import DeltaCover
 from repro.stream.engine import IncrementalEngine
 from repro.stream.index import LSHConfig
@@ -36,7 +53,38 @@ class IngestReport:
     n_invalidated: int  # carried matches dropped by cover retraction
     neighborhood_evals: int  # matcher evaluations this ingest
     new_matches: int  # matches added this ingest
+    replay_visits: int  # ids swept by the localized canopy replay
+    grounding_pair_visits: int  # pairs patched in the grounding (mmp)
     wall_time_s: float
+
+
+@dataclasses.dataclass(frozen=True)
+class ResolveSnapshot:
+    """An immutable, consistent view of the match fixpoint.
+
+    Taken atomically between cluster updates, so a reader thread never
+    observes a half-applied ingest.  Resolution against a snapshot is
+    pure dict lookups — no locks, no interaction with ongoing ingests.
+    """
+
+    matches: MatchStore
+    n_entities: int
+    n_ingests: int
+    _root: dict[int, int]  # entity -> cluster root (pre-flattened)
+    _members: dict[int, np.ndarray]  # root -> sorted cluster members
+
+    def resolve(self, entity_id: int) -> np.ndarray:
+        eid = int(entity_id)
+        root = self._root.get(eid)
+        if root is None:
+            return np.asarray([eid], dtype=np.int64)
+        return self._members[root]
+
+    def resolve_many(self, entity_ids) -> list[np.ndarray]:
+        return [self.resolve(e) for e in entity_ids]
+
+    def clusters(self) -> list[np.ndarray]:
+        return [m for m in self._members.values() if len(m) >= 2]
 
 
 class ResolveService:
@@ -57,6 +105,7 @@ class ResolveService:
         thresholds=None,
         boundary_relation: str = "coauthor",
         lsh: LSHConfig | None = None,
+        level_cache_max: int | None = None,
     ):
         self.weights = weights
         self.scheme = scheme
@@ -69,14 +118,23 @@ class ResolveService:
             thresholds=thresholds,
             boundary_relation=boundary_relation,
             lsh=lsh,
+            level_cache_max=level_cache_max,
         )
         self.engine = IncrementalEngine(
             matcher if matcher is not None else MLNMatcher(weights),
             scheme=scheme,
             parallel=parallel,
         )
+        # MMP needs the global grounding; maintained incrementally so no
+        # ingest pays the O(corpus) from-scratch build.  The delta's
+        # new_edges are boundary-relation tuples, as the maintainer's
+        # caller contract requires.
+        self.grounding = GroundingMaintainer(weights) if scheme == "mmp" else None
         self.uf = UnionFind()
         self._members: dict[int, set[int]] = {}  # uf root -> cluster members
+        self._fixpoint = MatchStore()
+        self._lock = threading.RLock()
+        self._snapshot_cache: ResolveSnapshot | None = None
         self.reports: list[IngestReport] = []
 
     # -- ingest path ------------------------------------------------------
@@ -102,38 +160,46 @@ class ResolveService:
             ids = [int(i) for i in ids]
         prev_matches = self.engine.m_plus
         d = self.delta.ingest(ids, list(names), edges)
-        gg = self._grounding(d.packed) if self.scheme == "mmp" else None
-        stats = self.engine.advance(d.packed, d.dirty, gg)
-
-        new = stats.result.matches.difference(prev_matches)
-        if stats.n_invalidated:
-            self.uf = UnionFind()
-            self._members = {}
-            new = stats.result.matches.gids
-        for g in new:
-            a, b = pairlib.split_gid(np.int64(g))
-            self._add_match(int(a), int(b))
-
-        report = IngestReport(
-            ids=ids,
-            n_entities=self.delta.n_entities,
-            n_neighborhoods=len(d.cover),
-            n_dirty=stats.n_dirty,
-            n_invalidated=stats.n_invalidated,
-            neighborhood_evals=stats.result.neighborhood_evals,
-            new_matches=int(len(new)),
-            wall_time_s=time.perf_counter() - t0,
+        grounding_visits = 0
+        gg = None
+        if self.grounding is not None:
+            gstats = self.grounding.apply_delta(
+                d.added_pairs, d.retracted_pairs, d.new_edges
+            )
+            grounding_visits = gstats.pairs_visited
+            gg = self.grounding.grounding()
+        stats = self.engine.advance(
+            d.packed, d.dirty, gg, retracted=d.retracted_pairs
         )
-        self.reports.append(report)
+
+        # Commit: cluster updates and the published fixpoint mutate
+        # atomically so snapshot()/resolve() readers see a consistent
+        # state — either before or after this ingest, never mid-way.
+        with self._lock:
+            new = stats.result.matches.difference(prev_matches)
+            if stats.n_invalidated:
+                self.uf = UnionFind()
+                self._members = {}
+                new = stats.result.matches.gids
+            for g in new:
+                a, b = pairlib.split_gid(np.int64(g))
+                self._add_match(int(a), int(b))
+            self._fixpoint = stats.result.matches
+
+            report = IngestReport(
+                ids=ids,
+                n_entities=self.delta.n_entities,
+                n_neighborhoods=len(d.cover),
+                n_dirty=stats.n_dirty,
+                n_invalidated=stats.n_invalidated,
+                neighborhood_evals=stats.result.neighborhood_evals,
+                new_matches=int(len(new)),
+                replay_visits=d.replay_visits,
+                grounding_pair_visits=grounding_visits,
+                wall_time_s=time.perf_counter() - t0,
+            )
+            self.reports.append(report)
         return report
-
-    def _grounding(self, packed) -> GlobalGrounding:
-        return build_global_grounding(
-            packed.pair_levels,
-            self.delta.relations(),
-            self.weights,
-            boundary_relation=self.delta.boundary_relation,
-        )
 
     # -- query path -------------------------------------------------------
 
@@ -154,17 +220,55 @@ class ResolveService:
         self.uf.union(a, b)
         self._members[self.uf.find(a)] = ma | mb
 
-    def resolve(self, entity_id: int) -> np.ndarray:
-        """Cluster of ``entity_id`` under the current match fixpoint."""
-        eid = int(entity_id)
+    def snapshot(self) -> ResolveSnapshot:
+        """Freeze the current fixpoint for lock-free batched reads.
+
+        Cached between ingests: cluster state only mutates in the
+        ingest commit section (which bumps ``reports``), so a polling
+        reader pays the O(clusters) freeze once per ingest, not per
+        call.
+        """
+        with self._lock:
+            cached = self._snapshot_cache
+            if cached is not None and cached.n_ingests == len(self.reports):
+                return cached
+            members = {
+                r: np.asarray(sorted(m), dtype=np.int64)
+                for r, m in self._members.items()
+            }
+            root = {int(e): self.uf.find(int(e)) for e in self.uf.parent}
+            snap = ResolveSnapshot(
+                matches=self._fixpoint,
+                n_entities=self.delta.n_entities,
+                n_ingests=len(self.reports),
+                _root=root,
+                _members=members,
+            )
+            self._snapshot_cache = snap
+            return snap
+
+    def _resolve_locked(self, eid: int) -> np.ndarray:
         if eid not in self.uf.parent:
             return np.asarray([eid], dtype=np.int64)
         members = self._members[self.uf.find(eid)]
         return np.asarray(sorted(members), dtype=np.int64)
 
+    def resolve(self, entity_id: int) -> np.ndarray:
+        """Cluster of ``entity_id`` under the current match fixpoint."""
+        with self._lock:
+            return self._resolve_locked(int(entity_id))
+
+    def resolve_many(self, entity_ids) -> list[np.ndarray]:
+        """Batched resolve under a single lock acquisition — the whole
+        batch is answered against one consistent fixpoint, at O(alpha)
+        + O(|cluster|) per query (no full-state snapshot copy)."""
+        with self._lock:
+            return [self._resolve_locked(int(e)) for e in entity_ids]
+
     def clusters(self) -> list[np.ndarray]:
-        return [
-            np.asarray(sorted(m), dtype=np.int64)
-            for m in self._members.values()
-            if len(m) >= 2
-        ]
+        with self._lock:
+            return [
+                np.asarray(sorted(m), dtype=np.int64)
+                for m in self._members.values()
+                if len(m) >= 2
+            ]

@@ -22,7 +22,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.checkpoint.checkpointer import Checkpointer
 from repro.data.corpus import CorpusConfig, TokenStream

@@ -4,14 +4,13 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import pipeline
-from repro.core.cover import build_cover, is_total, pack_cover
+from repro.core.cover import build_cover, is_total
 from repro.core.metrics import true_pair_gids
 from repro.data.synthetic import SynthConfig, make_dataset
 from repro.launch import hlo_analysis as ha
@@ -123,7 +122,6 @@ def test_em_round_spmd_single_shard(k, seed):
     from repro.core.mln import MLNMatcher, PAPER_LEARNED
     from repro.core.parallel import make_em_mesh, run_parallel
     from repro.core.driver import run_smp
-    from tests.conftest import random_neighborhood_batch
 
     ds = make_dataset(SynthConfig.hepth(scale=0.01, seed=seed))
     packed, gg, _ = pipeline.prepare(ds.entities, ds.relations, k_max=8 * k)

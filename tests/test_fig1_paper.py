@@ -18,7 +18,7 @@ import pytest
 from repro.core import fig1
 from repro.core.driver import run_mmp, run_nomp, run_smp
 from repro.core.global_grounding import build_global_grounding
-from repro.core.mln import MLNMatcher, PEDAGOGICAL
+from repro.core.mln import PEDAGOGICAL
 from repro.core.types import MatchStore
 
 

@@ -15,7 +15,7 @@ pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import matcher as axioms
-from repro.core.mln import MLNMatcher, MLNWeights, PAPER_LEARNED, PEDAGOGICAL
+from repro.core.mln import MLNMatcher, PAPER_LEARNED, PEDAGOGICAL
 from repro.core.rules import RulesMatcher
 from tests.conftest import random_neighborhood_batch
 
@@ -143,8 +143,8 @@ def test_maximal_messages_are_maximal(seed):
     x, lab = m.run_with_messages(batch)
     P = lab.shape[1]
     valid = np.asarray(batch.pair_mask[0])
-    for l in set(lab[0][lab[0] < P].tolist()):
-        members = np.where((lab[0] == l) & valid & ~x[0])[0]
+    for lab_id in set(lab[0][lab[0] < P].tolist()):
+        members = np.where((lab[0] == lab_id) & valid & ~x[0])[0]
         if len(members) < 2:
             continue
         # evidence = one member -> all members must activate

@@ -12,14 +12,17 @@ synthetic corpora — that recall is what makes the cover equality hold.
 
 from __future__ import annotations
 
+import threading
+
 import numpy as np
 import pytest
 
 from repro.core import pipeline
 from repro.core.cover import is_total
 from repro.core.driver import run_mmp, run_smp
+from repro.core.global_grounding import build_global_grounding
 from repro.core.mln import MLNMatcher, PAPER_LEARNED
-from repro.data.synthetic import SynthConfig, arrival_stream, make_dataset, truncate
+from repro.data.synthetic import arrival_stream, truncate
 from repro.stream import ResolveService
 from repro.stream.index import LSHConfig, MinHashLSHIndex
 
@@ -263,3 +266,237 @@ def test_ingest_duplicate_id_rejected(stream_ds):
     svc.ingest(["john doe"], ids=[0])
     with pytest.raises(ValueError):
         svc.ingest(["john doe"], ids=[0])
+
+
+def test_ingest_self_loop_edge_rejected():
+    """Self-loop relation edges would make the incremental grounding
+    diverge from the batch build (adjacency_sets puts i in adj(i)), so
+    the ingest boundary rejects them outright."""
+    svc = ResolveService(scheme="smp")
+    with pytest.raises(ValueError, match="self-loop"):
+        svc.ingest(["john doe", "jane roe"], edges=np.asarray([[0, 0]]))
+
+
+# ---------------------------------------------------------------------------
+# O(dirty) ingest: incremental grounding + localized canopy replay
+# ---------------------------------------------------------------------------
+
+
+def test_localized_replay_equals_full_sweep(stream_ds):
+    """The replayed slice reproduces the full-id sweep bit-for-bit at
+    every ingest (the sweep decomposes over similarity components)."""
+    batches = arrival_stream(stream_ds, 5)
+    svc = ResolveService(scheme="smp")
+    for b in batches:
+        svc.ingest(b.names, b.edges, ids=b.ids)
+        inc = svc.delta.canopies()
+        full = svc.delta._canopies_full()
+        assert len(inc) == len(full)
+        for a, c in zip(inc, full):
+            assert np.array_equal(a, c)
+
+
+def test_incremental_grounding_equals_scratch(stream_ds):
+    """GroundingMaintainer.apply_delta reproduces build_global_grounding
+    exactly — gids, float32 unaries, and coupling arrays — per ingest."""
+    batches = arrival_stream(stream_ds, 4)
+    svc = ResolveService(scheme="mmp")
+    for b in batches:
+        svc.ingest(b.names, b.edges, ids=b.ids)
+        gi = svc.grounding.grounding()
+        gr = build_global_grounding(
+            svc.delta.packed.pair_levels, svc.delta.relations(), PAPER_LEARNED
+        )
+        assert np.array_equal(gi.gids, gr.gids)
+        assert np.array_equal(gi.u, gr.u)  # bitwise float32 equality
+        assert np.array_equal(gi.coup_p, gr.coup_p)
+        assert np.array_equal(gi.coup_q, gr.coup_q)
+        assert gi.w_co == gr.w_co
+
+
+def test_incremental_grounding_survives_retraction():
+    """Canopy re-split retracts candidate pairs; the patched grounding
+    must still equal the from-scratch build (regression for the
+    retraction branch of apply_delta)."""
+    names = [f"john smithsonian{chr(97 + i // 26)}{chr(97 + i % 26)}" for i in range(28)]
+    first = [i for i in range(28) if i % 2 == 0]
+    second = [i for i in range(28) if i % 2 == 1]
+    svc = ResolveService(scheme="mmp")
+    for batch in (first, second):
+        svc.ingest([names[i] for i in batch], ids=batch)
+        gi = svc.grounding.grounding()
+        gr = build_global_grounding(
+            svc.delta.packed.pair_levels, svc.delta.relations(), PAPER_LEARNED
+        )
+        assert np.array_equal(gi.gids, gr.gids)
+        assert np.array_equal(gi.u, gr.u)
+        assert np.array_equal(gi.coup_p, gr.coup_p)
+        assert np.array_equal(gi.coup_q, gr.coup_q)
+
+
+def _name_group(base: str, size: int) -> list[str]:
+    return [f"{base}{chr(97 + i)}" for i in range(size)]
+
+
+def test_ingest_cost_tracks_dirty_set():
+    """A micro-batch touching k of n entities must not trigger an O(n)
+    grounding rebuild or a full-id replay sweep: the op/visit counters
+    stay bounded by the touched similarity region, not the corpus."""
+    groups = [
+        _name_group("alessandro brunelleschi", 10),
+        _name_group("konstantin verkhovsky", 10),
+        _name_group("bartholomew fitzgerald", 10),
+    ]
+    svc = ResolveService(scheme="mmp")
+    svc.ingest([n for g in groups for n in g])
+    n_before = svc.delta.n_entities
+    pairs_before = len(svc.delta.packed.pair_levels)
+
+    # Arrival similar only to itself: a fresh, small similarity component.
+    r = svc.ingest(_name_group("evangelina montgomery", 5))
+    n_total = svc.delta.n_entities
+    total_pairs = len(svc.delta.packed.pair_levels)
+    assert n_before == 30 and n_total == 35
+    assert total_pairs > pairs_before  # the new component added candidates
+    # Replay swept only the new component (5 ids), not all 35.
+    assert r.replay_visits <= 6, r.replay_visits
+    # Grounding patched only the new component's pairs (10), not all.
+    assert 0 < r.grounding_pair_visits <= 12, r.grounding_pair_visits
+    assert r.grounding_pair_visits < total_pairs // 3
+
+    # Second probe: an arrival similar to ONE existing group re-sweeps
+    # that group's component only.
+    r2 = svc.ingest(["alessandro brunelleschiz"])
+    assert r2.replay_visits <= 12, r2.replay_visits  # group + arrival
+    assert r2.replay_visits < svc.delta.n_entities // 2
+
+
+def test_level_cache_bound_keeps_fixpoint(stream_ds, batch_smp):
+    """Bounding the Jaro-Winkler memo is pure eviction: the cover and
+    the fixpoint are unchanged, only recompute cost varies."""
+    svc = _stream(stream_ds, 4, scheme="smp", level_cache_max=64)
+    assert len(svc.delta.level_cache) <= 64
+    assert svc.matches.as_set() == batch_smp.matches.as_set()
+
+
+# ---------------------------------------------------------------------------
+# LSH bucket eviction (bounded serving memory)
+# ---------------------------------------------------------------------------
+
+
+def test_lsh_eviction_max_ids():
+    names = [f"author number {i:03d}" for i in range(120)]
+    idx = MinHashLSHIndex(LSHConfig(max_ids=50))
+    for lo in range(0, 120, 30):
+        idx.add(list(range(lo, lo + 30)), names[lo : lo + 30])
+    assert idx.n_indexed == 50
+    assert idx.n_evicted == 70
+    live = {e for band in idx.buckets for m in band.values() for e in m}
+    assert live == set(range(70, 120))  # oldest evicted, newest kept
+    # bucket tables hold no dangling entries for evicted ids
+    assert all(len(m) > 0 for band in idx.buckets for m in band.values())
+
+
+def test_lsh_eviction_ttl():
+    names = [f"author number {i:03d}" for i in range(80)]
+    idx = MinHashLSHIndex(LSHConfig(ttl_adds=2))
+    for lo in range(0, 80, 20):
+        idx.add(list(range(lo, lo + 20)), names[lo : lo + 20])
+    # 4 add calls, ttl 2: only the last two batches survive
+    assert idx.n_indexed == 40
+    live = {e for band in idx.buckets for m in band.values() for e in m}
+    assert live == set(range(40, 80))
+
+
+def test_lsh_bounded_tolerates_readd():
+    """Re-adding an id to a bounded index refreshes it instead of
+    corrupting the eviction bookkeeping (regression: duplicate _order
+    entries used to raise KeyError at eviction time)."""
+    idx = MinHashLSHIndex(LSHConfig(max_ids=2))
+    idx.add([1], ["anna lee"])
+    idx.add([1], ["anna lee"])
+    idx.add([2], ["ben cho"])
+    idx.add([3], ["cara diaz"])  # evicts id 1 cleanly
+    assert idx.n_indexed == 2
+    live = {e for band in idx.buckets for m in band.values() for e in m}
+    assert live == {2, 3}
+
+
+def test_lsh_unbounded_by_default():
+    names = [f"author number {i:03d}" for i in range(60)]
+    idx = MinHashLSHIndex()
+    for lo in range(0, 60, 20):
+        idx.add(list(range(lo, lo + 20)), names[lo : lo + 20])
+    assert idx.n_indexed == 60 and idx.n_evicted == 0
+
+
+# ---------------------------------------------------------------------------
+# Snapshot / batched resolve: reads don't race ingests
+# ---------------------------------------------------------------------------
+
+
+def _cluster_state(clusters) -> frozenset:
+    return frozenset(tuple(int(x) for x in c) for c in clusters)
+
+
+def test_snapshot_consistent_under_concurrent_ingest(stream_ds):
+    """A reader thread snapshotting during ingests only ever observes a
+    committed fixpoint — one of the states reached after some prefix of
+    the ingest sequence, never a half-applied cluster update."""
+    batches = arrival_stream(stream_ds, 5)
+    ref = ResolveService(scheme="smp")
+    expected = {_cluster_state([])}
+    for b in batches:
+        ref.ingest(b.names, b.edges, ids=b.ids)
+        expected.add(_cluster_state(ref.clusters()))
+
+    svc = ResolveService(scheme="smp")
+    seen: list[frozenset] = []
+    stop = threading.Event()
+
+    def reader():
+        while not stop.is_set():
+            seen.append(_cluster_state(svc.snapshot().clusters()))
+
+    t = threading.Thread(target=reader)
+    t.start()
+    try:
+        for b in batches:
+            svc.ingest(b.names, b.edges, ids=b.ids)
+    finally:
+        stop.set()
+        t.join()
+    assert seen, "reader thread never ran"
+    bad = [s for s in set(seen) if s not in expected]
+    assert not bad, f"reader observed {len(bad)} non-fixpoint states"
+    assert _cluster_state(svc.snapshot().clusters()) == _cluster_state(
+        ref.clusters()
+    )
+
+
+def test_snapshot_immutable_across_ingests(stream_ds):
+    batches = arrival_stream(stream_ds, 4)
+    svc = ResolveService(scheme="smp")
+    for b in batches[:2]:
+        svc.ingest(b.names, b.edges, ids=b.ids)
+    snap = svc.snapshot()
+    frozen = _cluster_state(snap.clusters())
+    n_matches = len(snap.matches)
+    for b in batches[2:]:
+        svc.ingest(b.names, b.edges, ids=b.ids)
+    assert _cluster_state(snap.clusters()) == frozen
+    assert len(snap.matches) == n_matches
+    assert snap.n_ingests == 2
+    # the live service moved on
+    assert len(svc.matches) >= n_matches
+
+
+def test_resolve_many_matches_resolve(stream_ds):
+    svc = _stream(stream_ds, 4, scheme="smp")
+    ids = list(range(0, svc.delta.n_entities, 3)) + [10_000_000]
+    batched = svc.resolve_many(ids)
+    for eid, got in zip(ids, batched):
+        assert np.array_equal(got, svc.resolve(eid))
+    snap = svc.snapshot()
+    for eid in ids:
+        assert np.array_equal(snap.resolve(eid), svc.resolve(eid))

@@ -9,7 +9,6 @@ import os
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.checkpoint.checkpointer import Checkpointer
 from repro.configs.base import smoke_config
@@ -35,7 +34,7 @@ def _mk_trainer(tmp, steps, ckpt_every=4, microbatches=1):
 def test_train_loss_decreases(tmp_path):
     t = _mk_trainer(str(tmp_path / "a"), steps=12)
     out = t.run()
-    losses = [l for _, l in out["losses"]]
+    losses = [loss for _, loss in out["losses"]]
     assert losses[-1] < losses[0], losses
 
 
