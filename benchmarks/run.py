@@ -1,7 +1,7 @@
 """Benchmark harness: one module per paper table/figure.
 
-``python -m benchmarks.run [--smoke] [name ...]`` — default runs all.
-Output is CSV-ish blocks, one per artifact.
+``python -m benchmarks.run [--smoke] [--json] [--json-dir=DIR] [name ...]``
+— default runs all.  Output is CSV-ish blocks, one per artifact.
 
 ``--smoke`` shrinks every benchmark to a CI-sized instance (tiny
 corpora, fewer shapes) so the benchmark modules are exercised end to
@@ -10,10 +10,18 @@ meaningless at that scale; the point is that the modules can't silently
 rot.  It must be handled here, before any benchmark module (and hence
 ``benchmarks.common``) is imported, because the scale factors are read
 from the environment at import time.
+
+``--json`` additionally writes the structured results of the modules
+that return them (``table1_parallel`` -> ``BENCH_parallel.json``,
+``stream_throughput`` -> ``BENCH_stream.json``) into ``--json-dir``
+(default: the repo root).  The committed copies are the perf baseline
+trajectory; CI regenerates them at smoke scale and fails if the
+per-round host dispatch counts regress (``benchmarks.check_bench``).
 """
 
 from __future__ import annotations
 
+import json
 import os
 import sys
 import time
@@ -33,12 +41,24 @@ MODULES = [
     ("kernels_bench", "Pallas-kernel roofline microbench"),
 ]
 
+JSON_FILES = {
+    "table1_parallel": "BENCH_parallel.json",
+    "stream_throughput": "BENCH_stream.json",
+}
+
 
 def main() -> None:
     args = [a for a in sys.argv[1:]]
     if "--smoke" in args:
         args = [a for a in args if a != "--smoke"]
         os.environ["BENCH_SMOKE"] = "1"
+    emit_json = "--json" in args
+    args = [a for a in args if a != "--json"]
+    json_dir = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    for a in list(args):
+        if a.startswith("--json-dir="):
+            json_dir = a.split("=", 1)[1]
+            args.remove(a)
     want = set(args)
     unknown = want - {name for name, _ in MODULES}
     if unknown:
@@ -49,8 +69,15 @@ def main() -> None:
         print(f"\n==== {name}: {desc} ====", flush=True)
         t0 = time.perf_counter()
         mod = __import__(f"benchmarks.{name}", fromlist=["main"])
-        mod.main()
+        result = mod.main()
         print(f"==== {name} done in {time.perf_counter()-t0:.1f}s ====", flush=True)
+        if emit_json and result is not None and name in JSON_FILES:
+            os.makedirs(json_dir, exist_ok=True)
+            path = os.path.join(json_dir, JSON_FILES[name])
+            with open(path, "w") as f:
+                json.dump(result, f, indent=2, sort_keys=True)
+                f.write("\n")
+            print(f"wrote {path}", flush=True)
 
 
 if __name__ == "__main__":

@@ -12,9 +12,20 @@ mean/max candidate pairs visited per ``GroundingMaintainer.apply_delta``
 against the total candidate-pair count — the O(dirty) claim for the
 grounding, measurable per ingest (a from-scratch rebuild would visit
 every pair every time).
+
+A third block measures the serving read path: ``snapshot()`` /
+``resolve_many()`` QPS from N concurrent reader threads while the whole
+corpus is being ingested — readers only ever observe committed
+fixpoints (the snapshot is cached between ingests), so read throughput
+should not collapse under ingest load.
 """
 
 from __future__ import annotations
+
+import threading
+import time
+
+import numpy as np
 
 from benchmarks.common import SMOKE, hepth, row, timed
 from repro.core import pipeline
@@ -25,6 +36,10 @@ from repro.stream import ResolveService
 
 BATCH_SIZES = (8, 32) if SMOKE else (16, 64, 256)
 GROUNDING_BATCH_SIZES = (32,) if SMOKE else (64,)
+READER_COUNTS = (2,) if SMOKE else (1, 4)
+READER_BATCH_SIZE = 64  # ids per resolve_many() call
+READER_INGEST_BATCH = 8 if SMOKE else 32  # keep several ingest commits in flight
+READER_MAX_INGESTS = 3  # bound the contention window per cell
 
 
 def _scratch_evals(ds, batches) -> int:
@@ -42,9 +57,53 @@ def _mean(xs) -> float:
     return sum(xs) / max(len(xs), 1)
 
 
-def main():
+def _reader_qps(ds, n_readers: int) -> dict:
+    """resolve_many() QPS from reader threads under concurrent ingest."""
+    batches = arrival_stream(ds, batch_size=READER_INGEST_BATCH)
+    svc = ResolveService(scheme="smp")
+    svc.ingest(batches[0].names, batches[0].edges, ids=batches[0].ids)
+    stop = threading.Event()
+    counts = [0] * n_readers
+
+    def reader(i: int) -> None:
+        rng = np.random.default_rng(i)
+        done = 0
+        while not stop.is_set():
+            snap = svc.snapshot()
+            ids = rng.integers(0, max(snap.n_entities, 1), size=READER_BATCH_SIZE)
+            snap.resolve_many(ids)
+            done += READER_BATCH_SIZE
+            # pace the reader like a network client would be paced — a
+            # GIL-saturating spin loop would measure starvation, not QPS
+            time.sleep(0.0005)
+        counts[i] = done
+
+    threads = [threading.Thread(target=reader, args=(i,)) for i in range(n_readers)]
+    for t in threads:
+        t.start()
+
+    def _ingest_rest():
+        for b in batches[1 : 1 + READER_MAX_INGESTS]:
+            svc.ingest(b.names, b.edges, ids=b.ids)
+
+    _, ingest_s = timed(_ingest_rest)
+    stop.set()
+    for t in threads:
+        t.join()
+    queries = sum(counts)
+    return {
+        "n_readers": n_readers,
+        "ingest_s": round(ingest_s, 3),
+        "queries": queries,
+        "qps_total": round(queries / max(ingest_s, 1e-9), 1),
+    }
+
+
+def main() -> dict:
     ds = hepth()
     n = ds.n_refs
+    out = {"benchmark": "stream_throughput", "dataset": "hepth",
+           "smoke": SMOKE, "throughput": [], "grounding": [], "readers": []}
     row("# stream_throughput: hepth, scheme=smp")
     row(
         "batch_size,n_batches,entities,ingest_s,entities_per_s,"
@@ -78,6 +137,16 @@ def main():
             scratch,
             f"{scratch / max(svc.total_evals, 1):.1f}x",
         )
+        out["throughput"].append({
+            "batch_size": bs,
+            "entities": n,
+            "ingest_s": round(t, 3),
+            "entities_per_s": round(n / t, 1),
+            "dirty_frac": round(dirty_frac, 4),
+            "replay_frac": round(replay_frac, 4),
+            "stream_evals": int(svc.total_evals),
+            "scratch_evals": int(scratch),
+        })
 
     row("")
     row("# stream_throughput: incremental grounding cost, scheme=mmp")
@@ -100,6 +169,21 @@ def main():
             max(visits),
             f"{_mean(visits) / max(total_pairs, 1):.4f}",
         )
+        out["grounding"].append({
+            "batch_size": bs,
+            "total_pairs": int(total_pairs),
+            "visits_mean": round(_mean(visits), 1),
+            "visits_max": int(max(visits)),
+        })
+
+    row("")
+    row("# stream_throughput: resolve_many QPS under concurrent ingest")
+    row("n_readers,ingest_s,queries,qps_total")
+    for nr in READER_COUNTS:
+        stats = _reader_qps(ds, nr)
+        row(nr, stats["ingest_s"], stats["queries"], stats["qps_total"])
+        out["readers"].append(stats)
+    return out
 
 
 if __name__ == "__main__":

@@ -271,6 +271,11 @@ class PackedCover:
     # populated only when packing with a row_cache; the streaming path
     # diffs them across ingests to find dirty neighborhoods.
     row_keys: list[tuple] | None = None
+    # memoized slot-incidence CSR (gid -> neighborhoods), see
+    # slot_incidence(); a PackedCover is immutable once built.
+    _slot_csr: tuple[np.ndarray, np.ndarray, np.ndarray] | None = dataclasses.field(
+        default=None, repr=False, compare=False
+    )
 
     @property
     def num_neighborhoods(self) -> int:
@@ -297,6 +302,56 @@ class PackedCover:
                 if n in nb:
                     out.add(n)
         return sorted(out)
+
+    def slot_incidence(self) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """CSR incidence: candidate pair gid -> neighborhoods holding it
+        as a *candidate slot* (``pair_mask`` true).
+
+        Returns ``(gids, indptr, nbhd)``: sorted unique gids, and for
+        gid ``gids[i]`` the neighborhoods ``nbhd[indptr[i]:indptr[i+1]]``.
+        This is the structure the round-parallel driver re-activates
+        from: it is a subset of :meth:`neighborhoods_of_pairs`
+        (endpoint incidence), and the difference is inert — a
+        neighborhood holding both endpoints but not the candidate slot
+        projects no evidence from that pair, so re-evaluating it can
+        produce nothing new (its fixpoint contribution is unchanged).
+        Built vectorized from the packed bins and memoized.
+        """
+        if self._slot_csr is None:
+            gid_parts: list[np.ndarray] = []
+            nb_parts: list[np.ndarray] = []
+            for k, nb in self.bins.items():
+                mask = nb.pair_mask & (nb.pair_gid >= 0)
+                rows, _ = np.nonzero(mask)
+                gid_parts.append(nb.pair_gid[mask])
+                nb_parts.append(self.bin_rows[k][rows])
+            if gid_parts:
+                flat_gid = np.concatenate(gid_parts)
+                flat_nb = np.concatenate(nb_parts)
+                order = np.argsort(flat_gid, kind="stable")
+                flat_gid, flat_nb = flat_gid[order], flat_nb[order]
+                uniq, starts = np.unique(flat_gid, return_index=True)
+                indptr = np.append(starts, len(flat_gid))
+            else:
+                uniq = np.zeros(0, dtype=np.int64)
+                indptr = np.zeros(1, dtype=np.int64)
+                flat_nb = np.zeros(0, dtype=np.int64)
+            self._slot_csr = (uniq, indptr, flat_nb)
+        return self._slot_csr
+
+    def neighborhoods_of_slot_pairs(self, gids: np.ndarray) -> list[int]:
+        """Neighborhoods with any of ``gids`` as a candidate slot (sorted)."""
+        uniq, indptr, nbhd = self.slot_incidence()
+        if not len(gids) or not len(uniq):
+            return []
+        g = np.asarray(gids, dtype=np.int64)
+        pos = np.searchsorted(uniq, g)
+        pos = np.clip(pos, 0, len(uniq) - 1)
+        pos = pos[uniq[pos] == g]
+        if not len(pos):
+            return []
+        hits = np.concatenate([nbhd[indptr[i] : indptr[i + 1]] for i in pos])
+        return [int(n) for n in np.unique(hits)]
 
 
 def pack_cover(

@@ -30,6 +30,14 @@ class EMResult:
     messages_promoted: int
     wall_time_s: float
     history: list[int] = dataclasses.field(default_factory=list)
+    # Host->device jitted dispatches issued by the round engine — the
+    # quantity the device-resident driver collapses from O(bins x rounds)
+    # to O(bins + quiescence points).  Sequential drivers count one
+    # dispatch per neighborhood evaluation.
+    dispatches: int = 0
+    # Host-visible full rounds of the fused engine (the quiescence
+    # points): every other round ran inside a fused greedy segment.
+    full_rounds: int = 0
 
 
 def _eval_neighborhood(matcher, packed, n, m_plus, with_messages):
@@ -60,7 +68,8 @@ def run_nomp(packed: PackedCover, matcher: TypeIMatcher) -> EMResult:
         nb, x, _ = _eval_neighborhood(matcher, packed, n, MatchStore(), False)
         m_plus = m_plus.union(_new_gids(nb.pair_gid[0], x, m_plus))
         evals += 1
-    return EMResult(m_plus, evals, 1, 0, 0, time.perf_counter() - t0)
+    return EMResult(m_plus, evals, 1, 0, 0, time.perf_counter() - t0,
+                    dispatches=evals)
 
 
 def run_smp(
@@ -102,7 +111,8 @@ def run_smp(
                 if m != n and not in_list[m]:
                     worklist.append(m)
                     in_list[m] = True
-    return EMResult(m_plus, evals, 1, 0, 0, time.perf_counter() - t0)
+    return EMResult(m_plus, evals, 1, 0, 0, time.perf_counter() - t0,
+                    dispatches=evals)
 
 
 # ---------------------------------------------------------------------------
@@ -115,6 +125,11 @@ class MessagePool:
 
     def __init__(self):
         self.parent: dict[int, int] = {}  # union-find over gids
+        # groups() memo: _promote replays the partition once per
+        # promotion sweep of every round — rebuilding it from the
+        # union-find each time was O(|T|) per pass.  Any mutation
+        # (add_message / discard) invalidates.
+        self._groups: list[np.ndarray] | None = None
 
     def _find(self, g: int) -> int:
         p = self.parent.setdefault(g, g)
@@ -128,6 +143,7 @@ class MessagePool:
         """T <- (T u {M})* : union-find merge implements Prop. 3."""
         if len(gids) < 2:
             return
+        self._groups = None
         r0 = self._find(gids[0])
         for g in gids[1:]:
             r = self._find(g)
@@ -135,10 +151,17 @@ class MessagePool:
                 self.parent[r] = r0
 
     def groups(self) -> list[np.ndarray]:
-        by_root: dict[int, list[int]] = {}
-        for g in list(self.parent.keys()):
-            by_root.setdefault(self._find(g), []).append(g)
-        return [np.asarray(sorted(v), dtype=np.int64) for v in by_root.values() if len(v) >= 2]
+        """Current disjoint groups (memoized; callers must not mutate)."""
+        if self._groups is None:
+            by_root: dict[int, list[int]] = {}
+            for g in list(self.parent.keys()):
+                by_root.setdefault(self._find(g), []).append(g)
+            self._groups = [
+                np.asarray(sorted(v), dtype=np.int64)
+                for v in by_root.values()
+                if len(v) >= 2
+            ]
+        return self._groups
 
     def discard(self, gids) -> None:
         """Remove gids from the pool, keeping the remaining group structure.
@@ -154,23 +177,47 @@ class MessagePool:
             return
         groups = self.groups()
         self.parent = {}
+        self._groups = None
         for grp in groups:
             self.add_message([int(g) for g in grp if int(g) not in drop])
 
 
-def _labels_to_messages(nb_gid: np.ndarray, lab: np.ndarray, m_plus) -> list[list[int]]:
-    """Component labels (P,) -> groups of >= 2 unmatched global pairs."""
-    P = lab.shape[0]
-    msgs: dict[int, list[int]] = {}
-    for p in range(P):
-        lab_p = int(lab[p])
-        if lab_p >= P:
-            continue
-        g = int(nb_gid[p])
-        if g < 0 or g in m_plus:
-            continue
-        msgs.setdefault(lab_p, []).append(g)
-    return [v for v in msgs.values() if len(v) >= 2]
+def _labels_to_messages(
+    nb_gid: np.ndarray,
+    lab: np.ndarray,
+    m_plus,
+    row_mask: np.ndarray | None = None,
+) -> list[list[int]]:
+    """Component labels -> groups of >= 2 unmatched global pairs.
+
+    Batched: ``nb_gid``/``lab`` may be ``(P,)`` (one neighborhood, the
+    sequential driver) or ``(B, P)`` (a whole round's bin, the parallel
+    driver).  The per-slot Python walk is replaced by numpy segment ops
+    keyed on ``(row, label)``; ``row_mask`` restricts extraction to the
+    rows the round actually evaluated.
+    """
+    nb_gid = np.atleast_2d(np.asarray(nb_gid))
+    lab = np.atleast_2d(np.asarray(lab))
+    B, P = lab.shape
+    ok = (lab < P) & (nb_gid >= 0)
+    if row_mask is not None:
+        ok &= np.atleast_1d(row_mask)[:, None]
+    if not ok.any():
+        return []
+    rows, _ = np.nonzero(ok)
+    gids = nb_gid[ok]
+    labs = lab[ok].astype(np.int64)
+    unmatched = ~np.isin(gids, m_plus.gids)
+    if not unmatched.any():
+        return []
+    key = rows[unmatched] * np.int64(P) + labs[unmatched]
+    gids = gids[unmatched]
+    order = np.argsort(key, kind="stable")
+    key, gids = key[order], gids[order]
+    _, starts, counts = np.unique(key, return_index=True, return_counts=True)
+    return [
+        gids[s : s + c].tolist() for s, c in zip(starts, counts) if c >= 2
+    ]
 
 
 def _promote(pool: MessagePool, gg: GlobalGrounding, m_plus: MatchStore):
@@ -260,5 +307,6 @@ def run_mmp(
                     worklist.append(m)
                     in_list[m] = True
     return EMResult(
-        m_plus, evals, 1, emitted, promoted_total, time.perf_counter() - t0
+        m_plus, evals, 1, emitted, promoted_total, time.perf_counter() - t0,
+        dispatches=evals,
     )

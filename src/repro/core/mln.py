@@ -191,6 +191,35 @@ def _closure(u, C, ev_pos, ev_neg, valid):
     return x
 
 
+def closure_batch(u, C, ev_pos, ev_neg, valid):
+    """Monotone greedy closure for a whole bin in one ``while_loop``.
+
+    All arguments are batched ``(B, P)`` / ``(B, P, P)``; each iteration
+    is a single batched conditional-delta sweep (``icm_ops.sweep_batch``)
+    and the loop runs until *every* neighborhood is converged — exactly
+    the semantics of ``vmap(_closure)`` (the extra iterations a converged
+    lane sees are idempotent: the closure is monotone), but with one
+    MXU-shaped contraction per iteration instead of B lane-wise sweeps.
+    This is the round body the fused device-resident engine
+    (:mod:`repro.core.parallel`) keeps inside its multi-round loop.
+    """
+    x0 = ev_pos & valid & ~ev_neg
+
+    def cond(state):
+        _, changed = state
+        return changed
+
+    def body(state):
+        x, _ = state
+        delta = icm_ops.sweep_batch(u, C, x.astype(jnp.float32))
+        new = (delta >= -TIE_EPS) & valid & ~ev_neg
+        x2 = x | new | (ev_pos & valid)
+        return x2, jnp.any(x2 != x)
+
+    x, _ = jax.lax.while_loop(cond, body, (x0, jnp.bool_(True)))
+    return x
+
+
 def _entailment_matrix(u, C, x, ev_neg, valid):
     """X[s, q] = 1 iff q in closure(x U {s}), for every seed pair s.
 
@@ -257,7 +286,8 @@ def _peel_and_promote(u, C, x, lab, valid, ev_neg):
     xf = x.astype(jnp.float32)
     base = u + C @ xf  # (P,) marginal from already-active set
 
-    def peel_body(i, G):
+    def peel_body(state):
+        G, i, _ = state
         Gf = G.astype(jnp.float32)
         # marginal of member p of group l: base_p + (C @ s_l)_p
         marg = base[None, :] + Gf @ C  # (P_l, P)
@@ -266,12 +296,24 @@ def _peel_and_promote(u, C, x, lab, valid, ev_neg):
         worst = jnp.argmin(jnp.where(drop, marg, jnp.inf), axis=1)
         any_drop = jnp.any(drop, axis=1)
         onehot = jax.nn.one_hot(worst, P, dtype=bool)
-        return G & ~(onehot & any_drop[:, None])
+        return G & ~(onehot & any_drop[:, None]), i + 1, jnp.any(any_drop)
 
     # Peeling drops at most one member per group per iteration; component
-    # size is bounded by the neighborhood entity count k ~ sqrt(2P).
+    # size is bounded by the neighborhood entity count k ~ sqrt(2P).  The
+    # loop exits as soon as an iteration drops nothing (further
+    # iterations are idempotent, so this is exactly the bounded-unroll
+    # result) — on an already-converged group matrix the peel costs ONE
+    # (P, P) matmul instead of ~sqrt(2P) of them, which is what makes
+    # quiescence-check rounds cheap.
     peel_iters = int(np.ceil(np.sqrt(2 * P))) + 2
-    G = jax.lax.fori_loop(0, peel_iters, peel_body, G0)
+
+    def peel_cond(state):
+        _, i, changed = state
+        return changed & (i < peel_iters)
+
+    G, _, _ = jax.lax.while_loop(
+        peel_cond, peel_body, (G0, jnp.int32(0), jnp.bool_(True))
+    )
 
     Gf = G.astype(jnp.float32)
     lin = Gf @ base  # (P_l,)
@@ -329,8 +371,7 @@ def _jitted_score():
 
 @functools.lru_cache(maxsize=None)
 def _jitted_closure_only():
-    batched = jax.vmap(_closure, in_axes=(0, 0, 0, 0, 0))
-    return jax.jit(batched)
+    return jax.jit(closure_batch)
 
 
 # ---------------------------------------------------------------------------

@@ -1,36 +1,64 @@
-"""Round-parallel SPMD message passing (paper §6.3) on a JAX mesh.
+"""Device-resident round-parallel SPMD message passing (paper §6.3).
 
 The paper parallelizes the framework in *rounds*: every active
 neighborhood is evaluated in parallel (Hadoop Map), the new evidence is
 collected and broadcast (Reduce), and the next round's active set is
-derived.  Here one round is a single SPMD program:
+derived.  Early versions of this module paid O(corpus) host/device
+overhead *per round* — re-grounding the MLN on identical static inputs,
+one jitted dispatch per size-bin per round (recompiled whenever the
+active-row count changed), and Python loops over pair slots to collect
+messages.  The engine is now device-resident end to end; the host/device
+boundary sits exactly at the *quiescence points*:
 
-  * the active neighborhood batch is sharded over the mesh's data axes
-    (``shard_map``), each shard running the batched matcher locally;
-  * the *message exchange* is a *match bitset* over the global candidate
-    pair universe: each shard scatters its matched pairs into a length-
-    ``Np`` boolean vector and a ``lax.psum`` (logical OR) makes the
-    round's evidence replicated on every shard — the paper's disk
-    shuffle becomes one all-reduce of ``Np`` bits;
-  * host code between rounds only does the worklist bookkeeping
-    (which neighborhoods became active) and — for MMP — the maximal
-    message pool and the step-7 promotion check, exactly as in the
-    sequential driver (Algorithm 3 keeps those on the coordinator).
+* **Grounding cache** (:class:`GroundingCache`): the grounded structures
+  (``u``/``u_raw``/``C``/``valid`` for the MLN, ``lev``/``n_shared``/
+  ``link``/``valid`` for RULES) are computed once per ``(matcher, bin)``
+  and kept on device across rounds.  Rows are fingerprinted by the raw
+  bytes of the tensors the grounding reads, so the streaming engine
+  reuses cached bins across ingests and *splices* only the dirty rows'
+  freshly grounded arrays into place (``rows_ground`` counts exactly the
+  recomputed rows).
 
-Consistency (Thms. 2/4) guarantees the parallel schedule reaches the
-same fixpoint as the sequential drivers; ``tests/test_parallel.py``
-asserts bit-for-bit equality.
+* **Fused multi-round closure** (:func:`build_fused_fn`): rounds that
+  touch no host state — all NO-MP/SMP rounds, and MMP's ``fast_rounds``
+  greedy re-activation rounds — run inside a single jitted
+  ``jax.lax.while_loop``.  The loop body evaluates every bin (batched,
+  ``shard_map``-sharded over the mesh's data axes), ORs the matched
+  pairs into a replicated match bitset (one ``psum`` per round — the
+  paper's disk shuffle), and derives the next round's active set *on
+  device* from the ``uidx`` slot-incidence of the newly set bits.  The
+  bitset is donated into the call and carried by the loop, so the
+  multi-round closure is ONE host dispatch instead of
+  O(bins x rounds).
+
+* **Quiescence points**: only MMP's maximal-message bookkeeping
+  (pool merge, step-7 promotion — Algorithm 3 keeps those on the
+  coordinator) runs on the host.  Full maximal-message rounds dispatch
+  once per bin at the *full* bin shape with an active-row mask (no
+  per-round recompiles), and component labels are turned into messages
+  by batched numpy segment ops (``driver._labels_to_messages``).
+
+Consistency (Thms. 2/4) guarantees the device schedule reaches the same
+fixpoint as the sequential drivers: the matcher is monotone, evaluating
+a non-incident neighborhood is idempotent (its evidence projection is
+unchanged), and deferring step-7 promotion to quiescence points
+composes monotone operators whose least fixpoint is schedule-invariant.
+``tests/test_parallel_rounds.py`` asserts bit-for-bit equality for all
+three schemes, ``fast_rounds`` on and off, against both the sequential
+drivers and the legacy per-round host loop (kept under ``fused=False``
+as the differential baseline that ``benchmarks/table1_parallel.py``
+measures the speedup against).
 
 The per-round SPMD function is exposed via :func:`build_round_fn` so the
 multi-pod dry-run can ``.lower().compile()`` the EM round on the
-production mesh (it is the paper's technique — one of the three §Perf
-hillclimb cells).
+production mesh.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import functools
+import hashlib
 import time
 
 import jax
@@ -43,16 +71,400 @@ from repro.core import pairs as pairlib
 from repro.core.cover import PackedCover
 from repro.core.driver import EMResult, MessagePool, _labels_to_messages, _promote
 from repro.core.global_grounding import GlobalGrounding
-from repro.core.mln import MLNMatcher, MLNWeights, _infer_one, ground
-from repro.core.rules import RulesMatcher, _rules_fixpoint
+from repro.core.mln import (
+    MLNMatcher,
+    MLNWeights,
+    _infer_one,
+    closure_batch,
+    ground,
+    ground_structure,
+)
+from repro.core.rules import RulesMatcher, _rules_fixpoint, rules_fixpoint_batch
 from repro.core.types import MatchStore, NeighborhoodBatch
 from repro.kernels import common as kcommon
+
+_HISTORY_CAP = 256  # fused-loop per-round active-count log capacity
 
 
 def make_em_mesh(n_shards: int | None = None, axis: str = "data") -> Mesh:
     devs = jax.devices()
     n = n_shards or len(devs)
     return jax.make_mesh((n,), (axis,), devices=devs[:n])
+
+
+# ---------------------------------------------------------------------------
+# Device-resident grounding cache
+# ---------------------------------------------------------------------------
+
+
+def _matcher_cache_key(matcher) -> tuple[str, MLNWeights | None]:
+    if isinstance(matcher, RulesMatcher):
+        return ("rules", None)
+    if isinstance(matcher, MLNMatcher):
+        return ("mln", matcher.weights)
+    raise TypeError(f"unsupported matcher for parallel rounds: {matcher!r}")
+
+
+@functools.lru_cache(maxsize=None)
+def _ground_bin_fn(kind: str, weights: MLNWeights | None):
+    """Jitted bin grounding: raw row tensors -> device-resident arrays.
+
+    Returns a uniform 4-tuple with ``valid`` last: MLN bins get
+    ``(u, u_raw, C, valid)``, RULES bins ``(lev, n_shared, link, valid)``.
+    """
+
+    def f(entity_mask, coauthor, sim_level, pair_mask):
+        batch = NeighborhoodBatch(
+            entity_ids=entity_mask,  # grounding reads only shapes/masks
+            entity_mask=entity_mask,
+            coauthor=coauthor,
+            sim_level=sim_level,
+            pair_gid=pair_mask,
+            pair_mask=pair_mask,
+        )
+        if kind == "rules":
+            lev, valid, n_shared, link = ground_structure(batch)
+            return lev, n_shared, link, valid
+        g = ground(batch, weights)
+        return g.u, g.u_raw, g.C, g.valid
+
+    return jax.jit(f)
+
+
+def _pow2(n: int) -> int:
+    return 1 << max(n - 1, 0).bit_length() if n else 1
+
+
+class GroundingCache:
+    """Per-bin device-resident grounded structures with splice updates.
+
+    ``get`` fingerprints every row by the packer's row key when the
+    cover was packed with a ``row_cache`` (``PackedCover.row_keys`` —
+    the ``(k, members, intra-edges)`` tuple that by contract changes
+    whenever anything feeding the row tensors changes; the streaming
+    path always has these, so its per-ingest signature sweep is a tuple
+    gather, not a serialization pass), falling back to a fixed-size
+    blake2b digest of the raw row bytes for covers packed without a
+    row cache.  An unchanged bin is served from cache outright; a bin
+    whose rows moved/changed is *spliced* — unchanged rows are gathered
+    from the cached device arrays, only fresh rows are re-grounded (the
+    O(B * P^2 * k) einsums), padded to a power of two to bound compile
+    variants.  The streaming engine holds one cache per service so
+    ingests that leave a bin untouched never re-ground it; call
+    :meth:`invalidate` to drop everything (e.g. after changing matcher
+    weights in place).
+
+    Counters (read by tests and ``IngestReport``):
+      ``ground_calls``  grounding dispatches issued
+      ``rows_ground``   rows whose grounding was actually recomputed
+      ``bin_hits``      bins served without re-grounding any row
+    """
+
+    def __init__(self):
+        self._bins: dict[tuple, tuple[tuple, tuple]] = {}
+        self.ground_calls = 0
+        self.rows_ground = 0
+        self.bin_hits = 0
+
+    def invalidate(self) -> None:
+        self._bins.clear()
+
+    @staticmethod
+    def _row_sigs(bt: _BinTensors, row_keys: tuple | None = None) -> tuple:
+        if row_keys is not None:
+            return row_keys
+        return tuple(
+            hashlib.blake2b(
+                bt.entity_mask[r].tobytes()
+                + bt.coauthor[r].tobytes()
+                + bt.sim_level[r].tobytes()
+                + bt.pair_mask[r].tobytes(),
+                digest_size=16,
+            ).digest()
+            for r in range(bt.entity_mask.shape[0])
+        )
+
+    def _ground_rows(self, fn, bt: _BinTensors, rows: np.ndarray):
+        """Ground a row subset, padded to a power of two (inert rows)."""
+        n = len(rows)
+        pad = _pow2(n) - n
+        em = bt.entity_mask[rows]
+        co = bt.coauthor[rows]
+        lv = bt.sim_level[rows]
+        pm = bt.pair_mask[rows]
+        if pad:
+            em = np.concatenate([em, np.zeros((pad,) + em.shape[1:], em.dtype)])
+            co = np.concatenate([co, np.zeros((pad,) + co.shape[1:], co.dtype)])
+            lv = np.concatenate([lv, np.zeros((pad,) + lv.shape[1:], lv.dtype)])
+            pm = np.concatenate([pm, np.zeros((pad,) + pm.shape[1:], pm.dtype)])
+        out = fn(em, co, lv, pm)
+        self.ground_calls += 1
+        self.rows_ground += n
+        return tuple(a[:n] for a in out) if pad else out
+
+    def get(self, matcher_key, k: int, bt: _BinTensors,
+            row_keys: tuple | None = None) -> tuple:
+        key = (matcher_key, k)
+        sigs = self._row_sigs(bt, row_keys)
+        cached = self._bins.get(key)
+        if cached is not None and cached[0] == sigs:
+            self.bin_hits += 1
+            return cached[1]
+        fn = _ground_bin_fn(*matcher_key)
+        if cached is None:
+            arrays = self._ground_rows(fn, bt, np.arange(len(sigs)))
+        else:
+            old_sigs, old_arrays = cached
+            pos_of = {s: i for i, s in enumerate(old_sigs)}
+            src = np.asarray([pos_of.get(s, -1) for s in sigs], dtype=np.int64)
+            fresh = np.where(src < 0)[0]
+            gather = jnp.asarray(np.where(src >= 0, src, 0))
+            arrays = tuple(a[gather] for a in old_arrays)
+            if len(fresh):
+                sub = self._ground_rows(fn, bt, fresh)
+                at = jnp.asarray(fresh)
+                arrays = tuple(
+                    a.at[at].set(s) for a, s in zip(arrays, sub)
+                )
+            else:
+                self.bin_hits += 1
+        self._bins[key] = (sigs, arrays)
+        return arrays
+
+
+# ---------------------------------------------------------------------------
+# Bin preparation (host side, once per cover)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class _BinTensors:
+    """Per-bin device-ready tensors (host copies)."""
+
+    entity_mask: np.ndarray
+    coauthor: np.ndarray
+    sim_level: np.ndarray
+    pair_mask: np.ndarray
+    uidx: np.ndarray  # (B, P) int32 universe index, Np where invalid
+    pair_gid: np.ndarray
+
+
+def _prepare_bins(
+    packed: PackedCover, universe: np.ndarray, pad_mult: int = 1
+) -> dict[int, _BinTensors]:
+    """Stage per-bin tensors; ``pad_mult`` pads the batch axis up front
+    (padding rows are inert: ``pair_mask`` False, ``uidx`` == Np,
+    ``pair_gid`` == -1) so every later dispatch is full-bin shaped."""
+    out = {}
+    Np = len(universe)
+    for k, nb in packed.bins.items():
+        idx = np.searchsorted(universe, nb.pair_gid)
+        idx = np.clip(idx, 0, max(Np - 1, 0))
+        ok = (nb.pair_gid >= 0) & (
+            universe[idx] == nb.pair_gid if Np else np.zeros_like(nb.pair_mask)
+        )
+        uidx = np.where(ok, idx, Np).astype(np.int32)
+        b = nb.entity_mask.shape[0]
+        target = max(((b + pad_mult - 1) // pad_mult) * pad_mult, pad_mult)
+
+        def _pad(a, fill):
+            if target == b:
+                return a
+            extra = np.full((target - b,) + a.shape[1:], fill, dtype=a.dtype)
+            return np.concatenate([a, extra], axis=0)
+
+        out[k] = _BinTensors(
+            entity_mask=_pad(nb.entity_mask, False),
+            coauthor=_pad(nb.coauthor, False),
+            sim_level=_pad(nb.sim_level.astype(np.int8), 0),
+            pair_mask=_pad(nb.pair_mask, False),
+            uidx=_pad(uidx, Np),
+            pair_gid=_pad(nb.pair_gid, -1),
+        )
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Fused multi-round closure (one dispatch for a whole round sequence)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class FusedSpec:
+    """Static shape/kind description of a fused multi-round program."""
+
+    kinds: tuple[str, ...]  # per-bin matcher kind
+    ks: tuple[int, ...]
+    batch: tuple[int, ...]  # per-bin padded batch size
+    num_pairs: tuple[int, ...]
+    universe_size: int
+    history_cap: int = _HISTORY_CAP  # >= the largest budget ever passed
+
+
+def _eval_bin_x(kind: str, g, ev_pos, ev_neg):
+    """Batched matcher evaluation from cached grounding arrays."""
+    if kind == "rules":
+        lev, n_shared, link, valid = g
+        return rules_fixpoint_batch(lev, n_shared, link, ev_pos, ev_neg, valid)
+    if kind == "mln_greedy":
+        u, _, C, valid = g
+        return closure_batch(u, C, ev_pos, ev_neg, valid)
+    u, u_raw, C, valid = g
+    x, _ = jax.vmap(_infer_one)(u, u_raw, C, ev_pos, ev_neg, valid)
+    return x
+
+
+def _fused_rounds(spec: FusedSpec, axes: tuple[str, ...], *args):
+    """Multi-round closure body (runs inside shard_map).
+
+    ``args`` is, per bin, ``(g0, g1, g2, g3, uidx, pair_mask, active0)``
+    followed by ``(m_bits, budget)``.  Carries the match bitset, the
+    per-bin active-row masks, and the round/eval counters through a
+    single ``lax.while_loop``; the next active set is derived on device
+    from the ``uidx`` slot incidence of the newly set bits.
+    """
+    nb = len(spec.kinds)
+    per = [args[i * 7 : (i + 1) * 7] for i in range(nb)]
+    m_bits = args[7 * nb]
+    budget = args[7 * nb + 1]
+    Np = spec.universe_size
+
+    def _psum(v):
+        for ax in axes:
+            v = jax.lax.psum(v, ax)
+        return v
+
+    uidxs = [p[4] for p in per]
+    safe = [jnp.minimum(u, Np - 1) for u in uidxs]
+    inuniv = [(p[4] < Np) & p[5] for p in per]
+    actives0 = tuple(p[6] for p in per)
+
+    n0 = _psum(
+        functools.reduce(
+            jnp.add, [jnp.sum(a.astype(jnp.int32)) for a in actives0]
+        )
+    )
+
+    def cond(state):
+        _, _, rounds, _, n_active, _ = state
+        return (n_active > 0) & (rounds < budget)
+
+    def body(state):
+        bits, actives, rounds, evals, n_active, hist = state
+        hist = hist.at[jnp.minimum(rounds, spec.history_cap - 1)].set(n_active)
+        local = jnp.zeros((Np,), jnp.int32)
+        for i in range(nb):
+            ev_pos = bits[safe[i]] & inuniv[i]
+            x = _eval_bin_x(spec.kinds[i], per[i][:4], ev_pos,
+                            jnp.zeros_like(ev_pos))
+            x = x & inuniv[i] & actives[i][:, None]
+            local = local.at[uidxs[i].reshape(-1)].max(
+                x.reshape(-1).astype(jnp.int32), mode="drop"
+            )
+        new_bits = (_psum(local) > 0) | bits
+        changed = new_bits & ~bits
+        nxt = []
+        n_local = jnp.int32(0)
+        for i in range(nb):
+            act = jnp.any(changed[safe[i]] & inuniv[i], axis=1)
+            nxt.append(act)
+            n_local = n_local + jnp.sum(act.astype(jnp.int32))
+        return (new_bits, tuple(nxt), rounds + 1, evals + n_active,
+                _psum(n_local), hist)
+
+    state0 = (
+        m_bits,
+        actives0,
+        jnp.int32(0),
+        jnp.int32(0),
+        n0,
+        jnp.zeros((spec.history_cap,), jnp.int32),
+    )
+    bits, _, rounds, evals, _, hist = jax.lax.while_loop(cond, body, state0)
+    return bits, rounds, evals, hist
+
+
+@functools.lru_cache(maxsize=64)  # bounded: streaming ingests grow the
+# universe/batch shapes, so specs (and their compiled executables) churn
+def build_fused_fn(spec: FusedSpec, mesh: Mesh, axes: tuple[str, ...]):
+    """Jitted fused multi-round program for one (cover, mesh) shape.
+
+    The match bitset argument is donated: across calls its buffer is
+    reused, and inside the call the ``while_loop`` aliases it between
+    rounds — the bitset never round-trips to the host mid-closure.
+    """
+    nbins = len(spec.kinds)
+    batch_spec = P(axes)
+    rep = P()
+    in_specs = tuple([batch_spec] * 7 * nbins) + (rep, rep)
+    fn = functools.partial(_fused_rounds, spec, axes)
+    mapped = kcommon.shard_map(fn, mesh, in_specs, (rep, rep, rep, rep))
+    return jax.jit(mapped, donate_argnums=(7 * nbins,))
+
+
+# ---------------------------------------------------------------------------
+# Full (maximal-message) rounds: one full-bin-shaped dispatch per bin
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class BinRoundSpec:
+    """Static description of one bin's host-visible full round."""
+
+    kind: str
+    k: int
+    batch: int
+    num_pairs: int
+    universe_size: int
+
+
+def _bin_full_round(spec: BinRoundSpec, axes, g0, g1, g2, g3, uidx, pmask,
+                    active, m_bits):
+    """One full round of one bin (inside shard_map): evaluate every
+    active row from cached grounding arrays, return per-slot matches,
+    component labels, and the updated replicated bitset."""
+    Np = spec.universe_size
+    safe = jnp.minimum(uidx, Np - 1)
+    inuniv = (uidx < Np) & pmask
+    ev_pos = m_bits[safe] & inuniv
+    ev_neg = jnp.zeros_like(ev_pos)
+    g = (g0, g1, g2, g3)
+    if spec.kind == "mln":
+        x, lab = jax.vmap(_infer_one)(g0, g1, g2, ev_pos, ev_neg, g3)
+    else:
+        x = _eval_bin_x(spec.kind, g, ev_pos, ev_neg)
+        lab = jnp.full(x.shape, spec.num_pairs, dtype=jnp.int32)
+    xm = x & inuniv & active[:, None]
+    local = jnp.zeros((Np,), jnp.int32).at[uidx.reshape(-1)].max(
+        xm.reshape(-1).astype(jnp.int32), mode="drop"
+    )
+    bits = local
+    for ax in axes:
+        bits = jax.lax.psum(bits, ax)
+    return x, lab, (bits > 0) | m_bits
+
+
+@functools.lru_cache(maxsize=64)  # bounded, same churn as build_fused_fn
+def build_bin_round_fn(spec: BinRoundSpec, mesh: Mesh, axes: tuple[str, ...]):
+    """Jitted full round for one bin, always dispatched at the full bin
+    shape (an active-row mask replaces host-side row gathering, so the
+    program compiles once per cover instead of once per active-set
+    shape per round)."""
+    batch_spec = P(axes)
+    rep = P()
+    fn = functools.partial(_bin_full_round, spec, axes)
+    mapped = kcommon.shard_map(
+        fn,
+        mesh,
+        (batch_spec,) * 7 + (rep,),
+        (batch_spec, batch_spec, rep),
+    )
+    return jax.jit(mapped)
+
+
+# ---------------------------------------------------------------------------
+# Legacy per-round host loop (build_round_fn stays for the mesh dry-run)
+# ---------------------------------------------------------------------------
 
 
 @dataclasses.dataclass(frozen=True)
@@ -68,17 +480,10 @@ class RoundSpec:
 
 def _device_round(spec: RoundSpec, axes: tuple[str, ...], entity_mask, coauthor,
                   sim_level, pair_mask, uidx, m_bits):
-    """One shard's work for one round (runs inside shard_map).
-
-    entity_mask (B, k) bool | coauthor (B, k, k) bool
-    sim_level   (B, P) int8 | pair_mask (B, P) bool
-    uidx        (B, P) int32 index into the global pair universe
-                 (== Np for padded/invalid slots -> dropped on scatter)
-    m_bits      (Np,) bool replicated evidence bitset
-    Returns x (B, P) bool, lab (B, P) int32, bits (Np,) bool replicated.
-    """
+    """One shard's work for one legacy round: re-grounds from the raw
+    tensors on every call (the per-round overhead the grounding cache
+    and fused engine remove — kept as the differential baseline)."""
     Np = spec.universe_size
-    # Evidence projection: which of my candidate pairs are already matched.
     safe = jnp.minimum(uidx, Np - 1)
     ev_pos = m_bits[safe] & (uidx < Np) & pair_mask
     ev_neg = jnp.zeros_like(ev_pos)
@@ -92,23 +497,18 @@ def _device_round(spec: RoundSpec, axes: tuple[str, ...], entity_mask, coauthor,
         pair_mask=pair_mask,
     )
     if spec.matcher_kind == "rules":
-        from repro.core.mln import ground_structure
-
         lev, valid, n_shared, link = ground_structure(batch)
         x = jax.vmap(_rules_fixpoint)(lev, n_shared, link, ev_pos, ev_neg, valid)
         lab = jnp.full(x.shape, spec.num_pairs, dtype=jnp.int32)
     else:
         g = ground(batch, spec.weights)
         if spec.matcher_kind == "mln_greedy":
-            from repro.core.mln import _closure
-
-            x = jax.vmap(_closure)(g.u, g.C, ev_pos, ev_neg, g.valid)
+            x = closure_batch(g.u, g.C, ev_pos, ev_neg, g.valid)
             lab = jnp.full(x.shape, spec.num_pairs, dtype=jnp.int32)
         else:
-            x, lab = jax.vmap(_infer_one)(g.u, g.u_raw, g.C, ev_pos, ev_neg, g.valid)
+            x, lab = jax.vmap(_infer_one)(g.u, g.u_raw, g.C, ev_pos, ev_neg,
+                                          g.valid)
 
-    # Message construction: scatter matches into the global bitset and
-    # all-reduce (OR) across shards -> replicated next-round evidence.
     flat_idx = uidx.reshape(-1)
     flat_val = (x & pair_mask).reshape(-1)
     local_bits = jnp.zeros((Np,), jnp.int32).at[flat_idx].max(
@@ -136,13 +536,9 @@ def build_round_fn(spec: RoundSpec, mesh: Mesh, axes: tuple[str, ...]):
 
 
 def _matcher_spec(matcher, k: int, Np: int) -> RoundSpec:
-    if isinstance(matcher, RulesMatcher):
-        kind, weights = "rules", None
-    elif isinstance(matcher, MLNMatcher):
-        kind = "mln" if matcher.collective else "mln_greedy"
-        weights = matcher.weights
-    else:  # pragma: no cover - generic fallback treats it as MLN-like
-        raise TypeError(f"unsupported matcher for parallel rounds: {matcher!r}")
+    kind, weights = _matcher_cache_key(matcher)
+    if kind == "mln" and not matcher.collective:
+        kind = "mln_greedy"
     return RoundSpec(
         k=k,
         num_pairs=pairlib.num_pairs(k),
@@ -150,39 +546,6 @@ def _matcher_spec(matcher, k: int, Np: int) -> RoundSpec:
         matcher_kind=kind,
         weights=weights,
     )
-
-
-@dataclasses.dataclass
-class _BinTensors:
-    """Per-bin device-ready tensors (host copies, sliced per round)."""
-
-    entity_mask: np.ndarray
-    coauthor: np.ndarray
-    sim_level: np.ndarray
-    pair_mask: np.ndarray
-    uidx: np.ndarray  # (B, P) int32 universe index, Np where invalid
-    pair_gid: np.ndarray
-
-
-def _prepare_bins(packed: PackedCover, universe: np.ndarray) -> dict[int, _BinTensors]:
-    out = {}
-    Np = len(universe)
-    for k, nb in packed.bins.items():
-        idx = np.searchsorted(universe, nb.pair_gid)
-        idx = np.clip(idx, 0, max(Np - 1, 0))
-        ok = (nb.pair_gid >= 0) & (
-            universe[idx] == nb.pair_gid if Np else np.zeros_like(nb.pair_mask)
-        )
-        uidx = np.where(ok, idx, Np).astype(np.int32)
-        out[k] = _BinTensors(
-            entity_mask=nb.entity_mask,
-            coauthor=nb.coauthor,
-            sim_level=nb.sim_level.astype(np.int8),
-            pair_mask=nb.pair_mask,
-            uidx=uidx,
-            pair_gid=nb.pair_gid,
-        )
-    return out
 
 
 def _pad_rows(arrs: list[np.ndarray], mult: int) -> list[np.ndarray]:
@@ -202,6 +565,29 @@ def _pad_rows(arrs: list[np.ndarray], mult: int) -> list[np.ndarray]:
     return out
 
 
+# ---------------------------------------------------------------------------
+# Drivers
+# ---------------------------------------------------------------------------
+
+
+def _seed_bits(universe: np.ndarray, m_plus: MatchStore) -> np.ndarray:
+    Np = len(universe)
+    bits = np.zeros(Np, dtype=bool)
+    if len(m_plus):
+        idx = np.searchsorted(universe, m_plus.gids)
+        idx = np.clip(idx, 0, Np - 1)
+        bits[idx[universe[idx] == m_plus.gids]] = True
+    return bits
+
+
+def _set_bits(bits: np.ndarray, universe: np.ndarray, gids: np.ndarray) -> None:
+    if not len(gids):
+        return
+    idx = np.searchsorted(universe, gids)
+    idx = np.clip(idx, 0, max(len(universe) - 1, 0))
+    bits[idx[universe[idx] == gids]] = True
+
+
 def run_parallel(
     packed: PackedCover,
     matcher,
@@ -214,6 +600,8 @@ def run_parallel(
     active: list[int] | None = None,
     init_matches: MatchStore | None = None,
     pool: MessagePool | None = None,
+    gcache: GroundingCache | None = None,
+    fused: bool = True,
 ) -> EMResult:
     """Round-parallel NO-MP / SMP / MMP over the mesh's data axes.
 
@@ -227,14 +615,26 @@ def run_parallel(
     dirty neighborhoods and continue the closure from a previous
     fixpoint / maximal-message pool.
 
-    ``fast_rounds`` (MMP only): re-activation rounds run the *greedy
-    closure* variant — evidence-driven propagation needs no entailment
-    matrix, which is the entire O(P^3) cost of a full round (measured
-    3376x cheaper per round on the production-mesh dry-run).  A full
-    maximal-message round runs first and again at every quiescence
-    point, so the final fixpoint is exactly MMP's: greedy closure under
-    evidence is sound (Prop. 6), and termination still requires a full
-    round to have produced nothing new.
+    ``gcache`` is the persistent grounding cache: the streaming engine
+    passes one per service so clean bins are never re-ground across
+    ingests; batch callers get a per-run cache (grounding still happens
+    exactly once per bin per cover, across all rounds).
+
+    ``fast_rounds`` (SMP and MMP with the collective MLN): re-activation
+    rounds run the *greedy closure* variant — evidence-driven
+    propagation needs no entailment matrix, which is the entire O(P^3)
+    cost of a full round (measured 3376x cheaper per round on the
+    production-mesh dry-run).  With the fused engine those greedy
+    rounds run inside a single on-device ``while_loop``; a full round
+    (maximal-message inference for MMP, full collective MAP for SMP)
+    runs first and again at every quiescence point, so the final
+    fixpoint is closed under the full matcher on every neighborhood:
+    greedy closure under evidence is sound (Prop. 6), and termination
+    still requires a full round to have produced nothing new (Thm. 2/4).
+
+    ``fused=False`` selects the legacy per-round host loop (one dispatch
+    per bin per round, re-grounding every time) — the differential
+    baseline for tests and ``benchmarks/table1_parallel.py``.
     """
     t0 = time.perf_counter()
     if scheme == "mmp":
@@ -246,15 +646,45 @@ def run_parallel(
     universe = np.sort(np.asarray(sorted(packed.pair_levels.keys()), dtype=np.int64))
     Np = len(universe)
     if Np == 0:  # no candidate pairs anywhere: nothing to resolve
-        return EMResult(MatchStore(), 0, 0, 0, 0, time.perf_counter() - t0)
-    bins = _prepare_bins(packed, universe)
+        return EMResult(
+            init_matches if init_matches is not None else MatchStore(),
+            0, 0, 0, 0, time.perf_counter() - t0,
+        )
+
+    if not fused:
+        return _run_parallel_legacy(
+            packed, matcher, gg, scheme=scheme, mesh=mesh,
+            max_rounds=max_rounds, fast_rounds=fast_rounds, active=active,
+            init_matches=init_matches, pool=pool, t0=t0,
+            universe=universe, n_shards=n_shards,
+        )
+
+    bins = _prepare_bins(packed, universe, pad_mult=n_shards)
+    bin_ks = sorted(bins)
+    gcache = gcache if gcache is not None else GroundingCache()
+    mkey = _matcher_cache_key(matcher)
+
+    def bin_row_keys(k):
+        # packer row keys (streaming path) double as grounding
+        # fingerprints; padding rows get a stable sentinel
+        if packed.row_keys is None:
+            return None
+        real = tuple(packed.row_keys[int(n)] for n in packed.bin_rows[k])
+        pad = bins[k].entity_mask.shape[0] - len(real)
+        return real + (("__pad__", k),) * pad
+
+    grounds = {
+        k: gcache.get(mkey, k, bins[k], bin_row_keys(k)) for k in bin_ks
+    }
+    dev_uidx = {k: jnp.asarray(bins[k].uidx) for k in bin_ks}
+    dev_pmask = {k: jnp.asarray(bins[k].pair_mask) for k in bin_ks}
+
+    base_kind = mkey[0]
+    if base_kind == "mln" and not matcher.collective:
+        base_kind = "mln_greedy"
 
     m_plus = init_matches if init_matches is not None else MatchStore()
-    m_bits = np.zeros(Np, dtype=bool)
-    if len(m_plus):
-        idx = np.searchsorted(universe, m_plus.gids)
-        idx = np.clip(idx, 0, Np - 1)
-        m_bits[idx[universe[idx] == m_plus.gids]] = True
+    m_bits = _seed_bits(universe, m_plus)
     if pool is None:
         pool = MessagePool()
     active = (
@@ -264,6 +694,266 @@ def run_parallel(
     emitted = 0
     promoted_total = 0
     rounds = 0
+    full_rounds = 0
+    dispatches = 0
+    history: list[int] = []
+
+    def masks_for(act_list):
+        masks = {
+            k: np.zeros(bins[k].entity_mask.shape[0], dtype=bool) for k in bin_ks
+        }
+        for n in act_list:
+            masks[int(packed.neighborhood_bin[n])][
+                int(packed.neighborhood_row[n])
+            ] = True
+        return masks
+
+    def live_rows(act_list):
+        """Drop provably inert rows: a neighborhood whose every candidate
+        slot is already matched can add no matches (output is a subset of
+        its valid slots) and can emit no maximal messages (messages range
+        over *undecided* pairs) — evaluating it in a full round is a
+        no-op in every driver.  Cost is O(|act_list| slots): only the
+        requested rows are inspected, so a small dirty seed set stays
+        cheap on a large corpus."""
+        keep = []
+        for k, rows in packed.rows_for(act_list).items():
+            bt = bins[k]
+            uidx = bt.uidx[rows]
+            un = bt.pair_mask[rows] & (uidx < Np) & ~m_bits[
+                np.minimum(uidx, Np - 1)
+            ]
+            live = np.asarray(rows)[un.any(axis=1)]
+            keep.extend(int(packed.bin_rows[k][r]) for r in live)
+        return sorted(keep)
+
+    # round history buffer: one slot per possible round so EMResult
+    # always has len(history) == rounds, whatever max_rounds the caller
+    # picked (rounded up so the compiled shape is stable across calls)
+    hist_cap = ((max_rounds + _HISTORY_CAP - 1) // _HISTORY_CAP) * _HISTORY_CAP
+
+    def fused_call(kind, act_masks, budget):
+        nonlocal dispatches
+        spec = FusedSpec(
+            kinds=tuple(kind for _ in bin_ks),
+            ks=tuple(bin_ks),
+            batch=tuple(bins[k].entity_mask.shape[0] for k in bin_ks),
+            num_pairs=tuple(bins[k].pair_mask.shape[1] for k in bin_ks),
+            universe_size=Np,
+            history_cap=hist_cap,
+        )
+        fn = build_fused_fn(spec, mesh, axes)
+        args = []
+        for k in bin_ks:
+            args += list(grounds[k])
+            args += [dev_uidx[k], dev_pmask[k], jnp.asarray(act_masks[k])]
+        bits, r, ev, hist = fn(*args, jnp.asarray(m_bits), jnp.asarray(budget, jnp.int32))
+        dispatches += 1
+        r = int(r)
+        # np.array (not asarray): callers assign this to m_bits and
+        # mutate it in place, and asarray of a jax buffer is read-only
+        return np.array(bits), r, int(ev), [int(h) for h in np.asarray(hist)[:r]]
+
+    def finish():
+        return EMResult(
+            matches=m_plus,
+            neighborhood_evals=evals,
+            rounds=rounds,
+            messages_emitted=emitted,
+            messages_promoted=promoted_total,
+            wall_time_s=time.perf_counter() - t0,
+            history=history,
+            dispatches=dispatches,
+            full_rounds=full_rounds,
+        )
+
+    collective = base_kind == "mln"
+
+    def full_round_over(act_list):
+        """One host-visible full round: per-bin full-shape dispatches.
+        Returns (newly matched gids, messages).  Mutates m_bits/m_plus."""
+        nonlocal dispatches, evals, rounds, full_rounds, m_bits, m_plus
+        act_masks = masks_for(act_list)
+        history.append(len(act_list))
+        rounds += 1
+        full_rounds += 1
+        new_bits = m_bits.copy()
+        round_msgs: list[list[int]] = []
+        m_bits_dev = jnp.asarray(m_bits)
+        for k in bin_ks:
+            am = act_masks[k]
+            if not am.any():
+                continue
+            spec = BinRoundSpec(
+                kind=base_kind,
+                k=k,
+                batch=bins[k].entity_mask.shape[0],
+                num_pairs=bins[k].pair_mask.shape[1],
+                universe_size=Np,
+            )
+            fn = build_bin_round_fn(spec, mesh, axes)
+            x, lab, bits = fn(
+                *grounds[k], dev_uidx[k], dev_pmask[k], jnp.asarray(am),
+                m_bits_dev,
+            )
+            dispatches += 1
+            evals += int(am.sum())
+            new_bits |= np.asarray(bits)
+            if scheme == "mmp" and collective:
+                round_msgs += _labels_to_messages(
+                    bins[k].pair_gid, np.asarray(lab), m_plus, row_mask=am
+                )
+        newly = universe[new_bits & ~m_bits]
+        m_bits = new_bits
+        m_plus = m_plus.union(newly)
+        return newly, round_msgs
+
+    if scheme == "nomp":
+        # one round, no exchange: a single fused dispatch for cheap
+        # matchers, one full-shape dispatch per bin for the collective
+        # MLN (shares the compiled full-round programs with SMP/MMP).
+        if active:
+            if collective:
+                full_round_over(active)
+            else:
+                bits, rounds, evals, history = fused_call(
+                    base_kind, masks_for(active), 1
+                )
+                m_plus = m_plus.union(universe[bits & ~m_bits])
+        return finish()
+
+    if scheme == "smp" and not collective:
+        # greedy/rules matchers: the whole multi-round closure is ONE
+        # fused dispatch — every round body is a cheap batched fixpoint.
+        if active:
+            bits, rounds, evals, history = fused_call(
+                base_kind, masks_for(active), max_rounds
+            )
+            m_plus = m_plus.union(universe[bits & ~m_bits])
+        return finish()
+
+    # -- SMP (collective) and MMP: host-visible full rounds + fused -------
+    # greedy segments.  Re-activation rounds only propagate evidence, so
+    # they run as greedy closure inside the fused device loop; a full
+    # round over every neighborhood runs at each quiescence point (and
+    # first), so the fixpoint is closed under the full matcher — the
+    # same soundness argument as MMP's fast_rounds (Prop. 6 + Thm. 2/4),
+    # now shared by SMP.
+    greedy_ok = fast_rounds and collective
+    full_round = True
+    seeds = list(active)
+    bits0 = m_bits.copy()
+
+    def certify_rows():
+        """Neighborhoods a quiescence full round must re-check: the
+        seeds plus every neighborhood slot-incident to a bit set during
+        this run.  Any other neighborhood was at the carried fixpoint
+        with unchanged evidence projection, so the full matcher can add
+        nothing there — on the streaming path this keeps quiescence
+        checks O(dirty + affected), not O(unresolved corpus)."""
+        cand = set(seeds)
+        changed = universe[m_bits & ~bits0]
+        if len(changed):
+            cand.update(packed.neighborhoods_of_slot_pairs(changed))
+        return sorted(cand)
+
+    active = live_rows(active)
+    if scheme == "mmp" and seeds and not active:
+        # every seed is inert, but the (streaming-persistent) pool must
+        # still be replayed against the current grounding — exactly what
+        # run_mmp's step 7 does after evaluating those seeds
+        m_plus2, promoted = _promote(pool, gg, m_plus)
+        promoted_total += promoted
+        if promoted:
+            extra = m_plus2.difference(m_plus)
+            m_plus = m_plus2
+            _set_bits(m_bits, universe, extra)
+            active = packed.neighborhoods_of_slot_pairs(extra)
+    while active and rounds < max_rounds:
+        if greedy_ok and not full_round:
+            bits, r, ev, hist = fused_call(
+                "mln_greedy", masks_for(active), max_rounds - rounds
+            )
+            rounds += r
+            evals += ev
+            history += hist
+            newly = universe[bits & ~m_bits]
+            m_bits = bits
+            m_plus = m_plus.union(newly)
+            if scheme == "mmp":
+                m_plus2, promoted = _promote(pool, gg, m_plus)
+                promoted_total += promoted
+                if promoted:
+                    extra = m_plus2.difference(m_plus)
+                    m_plus = m_plus2
+                    _set_bits(m_bits, universe, extra)
+                    active = packed.neighborhoods_of_slot_pairs(extra)
+                    if active:
+                        continue
+            # greedy closure quiescent: one full round over every
+            # certifiable neighborhood that still has an undecided
+            # candidate slot (fresh maximal messages / collective
+            # promotions) before declaring the fixpoint
+            full_round = True
+            active = live_rows(certify_rows())
+            continue
+
+        newly, round_msgs = full_round_over(active)
+        if scheme == "mmp":
+            for msg in round_msgs:
+                pool.add_message(msg)
+                emitted += 1
+            m_plus2, promoted = _promote(pool, gg, m_plus)
+            promoted_total += promoted
+            if promoted:
+                extra = m_plus2.difference(m_plus)
+                newly = np.unique(np.concatenate([newly, extra]))
+                m_plus = m_plus2
+                _set_bits(m_bits, universe, extra)
+        active = (
+            packed.neighborhoods_of_slot_pairs(newly) if len(newly) else []
+        )
+        if greedy_ok and active:
+            full_round = False
+    return finish()
+
+
+def _run_parallel_legacy(
+    packed: PackedCover,
+    matcher,
+    gg: GlobalGrounding | None,
+    *,
+    scheme: str,
+    mesh: Mesh,
+    max_rounds: int,
+    fast_rounds: bool,
+    active: list[int] | None,
+    init_matches: MatchStore | None,
+    pool: MessagePool | None,
+    t0: float,
+    universe: np.ndarray,
+    n_shards: int,
+) -> EMResult:
+    """The pre-fusion host round loop: one dispatch per bin per round,
+    re-grounding from raw tensors every time, per-row message walks.
+    Kept as the differential baseline (tests assert bit-for-bit equality
+    with the fused engine; ``table1_parallel`` reports the speedup)."""
+    axes = tuple(mesh.axis_names)
+    Np = len(universe)
+    bins = _prepare_bins(packed, universe)
+
+    m_plus = init_matches if init_matches is not None else MatchStore()
+    m_bits = _seed_bits(universe, m_plus)
+    if pool is None:
+        pool = MessagePool()
+    active = (
+        list(active) if active is not None else list(range(packed.num_neighborhoods))
+    )
+    evals = 0
+    emitted = 0
+    promoted_total = 0
+    rounds = 0
+    dispatches = 0
     history: list[int] = []
 
     # MMP fast rounds: greedy closure for re-activations, full maximal-
@@ -296,15 +986,13 @@ def run_parallel(
                 spec = dataclasses.replace(spec, matcher_kind="mln_greedy")
             fn = build_round_fn(spec, mesh, axes)
             x, lab, bits = fn(*padded, jnp.asarray(m_bits))
+            dispatches += 1
             x = np.asarray(x)[:n_rows]
             lab = np.asarray(lab)[:n_rows]
             new_bits |= np.asarray(bits)
             evals += n_rows
             if scheme == "mmp":
-                for r in range(n_rows):
-                    round_msgs.extend(
-                        _labels_to_messages(gid_rows[r], lab[r], m_plus)
-                    )
+                round_msgs.extend(_labels_to_messages(gid_rows, lab, m_plus))
             if scheme == "nomp":
                 # no exchange: collect matches directly, never re-activate
                 for r in range(n_rows):
@@ -328,10 +1016,7 @@ def run_parallel(
                 extra = m_plus2.difference(m_plus)
                 newly = np.unique(np.concatenate([newly, extra]))
                 m_plus = m_plus2
-                idx = np.searchsorted(universe, extra)
-                idx = np.clip(idx, 0, max(Np - 1, 0))
-                ok = universe[idx] == extra
-                m_bits[idx[ok]] = True
+                _set_bits(m_bits, universe, extra)
 
         active = packed.neighborhoods_of_pairs(newly) if len(newly) else []
 
@@ -352,4 +1037,5 @@ def run_parallel(
         messages_promoted=promoted_total,
         wall_time_s=time.perf_counter() - t0,
         history=history,
+        dispatches=dispatches,
     )

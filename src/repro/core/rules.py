@@ -58,10 +58,39 @@ def _rules_fixpoint(lev, n_shared, link, ev_pos, ev_neg, valid):
     return x
 
 
+def rules_fixpoint_batch(lev, n_shared, link, ev_pos, ev_neg, valid):
+    """Rule fixpoint for a whole bin in one ``while_loop``.
+
+    Batched form of :func:`_rules_fixpoint` — one
+    ``icm_ops.sweep_batch`` contraction per iteration, run until every
+    neighborhood converges (idempotent for already-converged lanes, so
+    the result equals the vmapped per-row loop).  Used by both the
+    batched matcher below and the fused device-resident round engine.
+    """
+    x0 = ev_pos & valid & ~ev_neg
+
+    def cond(state):
+        _, changed = state
+        return changed
+
+    def body(state):
+        x, _ = state
+        n = icm_ops.sweep_batch(n_shared, link, x.astype(jnp.float32))
+        fire = (
+            (lev == 3)
+            | ((lev == 2) & (n >= 1.0 - 1e-6))
+            | ((lev == 1) & (n >= 2.0 - 1e-6))
+        )
+        x2 = (fire & valid & ~ev_neg) | x0 | x
+        return x2, jnp.any(x2 != x)
+
+    x, _ = jax.lax.while_loop(cond, body, (x0, jnp.bool_(True)))
+    return x
+
+
 @functools.lru_cache(maxsize=None)
 def _jitted_rules():
-    batched = jax.vmap(_rules_fixpoint, in_axes=(0, 0, 0, 0, 0, 0))
-    return jax.jit(batched)
+    return jax.jit(rules_fixpoint_batch)
 
 
 class RulesMatcher:

@@ -284,6 +284,148 @@ def make_dataset(cfg: SynthConfig) -> SynthDataset:
 
 
 # ---------------------------------------------------------------------------
+# Evidence-lattice instance (deep multi-round message passing)
+# ---------------------------------------------------------------------------
+
+# Lattice rule weights: a candidate pair has u = -5; each matched
+# predecessor contributes w_co = 3, so a pair fires only when BOTH of
+# its predecessors are matched (-5 + 6 = +1 > 0 > -5 + 3), and no local
+# or global group is jointly promotable (3u + 2w = -9 < 0; any suffix
+# group's delta inherits the negative single-predecessor entailment).
+# Seeds get n_shared = 2 anchor coauthors: u = -5 + 2*3 = +1.
+def make_lattice_cover(depth: int, width: int, k: int = 8):
+    """Hand-packed evidence lattice: resolution takes ``depth`` rounds.
+
+    ``width`` chains (an even number, grouped into partner pairs).
+    Pair ``(c, i)`` becomes matchable only once *both* its predecessors
+    ``(c, i-1)`` and ``(partner(c), i-1)`` are matched — evidence must
+    flow one neighborhood hop per round, which makes this the paper's
+    §2.1 message-passing chain scaled to a benchmarkable instance.
+    Because single-predecessor entailment is negative, neighborhoods
+    emit no multi-pair maximal messages, so MMP needs the same rounds
+    as SMP (no step-7 shortcut) — the multi-round configuration the
+    round-parallel engine is benchmarked on.
+
+    Chain-pair lengths are *staggered* between ``depth // 2`` and
+    ``depth``: the active frontier shrinks as shorter chains finish,
+    so the per-round active-set size varies — the shape-instability a
+    per-round gather/dispatch engine pays recompiles for, and the
+    statistical-skew effect §6.3 reports on the real corpora.
+
+    Returns ``(packed, relations, weights)`` ready for the drivers; the
+    global grounding for MMP comes from ``build_global_grounding(
+    packed.pair_levels, relations, weights)``.
+    """
+    from repro.core import pairs as pairlib
+    from repro.core.cover import Cover, PackedCover
+    from repro.core.mln import MLNWeights
+    from repro.core.types import NeighborhoodBatch
+
+    assert width >= 2 and width % 2 == 0 and depth >= 1
+    weights = MLNWeights(w_sim=(0.0, -5.0, -5.0, -5.0), w_co=3.0)
+    n_pairs_of_chains = width // 2
+    depths = [
+        int(round(depth // 2 + (depth - depth // 2) * (j + 1) / n_pairs_of_chains))
+        for j in range(n_pairs_of_chains)
+    ]
+
+    def chain_depth(c: int) -> int:
+        return depths[c // 2]
+
+    def a_id(c: int, i: int) -> int:
+        return 2 * (c * depth + i)
+
+    def b_id(c: int, i: int) -> int:
+        return a_id(c, i) + 1
+
+    n_chain_ents = 2 * width * depth
+
+    def anchor(c: int, j: int) -> int:
+        return n_chain_ents + 2 * c + j
+
+    edges: list[tuple[int, int]] = []
+    pair_levels: dict[int, int] = {}
+    for c in range(width):
+        p = c ^ 1  # partner chain
+        edges += [
+            (anchor(c, 0), a_id(c, 0)), (anchor(c, 0), b_id(c, 0)),
+            (anchor(c, 1), a_id(c, 0)), (anchor(c, 1), b_id(c, 0)),
+        ]
+        for i in range(chain_depth(c)):
+            pair_levels[int(pairlib.make_gid(a_id(c, i), b_id(c, i)))] = 1
+            if i:
+                edges += [
+                    (a_id(c, i), a_id(c, i - 1)), (b_id(c, i), b_id(c, i - 1)),
+                    (a_id(c, i), a_id(p, i - 1)), (b_id(c, i), b_id(p, i - 1)),
+                ]
+    edge_arr = np.asarray(edges, dtype=np.int64)
+    relations = Relations(edges={"coauthor": edge_arr})
+    adj: dict[int, set[int]] = {}
+    for x, y in edges:
+        adj.setdefault(x, set()).add(y)
+        adj.setdefault(y, set()).add(x)
+
+    P = pairlib.num_pairs(k)
+    ii, jj = pairlib.triu_indices(k)
+    members_of: list[np.ndarray] = []
+    rows = []
+    for i in range(depth):
+        for c in range(width):
+            if i >= chain_depth(c):
+                continue
+            p = c ^ 1
+            mem = [a_id(c, i), b_id(c, i)]
+            if i:
+                mem += [a_id(c, i - 1), b_id(c, i - 1),
+                        a_id(p, i - 1), b_id(p, i - 1)]
+            else:
+                mem += [anchor(c, 0), anchor(c, 1)]
+            mem = sorted(mem)
+            members_of.append(np.asarray(mem, dtype=np.int64))
+            ids = np.full(k, -1, dtype=np.int64)
+            ids[: len(mem)] = mem
+            emask = ids >= 0
+            co = np.zeros((k, k), dtype=bool)
+            for s in range(len(mem)):
+                for t in range(s + 1, len(mem)):
+                    if mem[t] in adj.get(mem[s], ()):
+                        co[s, t] = co[t, s] = True
+            lev = np.zeros(P, dtype=np.int8)
+            gid = np.full(P, -1, dtype=np.int64)
+            pmask = np.zeros(P, dtype=bool)
+            for s in range(P):
+                x, y = int(ii[s]), int(jj[s])
+                if not (emask[x] and emask[y]):
+                    continue
+                g = int(pairlib.make_gid(int(ids[x]), int(ids[y])))
+                if g in pair_levels:
+                    lev[s] = 1
+                    gid[s] = g
+                    pmask[s] = True
+            rows.append(dict(ids=ids, emask=emask, co=co, lev=lev, gid=gid,
+                             pmask=pmask))
+
+    nb = NeighborhoodBatch(
+        entity_ids=np.stack([r["ids"] for r in rows]),
+        entity_mask=np.stack([r["emask"] for r in rows]),
+        coauthor=np.stack([r["co"] for r in rows]),
+        sim_level=np.stack([r["lev"] for r in rows]),
+        pair_gid=np.stack([r["gid"] for r in rows]),
+        pair_mask=np.stack([r["pmask"] for r in rows]),
+    )
+    n_nb = len(rows)
+    packed = PackedCover(
+        bins={k: nb},
+        bin_rows={k: np.arange(n_nb, dtype=np.int64)},
+        neighborhood_bin=np.full(n_nb, k, dtype=np.int64),
+        neighborhood_row=np.arange(n_nb, dtype=np.int64),
+        pair_levels=pair_levels,
+        cover=Cover(core=members_of, full=members_of),
+    )
+    return packed, relations, weights
+
+
+# ---------------------------------------------------------------------------
 # Synthetic arrival streams (for repro.stream)
 # ---------------------------------------------------------------------------
 

@@ -73,3 +73,15 @@ def sweep_matrix(u, C, X, *, interpret: bool = False, bs=128, bp=128, bk=128):
 
 def sweep(u, C, x, *, interpret: bool = False):
     return sweep_matrix(u, C, x[None, :], interpret=interpret)[0]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def sweep_batch(u, C, X, *, interpret: bool = False):
+    """u (B, P), C (B, P, P), X (B, P) -> (B, P) f32.
+
+    Batched over the bin axis via the pallas_call batching rule — each
+    lane is one neighborhood's conditional-delta sweep.
+    """
+    return jax.vmap(
+        lambda ub, Cb, xb: sweep(ub, Cb, xb, interpret=interpret)
+    )(u, C, X)

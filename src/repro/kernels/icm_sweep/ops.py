@@ -22,3 +22,19 @@ def sweep(u, C, x):
     if mode == "interpret":
         return kernel.sweep(u, C, x, interpret=True)
     return ref.sweep(u, C, x)
+
+
+def sweep_batch(u, C, X):
+    """Per-neighborhood sweep over a whole bin: (B, P) -> (B, P).
+
+    The fused round engine advances every neighborhood of a bin in one
+    batched contraction per closure iteration instead of B vmapped
+    per-row sweeps, so the multi-round ``lax.while_loop`` body is a
+    single MXU-shaped op.
+    """
+    mode = common.pallas_mode()
+    if mode == "compiled":
+        return kernel.sweep_batch(u, C, X)
+    if mode == "interpret":
+        return kernel.sweep_batch(u, C, X, interpret=True)
+    return ref.sweep_batch(u, C, X)

@@ -15,3 +15,15 @@ def sweep_matrix(u, C, X):
 def sweep(u, C, x):
     """u (P,), C (P, P), x (P,) -> (P,)."""
     return sweep_matrix(u, C, x[None, :])[0]
+
+
+def sweep_batch(u, C, X):
+    """u (B, P), C (B, P, P) symmetric, X (B, P) -> (B, P) f32.
+
+    One conditional-delta sweep per neighborhood of a bin — the batched
+    form of :func:`sweep` used by the fused round engine so a whole bin
+    advances in a single batched contraction instead of B vmapped ones.
+    """
+    return u.astype(jnp.float32) + jnp.einsum(
+        "bp,bpq->bq", X.astype(jnp.float32), C.astype(jnp.float32)
+    )

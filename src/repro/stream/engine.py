@@ -14,7 +14,13 @@ hooks, warm-starting from the previous fixpoint:
   above them, which by Thm. 2/4 equals the from-scratch fixpoint);
 * for MMP the maximal-message pool persists across ingests, and step-7
   promotion re-checks every stored group against the current global
-  grounding — the "replay of the affected slice" of the pool.
+  grounding — the "replay of the affected slice" of the pool;
+* the parallel engine additionally persists a device
+  :class:`~repro.core.parallel.GroundingCache` across ingests: bins the
+  cover delta left untouched keep their grounded arrays on device, and
+  dirty bins splice in only the changed rows (``AdvanceStats.
+  reground_rows`` counts them — the grounding analogue of
+  ``IngestReport.replay_visits``).
 
 Carried matches are *invalidated* when a cover delta retracts their
 candidate pair (possible when an oversized canopy re-splits): the whole
@@ -42,6 +48,7 @@ class AdvanceStats:
     result: EMResult
     n_dirty: int
     n_invalidated: int
+    reground_rows: int = 0  # neighborhood rows re-ground on device (parallel)
 
 
 class IncrementalEngine:
@@ -53,8 +60,14 @@ class IncrementalEngine:
         self.parallel = parallel
         self.m_plus = MatchStore()
         self.pool = MessagePool()
+        # Persistent device grounding cache (parallel engine only):
+        # clean bins keep their grounded arrays on device across
+        # ingests; dirty bins splice in only the changed rows.  Created
+        # lazily so the sequential engine never imports the mesh stack.
+        self.gcache = None
         self.total_evals = 0
         self.total_rounds = 0
+        self.total_dispatches = 0
 
     def _invalidate(
         self, packed: PackedCover, dirty: set[int]
@@ -110,9 +123,13 @@ class IncrementalEngine:
             self.pool.discard(retracted)
         carried, dirty_set, dropped = self._invalidate(packed, set(dirty))
         order = sorted(dirty_set)
+        rows_before = 0
         if self.parallel:
-            from repro.core.parallel import run_parallel
+            from repro.core.parallel import GroundingCache, run_parallel
 
+            if self.gcache is None:
+                self.gcache = GroundingCache()
+            rows_before = self.gcache.rows_ground
             result = run_parallel(
                 packed,
                 self.matcher,
@@ -121,6 +138,7 @@ class IncrementalEngine:
                 active=order,
                 init_matches=carried,
                 pool=self.pool if self.scheme == "mmp" else None,
+                gcache=self.gcache,
             )
         elif self.scheme == "smp":
             result = run_smp(packed, self.matcher, order, init_matches=carried)
@@ -137,4 +155,13 @@ class IncrementalEngine:
         self.m_plus = result.matches
         self.total_evals += result.neighborhood_evals
         self.total_rounds += result.rounds
-        return AdvanceStats(result=result, n_dirty=len(order), n_invalidated=dropped)
+        self.total_dispatches += result.dispatches
+        reground = (
+            self.gcache.rows_ground - rows_before if self.parallel else 0
+        )
+        return AdvanceStats(
+            result=result,
+            n_dirty=len(order),
+            n_invalidated=dropped,
+            reground_rows=reground,
+        )

@@ -56,6 +56,9 @@ class IngestReport:
     replay_visits: int  # ids swept by the localized canopy replay
     grounding_pair_visits: int  # pairs patched in the grounding (mmp)
     wall_time_s: float
+    # device rows re-ground this ingest (parallel engine: clean bins hit
+    # the persistent GroundingCache, dirty bins splice changed rows only)
+    reground_rows: int = 0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -197,6 +200,7 @@ class ResolveService:
                 replay_visits=d.replay_visits,
                 grounding_pair_visits=grounding_visits,
                 wall_time_s=time.perf_counter() - t0,
+                reground_rows=stats.reground_rows,
             )
             self.reports.append(report)
         return report

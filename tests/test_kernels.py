@@ -60,6 +60,21 @@ def test_icm_sweep_vector(P):
     )
 
 
+@pytest.mark.parametrize("B,P", [(1, 8), (3, 28), (4, 96)])
+def test_icm_sweep_batch(B, P):
+    """Batched bin sweep: kernel and oracle agree with vmapped sweep."""
+    from repro.kernels.icm_sweep import kernel, ref
+
+    rng = np.random.default_rng(B * 100 + P)
+    u = _rand(rng, (B, P), jnp.float32)
+    C = np.abs(rng.standard_normal((B, P, P))).astype(np.float32)
+    C = jnp.asarray(np.triu(C, 1) + np.triu(C, 1).transpose(0, 2, 1))
+    X = jnp.asarray((rng.random((B, P)) < 0.4).astype(np.float32))
+    want = jax.vmap(ref.sweep)(u, C, X)
+    assert_allclose(ref.sweep_batch(u, C, X), want, rtol=1e-6)
+    assert_allclose(kernel.sweep_batch(u, C, X, interpret=True), want, rtol=1e-5)
+
+
 # ---------------------------------------------------------------------------
 # mln_score: f(X_s) = u . x_s + 1/2 x_s C x_s  batched over candidate sets
 # ---------------------------------------------------------------------------

@@ -1,6 +1,13 @@
 """Round-parallel SPMD message passing == sequential drivers (Thm 2/4
 consistency), plus an 8-shard subprocess run proving the multi-device
 path (this process holds exactly one CPU device).
+
+The fused device-resident engine is checked three ways per scheme:
+bit-for-bit fixpoint equality against the sequential drivers, equality
+against the legacy per-round host loop (``fused=False``), and the
+device-residency accounting itself — the grounding is computed exactly
+once per bin per cover (ground-call counter) and the host dispatch
+count collapses from O(bins x rounds) to O(bins + quiescence points).
 """
 
 from __future__ import annotations
@@ -14,11 +21,17 @@ import textwrap
 import pytest
 
 from repro.core import fig1, pipeline
-from repro.core.driver import run_mmp, run_smp
+from repro.core.driver import run_mmp, run_nomp, run_smp
 from repro.core.global_grounding import build_global_grounding
 from repro.core.mln import MLNMatcher, PAPER_LEARNED, PEDAGOGICAL
-from repro.core.parallel import run_parallel
+from repro.core.parallel import GroundingCache, run_parallel
 from repro.core.rules import RulesMatcher
+
+
+@pytest.fixture(scope="module")
+def hepth_state(hepth_small):
+    packed, gg, _ = pipeline.prepare(hepth_small.entities, hepth_small.relations)
+    return packed, gg
 
 
 def test_parallel_smp_equals_sequential_fig1(fig1_packed, mln_pedagogical):
@@ -37,20 +50,87 @@ def test_parallel_mmp_equals_sequential_fig1(fig1_packed, mln_pedagogical):
     assert fig1.names_of(par.matches) == fig1.EXPECTED_MMP
 
 
-def test_parallel_equals_sequential_synthetic(hepth_small):
-    packed, gg, _ = pipeline.prepare(hepth_small.entities, hepth_small.relations)
-    m = MLNMatcher(PAPER_LEARNED)
-    seq = run_smp(packed, m)
-    par = run_parallel(packed, m, gg, scheme="smp")
-    assert seq.matches.as_set() == par.matches.as_set()
+@pytest.mark.parametrize(
+    "scheme,fast_rounds",
+    [("nomp", True), ("smp", True), ("mmp", True), ("mmp", False)],
+)
+def test_parallel_schemes_equal_sequential(hepth_state, mln_paper, scheme,
+                                           fast_rounds):
+    """All three schemes, fast_rounds on/off: the fused device engine,
+    the legacy per-round host loop, and the sequential driver agree
+    bit-for-bit on the fixpoint."""
+    packed, gg = hepth_state
+    if scheme == "nomp":
+        seq = run_nomp(packed, mln_paper)
+    elif scheme == "smp":
+        seq = run_smp(packed, mln_paper)
+    else:
+        seq = run_mmp(packed, mln_paper, gg)
+    par = run_parallel(
+        packed, mln_paper, gg, scheme=scheme, fast_rounds=fast_rounds
+    )
+    legacy = run_parallel(
+        packed, mln_paper, gg, scheme=scheme, fast_rounds=fast_rounds,
+        fused=False,
+    )
+    assert par.matches.as_set() == seq.matches.as_set()
+    assert legacy.matches.as_set() == seq.matches.as_set()
 
 
-def test_parallel_rules(hepth_small):
-    packed, gg, _ = pipeline.prepare(hepth_small.entities, hepth_small.relations)
+def test_parallel_rules(hepth_state):
+    packed, _ = hepth_state
     m = RulesMatcher()
     seq = run_smp(packed, m)
     par = run_parallel(packed, m, scheme="smp")
+    legacy = run_parallel(packed, m, scheme="smp", fused=False)
     assert seq.matches.as_set() == par.matches.as_set()
+    assert seq.matches.as_set() == legacy.matches.as_set()
+
+
+def test_grounding_once_per_bin_per_cover(hepth_state, mln_paper):
+    """The multi-round run grounds each bin exactly once; a second run
+    over the same cover re-grounds nothing (device arrays are reused)."""
+    packed, gg = hepth_state
+    gcache = GroundingCache()
+    res = run_parallel(packed, mln_paper, gg, scheme="mmp", gcache=gcache)
+    assert res.rounds >= 1
+    assert gcache.ground_calls == len(packed.bins)
+    rows_after = gcache.rows_ground
+    assert rows_after > 0
+    hits_before = gcache.bin_hits
+
+    res2 = run_parallel(packed, mln_paper, gg, scheme="mmp", gcache=gcache)
+    assert res2.matches.as_set() == res.matches.as_set()
+    assert gcache.rows_ground == rows_after  # zero rows re-ground
+    assert gcache.bin_hits == hits_before + len(packed.bins)
+
+
+def test_fused_dispatch_counts(hepth_state, mln_paper):
+    """Dispatch accounting of the device-resident engine: a cheap
+    (greedy/rules) matcher's whole multi-round closure is ONE host
+    dispatch; the collective MLN pays O(bins) per quiescence point plus
+    one dispatch per greedy segment — O(bins + quiescence points), not
+    the legacy O(bins x rounds)."""
+    packed, gg = hepth_state
+    n_bins = len(packed.bins)
+
+    rules = run_parallel(packed, RulesMatcher(), scheme="smp")
+    assert rules.dispatches == 1
+    rules_legacy = run_parallel(packed, RulesMatcher(), scheme="smp", fused=False)
+    assert rules_legacy.dispatches > rules.dispatches
+
+    # collective SMP/MMP: full rounds only at the start and at greedy-
+    # quiescence points; every re-activation round is inside a fused
+    # greedy segment (one dispatch, however many rounds it runs) — the
+    # dispatch count is O(bins x quiescence points + segments), not
+    # O(bins x rounds).
+    for scheme in ("smp", "mmp"):
+        res = run_parallel(packed, mln_paper, gg, scheme=scheme)
+        assert 0 < res.full_rounds < res.rounds
+        segments = res.rounds - res.full_rounds  # each is >= 1 round
+        assert res.dispatches <= n_bins * res.full_rounds + segments
+        legacy = run_parallel(packed, mln_paper, gg, scheme=scheme, fused=False)
+        assert res.matches.as_set() == legacy.matches.as_set()
 
 
 @pytest.mark.slow
