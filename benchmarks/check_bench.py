@@ -1,15 +1,24 @@
-"""CI gate: fail if per-round host dispatch counts regress.
+"""CI gate: fail if scale-robust perf invariants regress.
 
 ``python -m benchmarks.check_bench BASELINE.json FRESH.json``
 
-Compares the ``dispatches_per_round`` of every scheme in a fresh
-``BENCH_parallel.json`` (generated by the smoke job via
-``benchmarks.run --json``) against the committed baseline.  The metric
-is scale-robust — it is bounded by O(bins + quiescence points) per
-round, and the bin count is capped by ``DEFAULT_BINS`` regardless of
-corpus size — so a smoke-scale run is comparable to the committed
-default-scale baseline.  Wall times are recorded in the JSON for the
-trajectory but never gated (CI machines are noisy).
+Two baselines are gated, dispatched on the JSON's ``benchmark`` field:
+
+* ``BENCH_parallel.json`` — the ``dispatches_per_round`` of every
+  scheme: bounded by O(bins + quiescence points) per round with the bin
+  count capped by ``DEFAULT_BINS``, so a smoke-scale run is comparable
+  to the committed default-scale baseline.  A regression to the legacy
+  O(bins x rounds) dispatch pattern blows well past the slack.
+* ``BENCH_stream.json`` — the O(dirty) ingest-path ratios:
+  ``splice_per_dirty`` (cover rows staged per dirty neighborhood) and
+  ``splice_per_visit`` (grounding array rows spliced per pair visited).
+  Both are ~O(1) by construction; a regression to per-ingest full
+  repacking / full grounding materialization scales them with the
+  corpus.  Gated as max-over-entries so smoke batch sizes need not
+  match the committed grid.
+
+Wall times are recorded in the JSON for the trajectory but never gated
+(CI machines are noisy).
 """
 
 from __future__ import annotations
@@ -23,16 +32,14 @@ import sys
 REL_SLACK = 1.5
 ABS_SLACK = 2.0
 
+# Stream splice ratios are ~O(1); corpus-scale effects (totality-group /
+# leftover-chunk churn) shift them by fractions, a full-restage
+# regression multiplies them by the cover/pair count.
+STREAM_REL_SLACK = 2.0
+STREAM_ABS_SLACK = 1.0
 
-def main(argv: list[str]) -> int:
-    if len(argv) != 2:
-        print(__doc__)
-        return 2
-    with open(argv[0]) as f:
-        base = json.load(f)
-    with open(argv[1]) as f:
-        fresh = json.load(f)
-    failures = []
+
+def _check_parallel(base: dict, fresh: dict, failures: list[str]) -> None:
     for inst, iblock in base.get("instances", {}).items():
         fblock = fresh.get("instances", {}).get(inst, {})
         for scheme, b in iblock.get("schemes", {}).items():
@@ -53,8 +60,51 @@ def main(argv: list[str]) -> int:
                     f"ok {tag}: dispatches_per_round "
                     f"{got['dispatches_per_round']} <= {limit:.2f}"
                 )
+
+
+def _max_ratio(entries: list[dict], key: str) -> float | None:
+    vals = [e[key] for e in entries if key in e]
+    return max(vals) if vals else None
+
+
+def _check_stream(base: dict, fresh: dict, failures: list[str]) -> None:
+    for block, key in (
+        ("throughput", "splice_per_dirty"),
+        ("grounding", "splice_per_visit"),
+    ):
+        b = _max_ratio(base.get(block, []), key)
+        got = _max_ratio(fresh.get(block, []), key)
+        tag = f"stream/{block}"
+        if b is None:
+            failures.append(f"{tag}: {key} missing from baseline")
+            continue
+        if got is None:
+            failures.append(f"{tag}: {key} missing from fresh results")
+            continue
+        limit = b * STREAM_REL_SLACK + STREAM_ABS_SLACK
+        if got > limit:
+            failures.append(
+                f"{tag}: {key} {got} > limit {limit:.2f} (baseline {b})"
+            )
+        else:
+            print(f"ok {tag}: {key} {got} <= {limit:.2f}")
+
+
+def main(argv: list[str]) -> int:
+    if len(argv) != 2:
+        print(__doc__)
+        return 2
+    with open(argv[0]) as f:
+        base = json.load(f)
+    with open(argv[1]) as f:
+        fresh = json.load(f)
+    failures: list[str] = []
+    if fresh.get("benchmark") == "stream_throughput" or "throughput" in fresh:
+        _check_stream(base, fresh, failures)
+    else:
+        _check_parallel(base, fresh, failures)
     if failures:
-        print("DISPATCH REGRESSION:\n  " + "\n  ".join(failures))
+        print("BENCH REGRESSION:\n  " + "\n  ".join(failures))
         return 1
     return 0
 

@@ -4,14 +4,23 @@ For each micro-batch size the whole corpus is streamed through
 ``ResolveService`` and we report sustained ingest throughput, the mean
 dirty-neighborhood fraction, the mean *replay fraction* (ids swept by
 the localized canopy replay over corpus size — the quantity that was
-1.0 per ingest before localization), and the matcher-evaluation saving
-vs re-running the batch pipeline from scratch at every arrival point.
+1.0 per ingest before localization), the cover-splice accounting
+(``cover_splice_rows``: neighborhood rows actually (re)staged by the
+incremental assembly — ``splice_per_dirty`` stays O(1) because only
+dirty neighborhoods are staged, where full per-ingest repacking would
+scale it with the cover), and the matcher-evaluation saving vs
+re-running the batch pipeline from scratch at every arrival point.
 
 A second block measures the incremental-grounding cost on the MMP path:
 mean/max candidate pairs visited per ``GroundingMaintainer.apply_delta``
 against the total candidate-pair count — the O(dirty) claim for the
 grounding, measurable per ingest (a from-scratch rebuild would visit
-every pair every time).
+every pair every time) — plus the array-splice accounting
+(``grounding_splice_rows`` / ``splice_per_visit``: grounding rows
+patched per pair visited; a full per-ingest materialization would scale
+it with the candidate-pair count).  ``splice_per_dirty`` and
+``splice_per_visit`` are scale-robust ratios gated in CI by
+``benchmarks.check_bench`` against the committed ``BENCH_stream.json``.
 
 A third block measures the serving read path: ``snapshot()`` /
 ``resolve_many()`` QPS from N concurrent reader threads while the whole
@@ -107,7 +116,8 @@ def main() -> dict:
     row("# stream_throughput: hepth, scheme=smp")
     row(
         "batch_size,n_batches,entities,ingest_s,entities_per_s,"
-        "dirty_frac,replay_frac,stream_evals,scratch_evals,eval_saving"
+        "dirty_frac,replay_frac,splice_rows,splice_per_dirty,"
+        "stream_evals,scratch_evals,eval_saving"
     )
     for bs in BATCH_SIZES:
         batches = arrival_stream(ds, batch_size=bs)
@@ -124,6 +134,10 @@ def main() -> dict:
         replay_frac = _mean(
             [r.replay_visits / max(r.n_entities, 1) for r in svc.reports]
         )
+        splice_rows = sum(r.cover_splice_rows for r in svc.reports)
+        splice_per_dirty = splice_rows / max(
+            sum(r.n_dirty for r in svc.reports), 1
+        )
         scratch = _scratch_evals(ds, batches)
         row(
             bs,
@@ -133,6 +147,8 @@ def main() -> dict:
             f"{n / t:.1f}",
             f"{dirty_frac:.3f}",
             f"{replay_frac:.3f}",
+            splice_rows,
+            f"{splice_per_dirty:.2f}",
             svc.total_evals,
             scratch,
             f"{scratch / max(svc.total_evals, 1):.1f}x",
@@ -144,6 +160,8 @@ def main() -> dict:
             "entities_per_s": round(n / t, 1),
             "dirty_frac": round(dirty_frac, 4),
             "replay_frac": round(replay_frac, 4),
+            "cover_splice_rows": int(splice_rows),
+            "splice_per_dirty": round(splice_per_dirty, 3),
             "stream_evals": int(svc.total_evals),
             "scratch_evals": int(scratch),
         })
@@ -152,7 +170,7 @@ def main() -> dict:
     row("# stream_throughput: incremental grounding cost, scheme=mmp")
     row(
         "batch_size,entities,total_pairs,grounding_visits_mean,"
-        "grounding_visits_max,visit_frac_mean"
+        "grounding_visits_max,visit_frac_mean,splice_rows,splice_per_visit"
     )
     for bs in GROUNDING_BATCH_SIZES:
         batches = arrival_stream(ds, batch_size=bs)
@@ -161,6 +179,8 @@ def main() -> dict:
             svc.ingest(b.names, b.edges, ids=b.ids)
         total_pairs = len(svc.delta.packed.pair_levels)
         visits = [r.grounding_pair_visits for r in svc.reports]
+        splice = sum(r.grounding_splice_rows for r in svc.reports)
+        splice_per_visit = splice / max(sum(visits), 1)
         row(
             bs,
             n,
@@ -168,12 +188,16 @@ def main() -> dict:
             f"{_mean(visits):.1f}",
             max(visits),
             f"{_mean(visits) / max(total_pairs, 1):.4f}",
+            splice,
+            f"{splice_per_visit:.2f}",
         )
         out["grounding"].append({
             "batch_size": bs,
             "total_pairs": int(total_pairs),
             "visits_mean": round(_mean(visits), 1),
             "visits_max": int(max(visits)),
+            "grounding_splice_rows": int(splice),
+            "splice_per_visit": round(splice_per_visit, 3),
         })
 
     row("")

@@ -18,6 +18,12 @@ Pipeline (paper-faithful):
 Oversized canopies are split into overlapping windows (stride k/2) in
 similarity-sorted order — the standard blocking trade-off; every split
 window is boundary-expanded again, so totality is preserved.
+
+The whole construction is a deterministic, locally-decomposable
+function of its inputs, which is what the streaming path exploits:
+:class:`CoverDelta` memoizes every stage and re-derives only the slice
+an ingest touched, splicing the packed arrays in place — bit-for-bit
+the scratch build at O(dirty) staging cost (see the class docstring).
 """
 
 from __future__ import annotations
@@ -115,6 +121,57 @@ def _split_oversized(members: np.ndarray, names: list[str], k_core: int) -> list
     return out
 
 
+def _expand_part(
+    part: np.ndarray, adj: dict[int, set[int]], k_max: int
+) -> tuple[np.ndarray, np.ndarray]:
+    """Boundary-expand one split part -> (core, full), clipped to k_max.
+
+    Shared by the scratch build and the incremental :class:`CoverDelta`
+    path so the two produce byte-identical neighborhoods (including the
+    set-iteration tie-break order of the boundary ranking).
+    """
+    boundary: set[int] = set()
+    part_set = set(int(e) for e in part)
+    for e in part:
+        boundary |= adj.get(int(e), set())
+    boundary -= part_set
+    # clip boundary to capacity, preferring high-degree connectors
+    room = k_max - len(part)
+    if len(boundary) > room:
+        ranked = sorted(
+            boundary,
+            key=lambda b: -len(adj.get(b, set()) & part_set),
+        )
+        boundary = set(ranked[:room])
+    full = np.array(sorted(part_set | boundary), dtype=np.int64)
+    core = np.asarray(sorted(part_set), dtype=np.int64)
+    return core, full
+
+
+def _pack_edge_groups(missing, k_max: int) -> list[np.ndarray]:
+    """Greedily pack uncovered relation edges into supplementary
+    neighborhoods (the Def. 7 totality sweep), a pure function of the
+    missing-edge set."""
+    out: list[np.ndarray] = []
+    group: set[int] = set()
+    for a, b in sorted(set(missing)):
+        if len(group | {a, b}) > k_max:
+            out.append(np.asarray(sorted(group), dtype=np.int64))
+            group = set()
+        group |= {a, b}
+    if group:
+        out.append(np.asarray(sorted(group), dtype=np.int64))
+    return out
+
+
+def _pack_leftover_chunks(leftovers: list[int], k_max: int) -> list[np.ndarray]:
+    """Chunk uncovered entities (sorted) into k_max-sized neighborhoods."""
+    return [
+        np.asarray(leftovers[lo : lo + k_max], dtype=np.int64)
+        for lo in range(0, len(leftovers), k_max)
+    ]
+
+
 def build_cover(
     entities: EntityTable,
     relations: Relations,
@@ -147,6 +204,11 @@ def assemble_cover(
     k_max: int = 32,
     boundary_relation: str = "coauthor",
     present: set[int] | None = None,
+    delta: "CoverDelta | None" = None,
+    seeds: list[int] | None = None,
+    touched: set[int] | None = None,
+    new_ids: list[int] | None = None,
+    new_edges: np.ndarray | None = None,
 ) -> Cover:
     """Deterministic canopies -> total cover assembly (split + boundary +
     totality sweep + leftovers).
@@ -158,7 +220,26 @@ def assemble_cover(
     one.  ``present`` restricts the entity-coverage sweep to ids that
     actually exist (a streaming service ingesting batches out of id
     order has temporary holes in the id space).
+
+    ``delta`` selects the incremental path: the persistent
+    :class:`CoverDelta` re-derives only the neighborhoods reachable from
+    ``touched`` entity ids (plus the edge/leftover bookkeeping deltas of
+    ``new_ids``/``new_edges``) and reuses every other neighborhood from
+    its memo — the same Cover as the scratch sweep, at O(dirty) cost.
+    ``seeds`` aligns ``canopies`` with their canopy-cache seed ids.
     """
+    if delta is not None:
+        assert seeds is not None and touched is not None
+        return delta.assemble(
+            canopies,
+            seeds,
+            entities,
+            relations,
+            present=present if present is not None else set(range(len(entities))),
+            touched=touched,
+            new_ids=new_ids or [],
+            new_edges=new_edges,
+        )
     adj = relations.adjacency_sets(boundary_relation)
     core_sets: list[np.ndarray] = []
     full_sets: list[np.ndarray] = []
@@ -171,21 +252,8 @@ def assemble_cover(
             if key in seen or len(part) < 2:
                 continue
             seen.add(key)
-            boundary: set[int] = set()
-            part_set = set(int(e) for e in part)
-            for e in part:
-                boundary |= adj.get(int(e), set())
-            boundary -= part_set
-            # clip boundary to capacity, preferring high-degree connectors
-            room = k_max - len(part)
-            if len(boundary) > room:
-                ranked = sorted(
-                    boundary,
-                    key=lambda b: -len(adj.get(b, set()) & part_set),
-                )
-                boundary = set(ranked[:room])
-            full = np.array(sorted(part_set | boundary), dtype=np.int64)
-            core_sets.append(np.asarray(sorted(part_set), dtype=np.int64))
+            core, full = _expand_part(part, adj, k_max)
+            core_sets.append(core)
             full_sets.append(full)
 
     # Totality sweep (Def. 7): boundary clipping above can drop relation
@@ -206,19 +274,9 @@ def assemble_cover(
             a, b = int(a), int(b)
             if a != b and (min(a, b), max(a, b)) not in covered_edges:
                 missing.append((min(a, b), max(a, b)))
-    if missing:
-        group: set[int] = set()
-        for a, b in sorted(set(missing)):
-            if len(group | {a, b}) > k_max:
-                arr = np.asarray(sorted(group), dtype=np.int64)
-                core_sets.append(arr)
-                full_sets.append(arr)
-                group = set()
-            group |= {a, b}
-        if group:
-            arr = np.asarray(sorted(group), dtype=np.int64)
-            core_sets.append(arr)
-            full_sets.append(arr)
+    for arr in _pack_edge_groups(missing, k_max):
+        core_sets.append(arr)
+        full_sets.append(arr)
 
     # Entity coverage (cover definition: union of neighborhoods == E):
     # canopy singletons with no relation edges still need a home.
@@ -227,8 +285,7 @@ def assemble_cover(
         covered_entities.update(int(e) for e in members)
     universe = set(range(len(entities))) if present is None else set(present)
     leftovers = sorted(universe - covered_entities)
-    for lo in range(0, len(leftovers), k_max):
-        arr = np.asarray(leftovers[lo : lo + k_max], dtype=np.int64)
+    for arr in _pack_leftover_chunks(leftovers, k_max):
         core_sets.append(arr)
         full_sets.append(arr)
     return Cover(core=core_sets, full=full_sets)
@@ -268,8 +325,10 @@ class PackedCover:
     pair_levels: dict[int, int]  # global gid -> sim level (>=1)
     cover: Cover
     # per-neighborhood row keys (bin, members, intra-relation edges) —
-    # populated only when packing with a row_cache; the streaming path
-    # diffs them across ingests to find dirty neighborhoods.
+    # populated when packing with a row_cache or via the CoverDelta
+    # splice path; the streaming path diffs them across ingests to find
+    # dirty neighborhoods, and the device GroundingCache fingerprints
+    # bin rows with them.
     row_keys: list[tuple] | None = None
     # memoized slot-incidence CSR (gid -> neighborhoods), see
     # slot_incidence(); a PackedCover is immutable once built.
@@ -354,34 +413,17 @@ class PackedCover:
         return [int(n) for n in np.unique(hits)]
 
 
-def pack_cover(
-    cover: Cover,
-    entities: EntityTable,
-    relations: Relations,
-    *,
-    k_bins: tuple[int, ...] = DEFAULT_BINS,
-    thresholds=simlib.DEFAULT_THRESHOLDS,
-    boundary_relation: str = "coauthor",
-    level_cache: dict[int, int] | None = None,
-    row_cache: dict[tuple, dict] | None = None,
-) -> PackedCover:
-    """Pack a cover into size-binned padded tensors.
+def _bin_of(size: int, k_bins: tuple[int, ...]) -> int:
+    return next((kb for kb in k_bins if size <= kb), k_bins[-1])
 
-    ``level_cache`` and ``row_cache`` are optional *persistent* caches
-    for the streaming path: ``level_cache`` memoizes the host-side
-    Jaro-Winkler discretization per global pair (a pure memo — the
-    streaming layer may bound it, see ``DeltaCover.level_cache_max``),
-    and ``row_cache`` memoizes fully staged neighborhood rows keyed by
-    ``(k, members, intra-relation edges)`` — a key that changes whenever
-    anything that feeds the row tensors changes, so stale entries can
-    never be reused.  Batch callers omit both and get the original
-    behavior; repacking after a micro-batch only stages rows for
-    new/changed neighborhoods ("repack only affected bins").
+
+def _pair_level_fn(names: list[str], thresholds, level_cache: dict[int, int]):
+    """Host-side Jaro-Winkler discretization, memoized per global pair.
+
+    Levels are name-static, so a cached entry can never go stale; the
+    streaming layer may bound the memo (``DeltaCover.level_cache_max``)
+    because a miss just recomputes from the strings.
     """
-    adj = relations.adjacency_sets(boundary_relation)
-    names = entities.names
-    if level_cache is None:
-        level_cache = {}
 
     def pair_level(a: int, b: int) -> int:
         gid = int(pairlib.make_gid(a, b))
@@ -396,6 +438,111 @@ def pack_cover(
             level_cache[gid] = lev
         return lev
 
+    return pair_level
+
+
+def _row_key(members: np.ndarray, k: int, adj: dict[int, set[int]]) -> tuple:
+    """``(k, members, intra-relation edges)`` — changes whenever anything
+    that feeds the staged row tensors changes, so a cached row keyed by
+    it can never be reused stale."""
+    mkey = tuple(int(e) for e in members[:k])
+    intra = tuple(
+        (a, b)
+        for ai, a in enumerate(mkey)
+        for b in mkey[ai + 1 :]
+        if b in adj.get(a, set())
+    )
+    return (k, mkey, intra)
+
+
+def _stage_row(
+    members: np.ndarray, k: int, adj: dict[int, set[int]], pair_level
+) -> dict:
+    """Stage one neighborhood's padded row tensors (the per-row work of
+    :func:`pack_cover`, shared with the :class:`CoverDelta` splice path)."""
+    members = members[:k]  # safety clip (build_cover respects k_max)
+    P = pairlib.num_pairs(k)
+    ii, jj = pairlib.triu_indices(k)
+
+    ids = np.full(k, -1, dtype=np.int64)
+    ids[: len(members)] = members
+    emask = ids >= 0
+    co = np.zeros((k, k), dtype=bool)
+    for a_slot in range(len(members)):
+        a = int(members[a_slot])
+        nbrs = adj.get(a, set())
+        for b_slot in range(a_slot + 1, len(members)):
+            if int(members[b_slot]) in nbrs:
+                co[a_slot, b_slot] = True
+                co[b_slot, a_slot] = True
+
+    lev = np.zeros(P, dtype=np.int8)
+    gid = np.full(P, -1, dtype=np.int64)
+    pmask = np.zeros(P, dtype=bool)
+    for p in range(P):
+        i, j = int(ii[p]), int(jj[p])
+        if not (emask[i] and emask[j]):
+            continue
+        a, b = int(ids[i]), int(ids[j])
+        lv = pair_level(a, b)
+        if lv >= 1:
+            lev[p] = lv
+            gid[p] = pairlib.make_gid(a, b)
+            pmask[p] = True
+    return dict(ids=ids, emask=emask, co=co, lev=lev, gid=gid, pmask=pmask)
+
+
+def _stack_rows(rows: list[dict]) -> NeighborhoodBatch:
+    return NeighborhoodBatch(
+        entity_ids=np.stack([r["ids"] for r in rows]),
+        entity_mask=np.stack([r["emask"] for r in rows]),
+        coauthor=np.stack([r["co"] for r in rows]),
+        sim_level=np.stack([r["lev"] for r in rows]),
+        pair_gid=np.stack([r["gid"] for r in rows]),
+        pair_mask=np.stack([r["pmask"] for r in rows]),
+    )
+
+
+def pack_cover(
+    cover: Cover,
+    entities: EntityTable,
+    relations: Relations,
+    *,
+    k_bins: tuple[int, ...] = DEFAULT_BINS,
+    thresholds=simlib.DEFAULT_THRESHOLDS,
+    boundary_relation: str = "coauthor",
+    level_cache: dict[int, int] | None = None,
+    row_cache: dict[tuple, dict] | None = None,
+    delta: "CoverDelta | None" = None,
+    prev: "PackedCover | None" = None,
+) -> PackedCover:
+    """Pack a cover into size-binned padded tensors.
+
+    ``level_cache`` and ``row_cache`` are optional *persistent* caches
+    for the streaming path: ``level_cache`` memoizes the host-side
+    Jaro-Winkler discretization per global pair (a pure memo — the
+    streaming layer may bound it, see ``DeltaCover.level_cache_max``),
+    and ``row_cache`` memoizes fully staged neighborhood rows keyed by
+    ``(k, members, intra-relation edges)`` — a key that changes whenever
+    anything that feeds the row tensors changes, so stale entries can
+    never be reused.  Batch callers omit both and get the original
+    behavior; repacking after a micro-batch only stages rows for
+    new/changed neighborhoods ("repack only affected bins").
+
+    ``delta``/``prev`` select the incremental splice path: ``delta`` is
+    the persistent :class:`CoverDelta` whose :meth:`CoverDelta.assemble`
+    produced ``cover``, and ``prev`` is the previous :class:`PackedCover`
+    whose per-bin arrays are reused wholesale (unchanged bins) or spliced
+    (only freshly staged rows recomputed) — bit-for-bit equal to the
+    scratch pack, at O(dirty) staging cost per ingest.
+    """
+    if delta is not None:
+        return delta.pack(cover, prev=prev, level_cache=level_cache)
+    adj = relations.adjacency_sets(boundary_relation)
+    if level_cache is None:
+        level_cache = {}
+    pair_level = _pair_level_fn(entities.names, thresholds, level_cache)
+
     n_nb = len(cover)
     neighborhood_bin = np.zeros(n_nb, dtype=np.int64)
     neighborhood_row = np.zeros(n_nb, dtype=np.int64)
@@ -403,54 +550,16 @@ def pack_cover(
     row_keys: list[tuple] | None = [] if row_cache is not None else None
 
     for n, members in enumerate(cover.full):
-        size = len(members)
-        k = next((kb for kb in k_bins if size <= kb), k_bins[-1])
-        members = members[:k]  # safety clip (build_cover respects k_max)
-        k_eff = k
+        k = _bin_of(len(members), k_bins)
 
         row = None
         row_key = None
         if row_cache is not None:
-            mkey = tuple(int(e) for e in members)
-            intra = tuple(
-                (a, b)
-                for ai, a in enumerate(mkey)
-                for b in mkey[ai + 1 :]
-                if b in adj.get(a, set())
-            )
-            row_key = (k, mkey, intra)
+            row_key = _row_key(members, k, adj)
             row_keys.append(row_key)
             row = row_cache.get(row_key)
         if row is None:
-            P = pairlib.num_pairs(k_eff)
-            ii, jj = pairlib.triu_indices(k_eff)
-
-            ids = np.full(k_eff, -1, dtype=np.int64)
-            ids[: len(members)] = members
-            emask = ids >= 0
-            co = np.zeros((k_eff, k_eff), dtype=bool)
-            for a_slot in range(len(members)):
-                a = int(members[a_slot])
-                nbrs = adj.get(a, set())
-                for b_slot in range(a_slot + 1, len(members)):
-                    if int(members[b_slot]) in nbrs:
-                        co[a_slot, b_slot] = True
-                        co[b_slot, a_slot] = True
-
-            lev = np.zeros(P, dtype=np.int8)
-            gid = np.full(P, -1, dtype=np.int64)
-            pmask = np.zeros(P, dtype=bool)
-            for p in range(P):
-                i, j = int(ii[p]), int(jj[p])
-                if not (emask[i] and emask[j]):
-                    continue
-                a, b = int(ids[i]), int(ids[j])
-                lv = pair_level(a, b)
-                if lv >= 1:
-                    lev[p] = lv
-                    gid[p] = pairlib.make_gid(a, b)
-                    pmask[p] = True
-            row = dict(ids=ids, emask=emask, co=co, lev=lev, gid=gid, pmask=pmask)
+            row = _stage_row(members, k, adj, pair_level)
             if row_cache is not None:
                 row_cache[row_key] = row
 
@@ -463,16 +572,8 @@ def pack_cover(
     for k, rows in staged.items():
         if not rows:
             continue
-        bins[k] = NeighborhoodBatch(
-            entity_ids=np.stack([r["ids"] for r in rows]),
-            entity_mask=np.stack([r["emask"] for r in rows]),
-            coauthor=np.stack([r["co"] for r in rows]),
-            sim_level=np.stack([r["lev"] for r in rows]),
-            pair_gid=np.stack([r["gid"] for r in rows]),
-            pair_mask=np.stack([r["pmask"] for r in rows]),
-        )
-        rows_idx = np.where(neighborhood_bin == k)[0]
-        bin_rows[k] = rows_idx
+        bins[k] = _stack_rows(rows)
+        bin_rows[k] = np.where(neighborhood_bin == k)[0]
 
     # pair_levels must reflect pairs co-resident in *this* cover — not the
     # level cache, which on the streaming path persists across covers and
@@ -491,3 +592,557 @@ def pack_cover(
         cover=cover,
         row_keys=row_keys,
     )
+
+
+# ---------------------------------------------------------------------------
+# Incremental cover assembly + packed-array splicing (the CoverDelta path)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class _Part:
+    """One memoized canopy part: a neighborhood candidate keyed by its
+    sorted core-member tuple, shared by every canopy that emits it."""
+
+    core: np.ndarray
+    full: np.ndarray
+    row_key: tuple
+    emitters: set[int]  # seeds whose canopy emits this part
+
+
+class CoverDelta:
+    """Persistent incremental cover assembly + packed-array splice state.
+
+    The scratch build (:func:`assemble_cover` + :func:`pack_cover`) is a
+    deterministic function of ``(canopies, names, relations, present)``;
+    every stage decomposes over a local neighborhood of the input, so a
+    micro-batch that touches a small entity set can only change a small
+    slice of the output.  This class memoizes each stage and re-derives
+    only that slice:
+
+    * **canopy parts** — split windows + boundary expansion are memoized
+      per canopy seed; a canopy is re-derived only when a member is in
+      ``touched`` (canopy re-swept, or a member gained a relation edge).
+      Part content is keyed by the sorted core tuple, so the
+      first-occurrence dedup of the scratch build becomes "owner =
+      minimum emitting seed" (canopies arrive in seed order).
+    * **totality sweep** (Def. 7) — per-edge cover counts are maintained
+      under part adds/retires and new edges; the supplementary edge
+      groups are re-packed only when the missing-edge set changes, and
+      diffed by content so unchanged groups are never re-staged.
+    * **leftover chunks** — per-entity cover counts maintain the
+      uncovered set; chunks are re-packed on change and diffed likewise.
+    * **row staging + packing** — rows are staged once per row key
+      ``(k, members, intra-edges)`` and spliced into the per-bin padded
+      arrays: an untouched bin is reused wholesale, an appended-to bin
+      concatenates only the fresh tail, and only a bin whose row
+      sequence changed mid-way is re-stacked (from memoized rows — no
+      re-staging).
+
+    The result is bit-for-bit equal to the scratch build at every ingest
+    (differential-tested in ``tests/test_stream.py``) with staging work
+    proportional to the dirty set: ``last_splice_rows`` counts the rows
+    actually (re)staged, the quantity asserted O(dirty) by the tests and
+    gated in CI via ``benchmarks/check_bench.py``.
+
+    Single boundary relation only: the totality bookkeeping tracks the
+    relation whose edges arrive via ``new_edges``, matching the scratch
+    build's use of one ``boundary_relation`` (the repo's corpora have
+    exactly one relation).
+    """
+
+    def __init__(
+        self,
+        *,
+        k_max: int = 32,
+        k_bins: tuple[int, ...] = DEFAULT_BINS,
+        thresholds=None,
+        boundary_relation: str = "coauthor",
+    ):
+        self.k_max = k_max
+        self.k_bins = k_bins
+        self.thresholds = thresholds or simlib.DEFAULT_THRESHOLDS
+        self.boundary_relation = boundary_relation
+        # canopy-level memo
+        self._seed_parts: dict[int, list[tuple]] = {}  # seed -> part keys
+        self._seed_members: dict[int, np.ndarray] = {}
+        self._member_seeds: dict[int, set[int]] = {}  # entity -> seeds
+        # part-level memo
+        self._parts: dict[tuple, _Part] = {}
+        self._containers: dict[int, set[tuple]] = {}  # entity -> part keys
+        # totality (Def. 7) bookkeeping
+        self._all_edges: set[tuple[int, int]] = set()
+        self._edge_cov: dict[tuple[int, int], int] = {}
+        self._missing: set[tuple[int, int]] = set()
+        self._groups: list[np.ndarray] = []
+        self._group_keys: list[tuple] = []
+        self._group_row_keys: list[tuple] = []
+        self._group_containers: dict[int, set[tuple]] = {}
+        # entity coverage / leftovers
+        self._present: set[int] = set()
+        self._cov_cnt: dict[int, int] = {}
+        self._uncovered: set[int] = set()
+        self._chunks: list[np.ndarray] = []
+        self._chunk_keys: list[tuple] = []
+        self._chunk_row_keys: list[tuple] = []
+        # staged rows + reference counts
+        self._rows: dict[tuple, dict] = {}
+        self._row_ref: dict[tuple, int] = {}
+        self._lev_ref: dict[int, int] = {}
+        self._pair_levels: dict[int, int] = {}
+        # per-bin packed splice state
+        self._bin_seq: dict[int, list[tuple]] = {}
+        self._bin_arrays: dict[int, NeighborhoodBatch] = {}
+        # assemble -> pack handoff + per-ingest outputs
+        self._pending: tuple | None = None
+        self._adj: dict[int, set[int]] = {}
+        self._names: list = []
+        self.last_dirty: list[int] = []
+        self.last_splice_rows = 0
+        self.total_splice_rows = 0
+        self.last_added_pairs: dict[int, int] = {}
+        self.last_retracted_pairs: list[int] = []
+
+    # -- count maintenance helpers ---------------------------------------
+
+    def _cov_delta(self, e: int, d: int) -> None:
+        c = self._cov_cnt.get(e, 0) + d
+        if c:
+            self._cov_cnt[e] = c
+            if e in self._uncovered:
+                self._uncovered.discard(e)
+                self._chunks_stale = True
+        else:
+            self._cov_cnt.pop(e, None)
+            if e in self._present and e not in self._uncovered:
+                self._uncovered.add(e)
+                self._chunks_stale = True
+
+    def _edge_delta(self, e: tuple[int, int], d: int) -> None:
+        c = self._edge_cov.get(e, 0) + d
+        self._edge_cov[e] = c
+        if c == 0 and e not in self._missing:
+            self._missing.add(e)
+            self._missing_stale = True
+        elif c > 0 and e in self._missing:
+            self._missing.discard(e)
+            self._missing_stale = True
+
+    def _full_edges(self, full: np.ndarray):
+        """Canonical relation edges with both endpoints in ``full``."""
+        fset = set(int(e) for e in full)
+        for a in fset:
+            for b in self._adj.get(a, ()):
+                if a < b and b in fset:
+                    yield (a, b)
+
+    def _add_part(self, key: tuple, window: np.ndarray, s: int) -> None:
+        part = self._parts.get(key)
+        if part is not None:
+            part.emitters.add(s)
+            return
+        core, full = _expand_part(window, self._adj, self.k_max)
+        rk = _row_key(full, _bin_of(len(full), self.k_bins), self._adj)
+        self._parts[key] = _Part(core, full, rk, {s})
+        for e in map(int, full):
+            self._containers.setdefault(e, set()).add(key)
+            self._cov_delta(e, +1)
+        for edge in self._full_edges(full):
+            self._edge_delta(edge, +1)
+        self._acquires.append(rk)
+
+    def _drop_part(self, key: tuple, s: int) -> None:
+        part = self._parts[key]
+        part.emitters.discard(s)
+        if part.emitters:
+            return
+        for e in map(int, part.full):
+            cs = self._containers.get(e)
+            if cs is not None:
+                cs.discard(key)
+                if not cs:
+                    del self._containers[e]
+            self._cov_delta(e, -1)
+        for edge in self._full_edges(part.full):
+            self._edge_delta(edge, -1)
+        self._releases.append(part.row_key)
+        del self._parts[key]
+
+    # -- assemble ---------------------------------------------------------
+
+    def assemble(
+        self,
+        canopies: list[np.ndarray],
+        seeds: list[int],
+        entities: EntityTable,
+        relations: Relations,
+        *,
+        present: set[int],
+        touched: set[int],
+        new_ids: list[int],
+        new_edges: np.ndarray | None,
+    ) -> Cover:
+        """Incrementally re-derive the total cover after an ingest.
+
+        ``canopies``/``seeds`` are the full current canopy list in seed
+        order (clean entries are memo hits); ``touched`` is the set of
+        entity ids whose similarity region was re-swept or that gained a
+        relation edge this ingest.  Equal to the scratch
+        :func:`assemble_cover` over the same inputs.
+        """
+        self._adj = relations.adjacency_sets(self.boundary_relation)
+        self._names = entities.names
+        k_core = max(2, int(self.k_max * 0.6))
+        self._acquires: list[tuple] = []
+        self._releases: list[tuple] = []
+        self._missing_stale = False
+        self._chunks_stale = False
+        stale_parts: set[tuple] = set()
+        stale_groups: set[tuple] = set()
+
+        # 0. present growth: new ids start uncovered until a part/group
+        # claims them.
+        for e in new_ids:
+            e = int(e)
+            self._present.add(e)
+            if self._cov_cnt.get(e, 0) == 0 and e not in self._uncovered:
+                self._uncovered.add(e)
+                self._chunks_stale = True
+        # the caller's universe must be exactly the accumulated new_ids:
+        # this class supports growth only (no entity eviction), and the
+        # leftover chunks are computed from the internal set.  The guard
+        # is O(1) by design (an O(n) set comparison per ingest would
+        # reintroduce the corpus-sized pass this class exists to remove),
+        # so it catches shrinkage/extra ids by cardinality only — an
+        # equal-cardinality divergence is on the caller (DeltaCover
+        # passes the very set new_ids accumulated into).
+        if len(present) != len(self._present):
+            raise ValueError(
+                f"present has {len(present)} ids but {len(self._present)} "
+                "were accumulated via new_ids — CoverDelta tracks a "
+                "grow-only universe"
+            )
+
+        # 1. new relation edges: initial cover counts from the container
+        # index, and row-key staleness for neighborhoods that hold both
+        # endpoints (their coauthor tensor changes even when membership
+        # does not).
+        if new_edges is not None and len(new_edges):
+            for x, y in np.asarray(new_edges, dtype=np.int64):
+                x, y = int(x), int(y)
+                if x == y:
+                    continue
+                edge = (x, y) if x < y else (y, x)
+                if edge in self._all_edges:
+                    continue
+                self._all_edges.add(edge)
+                both = self._containers.get(x, set()) & self._containers.get(y, set())
+                self._edge_cov[edge] = len(both)
+                if not both:
+                    self._missing.add(edge)
+                    self._missing_stale = True
+                stale_parts |= both
+                stale_groups |= self._group_containers.get(
+                    x, set()
+                ) & self._group_containers.get(y, set())
+
+        # 2. dirty canopies: any canopy with a touched member (re-swept
+        # region, or a member that gained an edge — boundary expansion
+        # and clip ranking read members' adjacency only).
+        seed_arr = np.asarray(seeds, dtype=np.int64)
+
+        def _seed_pos(e: int) -> int:
+            p = int(np.searchsorted(seed_arr, e))
+            return p if p < len(seed_arr) and int(seed_arr[p]) == e else -1
+
+        dirty_seeds: set[int] = set()
+        for e in touched:
+            dirty_seeds |= self._member_seeds.get(e, set())
+            if _seed_pos(e) >= 0:
+                dirty_seeds.add(e)
+
+        # per-seed diff: windows whose core avoids `touched` and is kept
+        # by the new split are reused without any churn.
+        plans: list[tuple[int, list[tuple], list[tuple[tuple, np.ndarray]]]] = []
+        for s in sorted(dirty_seeds):
+            pos = _seed_pos(s)
+            old_keys = self._seed_parts.get(s, [])
+            new_parts: list[tuple[tuple, np.ndarray]] = []
+            if pos >= 0:
+                members = canopies[pos]
+                for win in _split_oversized(members, self._names, k_core):
+                    if len(win) < 2:
+                        continue
+                    new_parts.append((tuple(sorted(int(e) for e in win)), win))
+            new_key_set = {k for k, _ in new_parts}
+            kept = {
+                k
+                for k in old_keys
+                if k in new_key_set and not any(e in touched for e in k)
+            }
+            # update the canopy-member index
+            for e in map(int, self._seed_members.get(s, ())):
+                ms = self._member_seeds.get(e)
+                if ms is not None:
+                    ms.discard(s)
+                    if not ms:
+                        del self._member_seeds[e]
+            if pos >= 0:
+                self._seed_members[s] = canopies[pos]
+                for e in map(int, canopies[pos]):
+                    self._member_seeds.setdefault(e, set()).add(s)
+                self._seed_parts[s] = [k for k, _ in new_parts]
+            else:
+                self._seed_members.pop(s, None)
+                self._seed_parts.pop(s, None)
+            plans.append((s, [k for k in old_keys if k not in kept],
+                          [(k, w) for k, w in new_parts if k not in kept]))
+
+        # two-phase apply: all drops, then all adds — a part key shared
+        # by several dirty canopies is fully retired before any emitter
+        # re-stages it against the current adjacency.
+        for s, drops, _ in plans:
+            for key in drops:
+                self._drop_part(key, s)
+        for s, _, adds in plans:
+            for key, win in adds:
+                self._add_part(key, win, s)
+
+        # 3. stale row keys: surviving parts whose intra-edge set grew.
+        for key in stale_parts:
+            part = self._parts.get(key)
+            if part is None:
+                continue
+            rk = _row_key(part.full, _bin_of(len(part.full), self.k_bins), self._adj)
+            if rk != part.row_key:
+                self._releases.append(part.row_key)
+                self._acquires.append(rk)
+                part.row_key = rk
+
+        # 4. totality groups (re-packed only when the missing set moved).
+        if self._missing_stale:
+            new_groups = _pack_edge_groups(self._missing, self.k_max)
+            new_keys = [tuple(int(e) for e in g) for g in new_groups]
+            old = dict(zip(self._group_keys, zip(self._groups, self._group_row_keys)))
+            new_key_set = set(new_keys)
+            for gk, (_, rk) in old.items():
+                if gk not in new_key_set:
+                    for e in gk:
+                        gc = self._group_containers.get(e)
+                        if gc is not None:
+                            gc.discard(gk)
+                            if not gc:
+                                del self._group_containers[e]
+                        self._cov_delta(e, -1)
+                    self._releases.append(rk)
+            groups: list[np.ndarray] = []
+            group_row_keys: list[tuple] = []
+            for gk, arr in zip(new_keys, new_groups):
+                hit = old.get(gk)
+                if hit is not None:
+                    arr, rk = hit
+                else:
+                    rk = _row_key(arr, _bin_of(len(arr), self.k_bins), self._adj)
+                    for e in gk:
+                        self._group_containers.setdefault(e, set()).add(gk)
+                        self._cov_delta(e, +1)
+                    self._acquires.append(rk)
+                groups.append(arr)
+                group_row_keys.append(rk)
+            self._groups, self._group_keys = groups, new_keys
+            self._group_row_keys = group_row_keys
+        for gk in stale_groups:
+            try:
+                i = self._group_keys.index(gk)
+            except ValueError:
+                continue
+            rk = _row_key(
+                self._groups[i], _bin_of(len(self._groups[i]), self.k_bins), self._adj
+            )
+            if rk != self._group_row_keys[i]:
+                self._releases.append(self._group_row_keys[i])
+                self._acquires.append(rk)
+                self._group_row_keys[i] = rk
+
+        # 5. leftover chunks.
+        if self._chunks_stale:
+            new_chunks = _pack_leftover_chunks(sorted(self._uncovered), self.k_max)
+            new_keys = [tuple(int(e) for e in c) for c in new_chunks]
+            old = dict(zip(self._chunk_keys, zip(self._chunks, self._chunk_row_keys)))
+            new_key_set = set(new_keys)
+            for ck, (_, rk) in old.items():
+                if ck not in new_key_set:
+                    self._releases.append(rk)
+            chunks: list[np.ndarray] = []
+            chunk_row_keys: list[tuple] = []
+            for ck, arr in zip(new_keys, new_chunks):
+                hit = old.get(ck)
+                if hit is not None:
+                    arr, rk = hit
+                else:
+                    rk = _row_key(arr, _bin_of(len(arr), self.k_bins), self._adj)
+                    self._acquires.append(rk)
+                chunks.append(arr)
+                chunk_row_keys.append(rk)
+            self._chunks, self._chunk_keys = chunks, new_keys
+            self._chunk_row_keys = chunk_row_keys
+
+        # 6. walk: first-occurrence order over canopies (owner = minimum
+        # emitting seed), then totality groups, then leftover chunks —
+        # exactly the scratch emission order.
+        core_list: list[np.ndarray] = []
+        full_list: list[np.ndarray] = []
+        keys: list[tuple] = []
+        for s in seeds:
+            for key in self._seed_parts.get(int(s), ()):
+                part = self._parts[key]
+                if min(part.emitters) == s:
+                    core_list.append(part.core)
+                    full_list.append(part.full)
+                    keys.append(part.row_key)
+        for arr, rk in zip(self._groups, self._group_row_keys):
+            core_list.append(arr)
+            full_list.append(arr)
+            keys.append(rk)
+        for arr, rk in zip(self._chunks, self._chunk_row_keys):
+            core_list.append(arr)
+            full_list.append(arr)
+            keys.append(rk)
+        cover = Cover(core=core_list, full=full_list)
+        self._pending = (cover, keys)
+        return cover
+
+    # -- pack -------------------------------------------------------------
+
+    def pack(
+        self,
+        cover: Cover,
+        *,
+        prev: PackedCover | None = None,
+        level_cache: dict[int, int] | None = None,
+    ) -> PackedCover:
+        """Splice the packed arrays for the cover built by :meth:`assemble`.
+
+        Only rows whose key is new this ingest are staged
+        (``last_splice_rows``); per-bin arrays are reused outright when
+        the bin's row sequence is unchanged, extended by one concatenate
+        when rows were only appended, and re-stacked from memoized rows
+        otherwise.  ``prev`` (the previous packed cover) is accepted for
+        API symmetry — the splice state lives on this object.
+        """
+        assert self._pending is not None and self._pending[0] is cover, (
+            "pack() must follow the assemble() that built this cover"
+        )
+        _, keys = self._pending
+        self._pending = None
+        pair_level = _pair_level_fn(
+            self._names, self.thresholds, level_cache if level_cache is not None else {}
+        )
+
+        # 1. stage rows for acquired keys not yet memoized (the O(dirty)
+        # work) — members are recoverable from the row key itself.
+        splice_rows = 0
+        for rk in self._acquires:
+            if rk not in self._rows:
+                members = np.asarray(rk[1], dtype=np.int64)
+                self._rows[rk] = _stage_row(members, rk[0], self._adj, pair_level)
+                splice_rows += 1
+
+        # 2. reference counting: batch-apply releases then acquires; a
+        # key is *fresh* (dirty) iff it was absent from the previous
+        # cover, i.e. its refcount was zero and not because this very
+        # ingest released it.
+        released_to_zero: set[tuple] = set()
+        gid_removed: set[int] = set()
+        fresh_keys: set[tuple] = set()
+        gid_fresh: set[int] = set()
+        for rk in self._releases:
+            self._row_ref[rk] -= 1
+            if self._row_ref[rk] == 0:
+                released_to_zero.add(rk)
+            row = self._rows[rk]
+            for g in row["gid"][row["pmask"]]:
+                g = int(g)
+                self._lev_ref[g] -= 1
+                if self._lev_ref[g] == 0:
+                    gid_removed.add(g)
+        for rk in self._acquires:
+            ref = self._row_ref.get(rk, 0)
+            if ref == 0 and rk not in released_to_zero:
+                fresh_keys.add(rk)
+            self._row_ref[rk] = ref + 1
+            row = self._rows[rk]
+            for g, lv in zip(row["gid"][row["pmask"]], row["lev"][row["pmask"]]):
+                g = int(g)
+                ref_g = self._lev_ref.get(g, 0)
+                if ref_g == 0:
+                    self._pair_levels[g] = int(lv)
+                    if g not in gid_removed:
+                        gid_fresh.add(g)
+                self._lev_ref[g] = ref_g + 1
+        retracted = [g for g in gid_removed if self._lev_ref.get(g, 0) == 0]
+        for g in retracted:
+            del self._pair_levels[g]
+            del self._lev_ref[g]
+        added = {g: self._pair_levels[g] for g in gid_fresh}
+
+        # 3. bin sequences + neighborhood indices.
+        n_nb = len(keys)
+        neighborhood_bin = np.zeros(n_nb, dtype=np.int64)
+        neighborhood_row = np.zeros(n_nb, dtype=np.int64)
+        bin_seqs: dict[int, list[tuple]] = {}
+        for n, rk in enumerate(keys):
+            k = rk[0]
+            seq = bin_seqs.setdefault(k, [])
+            neighborhood_bin[n] = k
+            neighborhood_row[n] = len(seq)
+            seq.append(rk)
+
+        # 4. per-bin splice: reuse / append / re-stack.
+        bins: dict[int, NeighborhoodBatch] = {}
+        fields = (
+            "entity_ids", "entity_mask", "coauthor",
+            "sim_level", "pair_gid", "pair_mask",
+        )
+        for k, seq in bin_seqs.items():
+            old_seq = self._bin_seq.get(k)
+            old_arr = self._bin_arrays.get(k)
+            if old_arr is not None and old_seq == seq:
+                bins[k] = old_arr
+            elif (
+                old_arr is not None
+                and len(seq) > len(old_seq)
+                and seq[: len(old_seq)] == old_seq
+            ):
+                tail = _stack_rows([self._rows[rk] for rk in seq[len(old_seq) :]])
+                bins[k] = NeighborhoodBatch(*(
+                    np.concatenate([getattr(old_arr, f), getattr(tail, f)])
+                    for f in fields
+                ))
+            else:
+                bins[k] = _stack_rows([self._rows[rk] for rk in seq])
+        self._bin_seq = bin_seqs
+        self._bin_arrays = dict(bins)
+        bin_rows = {k: np.where(neighborhood_bin == k)[0] for k in bins}
+
+        # 5. evict rows that left the cover; publish per-ingest outputs.
+        for rk in released_to_zero:
+            if self._row_ref.get(rk, 0) == 0:
+                self._rows.pop(rk, None)
+                self._row_ref.pop(rk, None)
+        self.last_dirty = [n for n, rk in enumerate(keys) if rk in fresh_keys]
+        self.last_splice_rows = splice_rows
+        self.total_splice_rows += splice_rows
+        self.last_added_pairs = added
+        self.last_retracted_pairs = retracted
+        self._acquires = []
+        self._releases = []
+        return PackedCover(
+            bins=bins,
+            bin_rows=bin_rows,
+            neighborhood_bin=neighborhood_bin,
+            neighborhood_row=neighborhood_row,
+            pair_levels=dict(self._pair_levels),
+            cover=cover,
+            row_keys=list(keys),
+        )

@@ -188,6 +188,49 @@ class GroundingMaintainer:
         self.coup_adj: dict[int, set[int]] = {}  # gid -> coupled gids
         self.total_pair_visits = 0
         self._gg: GlobalGrounding | None = None
+        # pending array-splice deltas accumulated since the last
+        # grounding() materialization (see _record_* helpers)
+        self._pend_add: set[int] = set()
+        self._pend_del: set[int] = set()
+        self._pend_u: set[int] = set()
+        self._pend_cadd: set[tuple[int, int]] = set()
+        self._pend_cdel: set[tuple[int, int]] = set()
+        self.last_splice_rows = 0
+        self.total_splice_rows = 0
+
+    # -- pending-delta bookkeeping (drives the array splice) --------------
+
+    def _record_pair_added(self, g: int) -> None:
+        if g in self._pend_del:
+            # the live arrays still hold g: a delete+add cancels to a
+            # unary patch (the common-neighbor count may have moved)
+            self._pend_del.discard(g)
+            self._pend_u.add(g)
+        else:
+            self._pend_add.add(g)
+
+    def _record_pair_retracted(self, g: int) -> None:
+        if g in self._pend_add:
+            self._pend_add.discard(g)
+        else:
+            self._pend_del.add(g)
+        self._pend_u.discard(g)
+
+    def _record_unary_changed(self, g: int) -> None:
+        if g not in self._pend_add:
+            self._pend_u.add(g)
+
+    def _record_coupling_added(self, key: tuple[int, int]) -> None:
+        if key in self._pend_cdel:
+            self._pend_cdel.discard(key)
+        else:
+            self._pend_cadd.add(key)
+
+    def _record_coupling_removed(self, key: tuple[int, int]) -> None:
+        if key in self._pend_cadd:
+            self._pend_cadd.discard(key)
+        else:
+            self._pend_cdel.add(key)
 
     def __len__(self) -> int:
         return len(self.levels)
@@ -204,6 +247,7 @@ class GroundingMaintainer:
         self.coup.add(key)
         self.coup_adj.setdefault(g1, set()).add(g2)
         self.coup_adj.setdefault(g2, set()).add(g1)
+        self._record_coupling_added(key)
         return 1
 
     # -- the delta API ----------------------------------------------------
@@ -241,8 +285,11 @@ class GroundingMaintainer:
             self.pairs_of.get(b, set()).discard(g)
             for g2 in self.coup_adj.pop(g, set()):
                 self.coup_adj[g2].discard(g)
-                self.coup.discard((g, g2) if g < g2 else (g2, g))
+                key = (g, g2) if g < g2 else (g2, g)
+                self.coup.discard(key)
+                self._record_coupling_removed(key)
                 stats.couplings_removed += 1
+            self._record_pair_retracted(g)
             visited.add(g)
             stats.pairs_retracted += 1
 
@@ -264,6 +311,7 @@ class GroundingMaintainer:
                         nz = self.adj.get(z, set())
                         if v in nz:  # v is a new common neighbor of (u, z)
                             self.common[g] += 1
+                            self._record_unary_changed(g)
                         # new couplings through the (u, v) adjacency link:
                         # partner pairs (v, d) with d adjacent to z.
                         for d in nz:
@@ -288,6 +336,7 @@ class GroundingMaintainer:
             self.common[g] = len(na & nb)
             self.pairs_of.setdefault(a, set()).add(g)
             self.pairs_of.setdefault(b, set()).add(g)
+            self._record_pair_added(g)
             visited.add(g)
             stats.pairs_added += 1
             for c in na:
@@ -300,22 +349,20 @@ class GroundingMaintainer:
 
         stats.pairs_visited = len(visited)
         self.total_pair_visits += stats.pairs_visited
-        if visited or stats.edges_added:
-            self._gg = None  # invalidate the materialized arrays
         return stats
 
     # -- materialization --------------------------------------------------
 
-    def grounding(self) -> GlobalGrounding:
-        """The array-form grounding (cached until the next delta).
+    def _unary_of(self, gids: np.ndarray) -> np.ndarray:
+        """float32 unaries for ``gids``, with exactly the rounding of the
+        scalar batch build: f32(w_sim[lev]) + f32(w_co * common)."""
+        lv = np.fromiter((self.levels[int(g)] for g in gids), dtype=np.int64,
+                         count=len(gids))
+        cn = np.fromiter((self.common[int(g)] for g in gids), dtype=np.float64,
+                         count=len(gids))
+        return self.w_sim[lv] + (self.w_co * cn).astype(np.float32)
 
-        Bit-for-bit equal to ``build_global_grounding`` over the same
-        accumulated pairs/edges: the unary is recomputed from the exact
-        integer common-neighbor count with the same float32 rounding as
-        the scalar batch loop.
-        """
-        if self._gg is not None:
-            return self._gg
+    def _build_full(self) -> GlobalGrounding:
         n = len(self.levels)
         # One aligned pass over the dicts, then argsort — no per-element
         # Python boxing or comparison sorts.
@@ -342,10 +389,121 @@ class GroundingMaintainer:
         else:
             coup_p = np.zeros(0, dtype=np.int32)
             coup_q = np.zeros(0, dtype=np.int32)
-        self._gg = GlobalGrounding(
+        return GlobalGrounding(
             gids=gids, u=u.astype(np.float32), coup_p=coup_p, coup_q=coup_q,
             w_co=self.w_co,
         )
+
+    def _splice(self, gg: GlobalGrounding) -> GlobalGrounding:
+        """Patch the live arrays with the pending delta.
+
+        Only the delta's rows are recomputed (``last_splice_rows`` counts
+        them); untouched unary entries and coupling rows are carried over
+        as memcpy, so per-ingest materialization cost no longer includes
+        the O(P) per-pair host pass of the full build.  Coupling rows are
+        kept sorted by (gid_p, gid_q), which equals the full build's
+        (index_p, index_q) lexsort because gid order and index order
+        coincide.
+        """
+        gids, u = gg.gids, gg.u
+        coup_p = gg.coup_p.astype(np.int64)
+        coup_q = gg.coup_q.astype(np.int64)
+
+        def _keys(p_idx, q_idx, n):
+            return p_idx * np.int64(n) + q_idx
+
+        # 1. coupling deletions, located in the old index space.
+        if self._pend_cdel:
+            cd = np.asarray(sorted(self._pend_cdel), dtype=np.int64)
+            pi = np.searchsorted(gids, cd[:, 0])
+            qi = np.searchsorted(gids, cd[:, 1])
+            pos = np.searchsorted(
+                _keys(coup_p, coup_q, len(gids)), _keys(pi, qi, len(gids))
+            )
+            coup_p = np.delete(coup_p, pos)
+            coup_q = np.delete(coup_q, pos)
+
+        # 2. gid deletions: remove rows, shift surviving indices down.
+        if self._pend_del:
+            dl = np.asarray(sorted(self._pend_del), dtype=np.int64)
+            pos = np.searchsorted(gids, dl)
+            gids = np.delete(gids, pos)
+            u = np.delete(u, pos)
+            if len(coup_p):
+                coup_p -= np.searchsorted(pos, coup_p, side="right")
+                coup_q -= np.searchsorted(pos, coup_q, side="right")
+
+        # 3. gid insertions: shift indices up, insert rows in gid order.
+        if self._pend_add:
+            av = np.asarray(sorted(self._pend_add), dtype=np.int64)
+            if len(coup_p):
+                coup_p += np.searchsorted(av, gids[coup_p])
+                coup_q += np.searchsorted(av, gids[coup_q])
+            pos = np.searchsorted(gids, av)
+            gids = np.insert(gids, pos, av)
+            u = np.insert(u, pos, self._unary_of(av))
+
+        # 4. unary patches for pairs whose common-neighbor count moved.
+        if self._pend_u:
+            uv = np.asarray(sorted(self._pend_u), dtype=np.int64)
+            pos = np.searchsorted(gids, uv)
+            if u is gg.u:
+                u = u.copy()  # never mutate a previously returned grounding
+            u[pos] = self._unary_of(uv)
+
+        # 5. coupling insertions in the new index space.
+        if self._pend_cadd:
+            ca = np.asarray(sorted(self._pend_cadd), dtype=np.int64)
+            pi = np.searchsorted(gids, ca[:, 0])
+            qi = np.searchsorted(gids, ca[:, 1])
+            pos = np.searchsorted(
+                _keys(coup_p, coup_q, len(gids)), _keys(pi, qi, len(gids))
+            )
+            coup_p = np.insert(coup_p, pos, pi)
+            coup_q = np.insert(coup_q, pos, qi)
+
+        self.last_splice_rows = (
+            len(self._pend_add) + len(self._pend_del) + len(self._pend_u)
+            + len(self._pend_cadd) + len(self._pend_cdel)
+        )
+        return GlobalGrounding(
+            gids=gids,
+            u=u,
+            coup_p=coup_p.astype(np.int32),
+            coup_q=coup_q.astype(np.int32),
+            w_co=self.w_co,
+        )
+
+    def grounding(self) -> GlobalGrounding:
+        """The array-form grounding, spliced in place per delta.
+
+        Bit-for-bit equal to ``build_global_grounding`` over the same
+        accumulated pairs/edges: the unary is recomputed from the exact
+        integer common-neighbor count with the same float32 rounding as
+        the scalar batch loop.  The first call materializes the arrays
+        from scratch; every later call splices only the rows the pending
+        deltas touched (``last_splice_rows``/``total_splice_rows`` count
+        them — the array-form analogue of ``GroundingDelta.
+        pairs_visited``).
+        """
+        pending = (
+            self._pend_add or self._pend_del or self._pend_u
+            or self._pend_cadd or self._pend_cdel
+        )
+        if self._gg is not None and not pending:
+            self.last_splice_rows = 0
+            return self._gg
+        if self._gg is None:
+            self._gg = self._build_full()
+            self.last_splice_rows = len(self._gg.gids) + len(self._gg.coup_p)
+        else:
+            self._gg = self._splice(self._gg)
+        self.total_splice_rows += self.last_splice_rows
+        self._pend_add.clear()
+        self._pend_del.clear()
+        self._pend_u.clear()
+        self._pend_cadd.clear()
+        self._pend_cdel.clear()
         return self._gg
 
 

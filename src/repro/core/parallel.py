@@ -158,6 +158,7 @@ class GroundingCache:
       ``ground_calls``  grounding dispatches issued
       ``rows_ground``   rows whose grounding was actually recomputed
       ``bin_hits``      bins served without re-grounding any row
+      ``splice_calls``  bins updated via :meth:`splice` (device scatter)
     """
 
     def __init__(self):
@@ -165,6 +166,7 @@ class GroundingCache:
         self.ground_calls = 0
         self.rows_ground = 0
         self.bin_hits = 0
+        self.splice_calls = 0
 
     def invalidate(self) -> None:
         self._bins.clear()
@@ -202,6 +204,38 @@ class GroundingCache:
         self.rows_ground += n
         return tuple(a[:n] for a in out) if pad else out
 
+    def splice(self, matcher_key, bt: _BinTensors, sigs: tuple,
+               cached: tuple[tuple, tuple]) -> tuple:
+        """Update a cached bin in place on device: gather unchanged rows
+        from the cached arrays (by row signature), re-ground *only* the
+        fresh rows, and scatter them at their new positions.
+
+        This is the device-side leg of the O(dirty) ingest path: the
+        streaming engine's covers arrive with ``PackedCover.row_keys``
+        from the :class:`~repro.core.cover.CoverDelta` splice, so the
+        signature diff here sees exactly the spliced rows and the
+        ``(B, P, P)`` grounded tensors are never rebuilt host-side.
+        Returns the updated device arrays (also usable standalone by
+        callers that track their own bin cache).
+        """
+        old_sigs, old_arrays = cached
+        fn = _ground_bin_fn(*matcher_key)
+        pos_of = {s: i for i, s in enumerate(old_sigs)}
+        src = np.asarray([pos_of.get(s, -1) for s in sigs], dtype=np.int64)
+        fresh = np.where(src < 0)[0]
+        gather = jnp.asarray(np.where(src >= 0, src, 0))
+        arrays = tuple(a[gather] for a in old_arrays)
+        if len(fresh):
+            sub = self._ground_rows(fn, bt, fresh)
+            at = jnp.asarray(fresh)
+            arrays = tuple(
+                a.at[at].set(s) for a, s in zip(arrays, sub)
+            )
+            self.splice_calls += 1
+        else:
+            self.bin_hits += 1
+        return arrays
+
     def get(self, matcher_key, k: int, bt: _BinTensors,
             row_keys: tuple | None = None) -> tuple:
         key = (matcher_key, k)
@@ -210,24 +244,11 @@ class GroundingCache:
         if cached is not None and cached[0] == sigs:
             self.bin_hits += 1
             return cached[1]
-        fn = _ground_bin_fn(*matcher_key)
         if cached is None:
+            fn = _ground_bin_fn(*matcher_key)
             arrays = self._ground_rows(fn, bt, np.arange(len(sigs)))
         else:
-            old_sigs, old_arrays = cached
-            pos_of = {s: i for i, s in enumerate(old_sigs)}
-            src = np.asarray([pos_of.get(s, -1) for s in sigs], dtype=np.int64)
-            fresh = np.where(src < 0)[0]
-            gather = jnp.asarray(np.where(src >= 0, src, 0))
-            arrays = tuple(a[gather] for a in old_arrays)
-            if len(fresh):
-                sub = self._ground_rows(fn, bt, fresh)
-                at = jnp.asarray(fresh)
-                arrays = tuple(
-                    a.at[at].set(s) for a, s in zip(arrays, sub)
-                )
-            else:
-                self.bin_hits += 1
+            arrays = self.splice(matcher_key, bt, sigs, cached)
         self._bins[key] = (sigs, arrays)
         return arrays
 

@@ -1,4 +1,19 @@
-"""Jit'd dispatch: Pallas flash attention on TPU, oracles elsewhere."""
+"""Jit'd dispatch: Pallas flash attention on TPU, oracles elsewhere.
+
+Grouped-query attention for the LM stack (``repro.models``), online-
+softmax tiled on TPU; the jnp oracle materializes the full (S, T)
+score matrix.
+
+Shapes/dtypes:
+    ``attention(q, k, v, scale, causal=True)``:
+    q (B, S, H, hd), k/v (B, T, Hkv, hd) with H a multiple of Hkv
+    (GQA groups of H // Hkv query heads per KV head) -> (B, S, H*hd)
+    f32; inputs may be lower precision, accumulation is f32.
+
+Dispatch rule (``kernels.common.pallas_mode``): compiled Pallas kernel
+on TPU, interpret mode under ``REPRO_PALLAS=interpret`` (CPU CI), else
+the jnp oracle in ``ref.py``.
+"""
 
 from __future__ import annotations
 

@@ -1,4 +1,21 @@
-"""Jit'd dispatch for the ICM sweep: Pallas on TPU, jnp oracle elsewhere."""
+"""Jit'd dispatch for the ICM sweep: Pallas on TPU, jnp oracle elsewhere.
+
+The conditional-delta sweep of greedy/ICM MAP inference over a
+neighborhood's pair variables: ``delta = u + X @ C`` (u unary, C
+coupling, X the current assignment) — the inner step of the MLN
+matcher's closure and of the fused round engine.
+
+Shapes/dtypes (all f32 outputs):
+    ``sweep(u, C, x)``:        u (P,), C (P, P) symmetric, x (P,) -> (P,).
+    ``sweep_matrix(u, C, X)``: X (S, P) assignment rows -> (S, P).
+    ``sweep_batch(u, C, X)``:  u (B, P), C (B, P, P), X (B, P) -> (B, P)
+    — one sweep per neighborhood of a whole size-bin in a single
+    batched contraction (what the fused ``while_loop`` engine calls).
+
+Dispatch rule (``kernels.common.pallas_mode``): compiled Pallas on TPU,
+interpret mode under ``REPRO_PALLAS=interpret``, else the jnp oracle in
+``ref.py`` — same math everywhere.
+"""
 
 from __future__ import annotations
 

@@ -1,4 +1,19 @@
-"""Jit'd dispatch for MinHash signatures: Pallas on TPU, jnp elsewhere."""
+"""Jit'd dispatch for MinHash signatures: Pallas on TPU, jnp elsewhere.
+
+Batched MinHash over shingle-presence vectors — the streaming LSH
+index's on-device signature computation (``repro.stream.index``).
+
+Shapes/dtypes:
+    ``minhash(X, A)``: X (N, D) f32 presence (nonzero = shingle
+    present), A (H, D) int32 hash table -> (N, H) int32 signatures;
+    rows with no shingles get the ``ref.EMPTY`` sentinel.
+    ``hash_table(H, D, seed)``: (H, D) int32 in ``[0, EMPTY)``.
+
+Dispatch rule (``kernels.common.pallas_mode``): compiled Pallas kernel
+on TPU, interpret mode under ``REPRO_PALLAS=interpret`` (CPU CI), and
+the pure-jnp oracle in ``ref.py`` everywhere else — identical results
+on every backend.
+"""
 
 from __future__ import annotations
 

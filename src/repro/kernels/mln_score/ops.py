@@ -1,4 +1,18 @@
-"""Jit'd dispatch for MLN set scoring: Pallas on TPU, jnp oracle elsewhere."""
+"""Jit'd dispatch for MLN set scoring: Pallas on TPU, jnp oracle elsewhere.
+
+Batched unnormalized log-probability of candidate match sets under the
+grounded MLN: ``f(x) = x . u + 1/2 x^T C x`` per (neighborhood, set) —
+the matcher's set-comparison primitive (maximal-message enumeration).
+
+Shapes/dtypes:
+    ``score_sets(u, C, X)``: u (B, P) f32 unaries, C (B, P, P) f32
+    symmetric couplings, X (B, S, P) candidate-set indicators ->
+    (B, S) f32 scores.
+
+Dispatch rule (``kernels.common.pallas_mode``): compiled Pallas on TPU,
+interpret mode under ``REPRO_PALLAS=interpret`` (CPU CI), else the
+pure-jnp oracle in ``ref.py`` — identical math on every backend.
+"""
 
 from __future__ import annotations
 

@@ -1,4 +1,17 @@
-"""Jit'd dispatch for n-gram similarity: Pallas on TPU, jnp elsewhere."""
+"""Jit'd dispatch for n-gram similarity: Pallas on TPU, jnp elsewhere.
+
+Blocked cosine similarity over L2-normalized hashed n-gram profiles —
+the canopy construction's seed-vs-pool probe (a tiled matmul on TPU).
+
+Shapes/dtypes:
+    ``sim_matrix(A, B)``:  A (M, F) f32, B (N, F) f32 -> (M, N) f32.
+    ``sim_above(A, B, t)``: same, entries < ``t`` zeroed (sparse-ish).
+
+Dispatch rule (``kernels.common.pallas_mode``): the compiled Pallas
+kernel on TPU; ``REPRO_PALLAS=interpret`` forces the Pallas body in
+interpret mode (how CPU CI validates it); anywhere else the pure-jnp
+oracle in ``ref.py`` — identical math, so callers never branch.
+"""
 
 from __future__ import annotations
 

@@ -3,23 +3,36 @@
 The batch pipeline (``repro.core.pipeline``) builds a total cover once
 and runs message passing to a global fixpoint.  This package keeps that
 fixpoint *current* under a stream of arriving entities, with per-ingest
-cost proportional to the dirty set rather than the corpus:
+cost proportional to the dirty set rather than the corpus.  One
+``ResolveService.ingest(batch)`` runs five stages (see
+``docs/ARCHITECTURE.md`` for the full data-flow diagram):
 
-* :mod:`repro.stream.index` — incremental MinHash-LSH blocking index
-  (signatures computed on-device by the ``minhash`` Pallas kernel),
-  optionally memory-bounded via ``LSHConfig.max_ids`` / ``ttl_adds``;
-* :mod:`repro.stream.delta` — delta cover maintenance: localized canopy
-  replay over the touched similarity components, dirty-neighborhood
-  diffing, repacking only the affected bins, preserving totality
-  (Def. 7);
-* :mod:`repro.stream.engine` — incremental driver seeding the batch
-  drivers' worklists with only the dirty neighborhoods and patching the
-  persistent MMP message pool on candidate retraction;
-* :mod:`repro.stream.service` — ``ingest(batch)`` / ``resolve(id)``
-  facade backed by an incrementally maintained union-find and the
-  incrementally patched global grounding
-  (``core.global_grounding.GroundingMaintainer``), with
-  ``snapshot()`` / ``resolve_many()`` for consistent concurrent reads.
+1. **Probe** (:mod:`repro.stream.index`) — MinHash signatures on-device
+   (``minhash`` Pallas kernel), LSH bucket collisions gate the exact
+   cosine probes; optionally memory-bounded via ``LSHConfig.max_ids`` /
+   ``ttl_adds``.
+2. **Replay** (:mod:`repro.stream.delta`) — the canonical canopy sweep
+   is replayed over only the touched similarity components
+   (``IngestReport.replay_visits`` counts the region).
+3. **Assemble + splice** (:class:`repro.core.cover.CoverDelta`) — the
+   total cover (Def. 7) is re-derived incrementally: only dirty canopy
+   parts / totality groups / leftover chunks are restaged, and the
+   packed per-bin arrays are spliced instead of rebuilt
+   (``IngestReport.cover_splice_rows``).
+4. **Ground + advance** (:mod:`repro.stream.engine`,
+   :class:`repro.core.global_grounding.GroundingMaintainer`) — the
+   global grounding is patched and its array form spliced
+   (``grounding_pair_visits`` / ``grounding_splice_rows``); the batch
+   drivers are warm-started with only the dirty neighborhoods seeded,
+   and the device :class:`~repro.core.parallel.GroundingCache` splices
+   only the changed rows (``reground_rows``).
+5. **Commit** (:mod:`repro.stream.service`) — matches fold into a
+   persistent union-find atomically; ``resolve(id)`` /
+   ``resolve_many`` / ``snapshot()`` read committed fixpoints only.
+
+The invariant throughout: after any ingest sequence, cover, grounding,
+and fixpoint are bit-for-bit what the batch pipeline computes over the
+union of everything ingested.
 """
 
 from repro.stream.service import (  # noqa: F401

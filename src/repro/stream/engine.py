@@ -18,9 +18,13 @@ hooks, warm-starting from the previous fixpoint:
 * the parallel engine additionally persists a device
   :class:`~repro.core.parallel.GroundingCache` across ingests: bins the
   cover delta left untouched keep their grounded arrays on device, and
-  dirty bins splice in only the changed rows (``AdvanceStats.
+  dirty bins splice in only the changed rows via
+  :meth:`~repro.core.parallel.GroundingCache.splice` (``AdvanceStats.
   reground_rows`` counts them — the grounding analogue of
-  ``IngestReport.replay_visits``).
+  ``IngestReport.replay_visits``).  The row keys driving the signature
+  diff come straight from the :class:`~repro.core.cover.CoverDelta`
+  splice (``PackedCover.row_keys``), so an ingest's device re-grounding
+  is bounded by the very rows the cover splice staged.
 
 Carried matches are *invalidated* when a cover delta retracts their
 candidate pair (possible when an oversized canopy re-splits): the whole

@@ -59,6 +59,12 @@ class IngestReport:
     # device rows re-ground this ingest (parallel engine: clean bins hit
     # the persistent GroundingCache, dirty bins splice changed rows only)
     reground_rows: int = 0
+    # neighborhood rows (re)staged by the incremental cover assembly +
+    # packed-array splice (CoverDelta) — O(dirty), not O(neighborhoods)
+    cover_splice_rows: int = 0
+    # grounding array rows spliced by GroundingMaintainer.grounding()
+    # (mmp) — O(delta), not the O(candidate pairs) full materialization
+    grounding_splice_rows: int = 0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -164,6 +170,7 @@ class ResolveService:
         prev_matches = self.engine.m_plus
         d = self.delta.ingest(ids, list(names), edges)
         grounding_visits = 0
+        grounding_splice = 0
         gg = None
         if self.grounding is not None:
             gstats = self.grounding.apply_delta(
@@ -171,6 +178,7 @@ class ResolveService:
             )
             grounding_visits = gstats.pairs_visited
             gg = self.grounding.grounding()
+            grounding_splice = self.grounding.last_splice_rows
         stats = self.engine.advance(
             d.packed, d.dirty, gg, retracted=d.retracted_pairs
         )
@@ -201,6 +209,8 @@ class ResolveService:
                 grounding_pair_visits=grounding_visits,
                 wall_time_s=time.perf_counter() - t0,
                 reground_rows=stats.reground_rows,
+                cover_splice_rows=d.cover_splice_rows,
+                grounding_splice_rows=grounding_splice,
             )
             self.reports.append(report)
         return report

@@ -1,0 +1,72 @@
+"""Docs can't rot: every module path the prose references must import.
+
+README.md and docs/ARCHITECTURE.md name ``repro.*`` dotted paths and
+repo file paths; if a refactor moves or renames one, this test fails CI
+instead of leaving the documentation pointing at nothing.  CI also runs
+``examples/quickstart.py`` itself (the bench-smoke job), so the
+quickstart commands stay executable end to end.
+"""
+
+from __future__ import annotations
+
+import importlib
+import re
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parent.parent
+DOCS = [REPO / "README.md", REPO / "docs" / "ARCHITECTURE.md"]
+
+# dotted references like ``repro.stream.index`` or
+# ``repro.core.parallel.GroundingCache`` (trailing parts may be attrs)
+DOTTED = re.compile(r"\brepro(?:\.[A-Za-z_][A-Za-z_0-9]*)+")
+# backticked repo-relative file paths like `src/repro/core/cover.py`,
+# `benchmarks/check_bench.py`, `docs/ARCHITECTURE.md` — at least one
+# directory component, so bare names like `ops.py` aren't path-checked
+FILEPATH = re.compile(r"`([A-Za-z_][\w.-]*(?:/[\w.*-]+)+\.(?:py|md|json|yml))`")
+
+
+def _doc_text(path: Path) -> str:
+    assert path.exists(), f"documented file missing: {path}"
+    return path.read_text(encoding="utf-8")
+
+
+def _import_dotted(ref: str) -> None:
+    """Import the longest module prefix, then getattr the rest."""
+    parts = ref.split(".")
+    err = None
+    for cut in range(len(parts), 0, -1):
+        try:
+            obj = importlib.import_module(".".join(parts[:cut]))
+        except ImportError as e:
+            err = e
+            continue
+        for attr in parts[cut:]:
+            assert hasattr(obj, attr), f"{ref}: no attribute {attr!r}"
+            obj = getattr(obj, attr)
+        return
+    raise AssertionError(f"{ref}: does not import ({err})")
+
+
+@pytest.mark.parametrize("doc", DOCS, ids=lambda p: p.name)
+def test_dotted_module_references_import(doc):
+    refs = sorted(set(DOTTED.findall(_doc_text(doc))))
+    assert refs, f"{doc.name}: expected at least one repro.* reference"
+    for ref in refs:
+        _import_dotted(ref)
+
+
+@pytest.mark.parametrize("doc", DOCS, ids=lambda p: p.name)
+def test_file_path_references_exist(doc):
+    for ref in set(FILEPATH.findall(_doc_text(doc))):
+        if "*" in ref:
+            assert list(REPO.glob(ref)), f"{doc.name} glob matches nothing: {ref}"
+        else:
+            assert (REPO / ref).exists(), f"{doc.name} references missing {ref}"
+
+
+def test_quickstart_paths_from_readme_exist():
+    text = _doc_text(REPO / "README.md")
+    assert "examples/quickstart.py" in text
+    assert (REPO / "examples" / "quickstart.py").exists()

@@ -320,6 +320,169 @@ def test_ingest_self_loop_edge_rejected():
 
 
 # ---------------------------------------------------------------------------
+# Incremental cover assembly + grounding splice: bit-for-bit differential
+# ---------------------------------------------------------------------------
+
+
+def _assert_packed_equal(sp, packed):
+    """Spliced PackedCover == scratch build, field by field."""
+    assert len(sp.cover) == len(packed.cover)
+    for a, b in zip(sp.cover.full, packed.cover.full):
+        assert np.array_equal(a, b)
+    for a, b in zip(sp.cover.core, packed.cover.core):
+        assert np.array_equal(a, b)
+    assert np.array_equal(sp.neighborhood_bin, packed.neighborhood_bin)
+    assert np.array_equal(sp.neighborhood_row, packed.neighborhood_row)
+    assert set(sp.bins) == set(packed.bins)
+    for k in packed.bins:
+        assert np.array_equal(sp.bin_rows[k], packed.bin_rows[k])
+        for field in ("entity_ids", "entity_mask", "coauthor", "sim_level",
+                      "pair_gid", "pair_mask"):
+            assert np.array_equal(
+                getattr(sp.bins[k], field), getattr(packed.bins[k], field)
+            ), (k, field)
+    assert sp.pair_levels == packed.pair_levels
+
+
+def _scratch_packed(delta):
+    """Scratch assemble + pack over the delta's current canopy state."""
+    from repro.core.cover import assemble_cover, pack_cover
+
+    entities = delta.entities()
+    relations = delta.relations()
+    cover = assemble_cover(
+        delta.canopies(),
+        entities,
+        relations,
+        k_max=delta.k_max,
+        boundary_relation=delta.boundary_relation,
+        present=delta.present,
+    )
+    return pack_cover(
+        cover,
+        entities,
+        relations,
+        k_bins=delta.k_bins,
+        thresholds=delta.thresholds,
+        boundary_relation=delta.boundary_relation,
+    )
+
+
+def _check_grounding_equals_scratch(svc):
+    gi = svc.grounding.grounding()
+    gr = build_global_grounding(
+        svc.delta.packed.pair_levels, svc.delta.relations(), PAPER_LEARNED
+    )
+    assert np.array_equal(gi.gids, gr.gids)
+    assert np.array_equal(gi.u, gr.u)  # bitwise float32 equality
+    assert np.array_equal(gi.coup_p, gr.coup_p)
+    assert np.array_equal(gi.coup_q, gr.coup_q)
+
+
+@pytest.mark.parametrize(
+    "scheme,n_batches,order",
+    [
+        ("mmp", 4, None),          # in-order arrivals
+        ("smp", 5, [2, 0, 4, 1, 3]),  # permuted arrivals (id holes)
+        ("smp", 3, [2, 1, 0]),     # reversed arrivals
+    ],
+)
+def test_spliced_cover_equals_scratch_every_ingest(
+    stream_ds, scheme, n_batches, order
+):
+    """The CoverDelta splice path reproduces the scratch assemble+pack
+    bit-for-bit at EVERY ingest of several schedules, and (mmp) the
+    spliced grounding arrays reproduce build_global_grounding."""
+    batches = arrival_stream(stream_ds, n_batches)
+    svc = ResolveService(scheme=scheme)
+    for i in order if order is not None else range(len(batches)):
+        b = batches[i]
+        svc.ingest(b.names, b.edges, ids=b.ids)
+        _assert_packed_equal(svc.delta.packed, _scratch_packed(svc.delta))
+        if scheme == "mmp":
+            _check_grounding_equals_scratch(svc)
+
+
+def test_spliced_cover_survives_resplit_retraction():
+    """The adversarial canopy re-split (retracting candidate pairs and
+    re-splitting windows mid-cover) still splices to the exact scratch
+    build, including the retraction leg of the grounding splice."""
+    names = [f"john smithsonian{chr(97 + i // 26)}{chr(97 + i % 26)}" for i in range(28)]
+    first = [i for i in range(28) if i % 2 == 0]
+    second = [i for i in range(28) if i % 2 == 1]
+    svc = ResolveService(scheme="mmp")
+    for batch in (first, second):
+        svc.ingest([names[i] for i in batch], ids=batch)
+        _assert_packed_equal(svc.delta.packed, _scratch_packed(svc.delta))
+        _check_grounding_equals_scratch(svc)
+    assert svc.reports[-1].n_invalidated > 0  # the retraction path fired
+
+
+def test_spliced_cover_with_edges_equals_scratch(stream_ds):
+    """Relation edges arriving after their endpoints (boundary growth,
+    intra-edge row-key invalidation, totality-group churn) keep the
+    splice bit-for-bit equal to scratch."""
+    batches = arrival_stream(stream_ds, 6)
+    svc = ResolveService(scheme="smp")
+    # ingest entities first, then their edges in a later micro-batch, so
+    # edges always reference previously ingested entities
+    pending = []
+    for b in batches:
+        svc.ingest(b.names, None, ids=b.ids)
+        _assert_packed_equal(svc.delta.packed, _scratch_packed(svc.delta))
+        if pending:
+            svc.ingest([], pending.pop())
+            _assert_packed_equal(svc.delta.packed, _scratch_packed(svc.delta))
+        if b.edges is not None and len(b.edges):
+            pending.append(b.edges)
+    if pending:
+        svc.ingest([], pending.pop())
+        _assert_packed_equal(svc.delta.packed, _scratch_packed(svc.delta))
+
+
+@pytest.mark.parametrize("seed", [0, 3, 9])
+def test_spliced_cover_randomized_schedules(seed):
+    """Randomized adversarial schedules: heavy name collisions (shared
+    surname stems force duplicate part keys, canopy splits/re-splits and
+    ownership transfers), out-of-order ids with holes, and random
+    relation edges (totality-group churn + intra-edge row-key
+    invalidation).  Splice == scratch at every single ingest."""
+    from repro.stream.delta import DeltaCover
+
+    surnames = ["brunelleschi", "verkhovsky", "fitzgerald", "montgomery",
+                "oppenheimer", "fairbanks", "thornberry", "castellanos"]
+    rng = np.random.default_rng(seed)
+    n = 40
+    pool_sz = max(2, len(surnames) // (1 + seed % 3))
+    names = [
+        f"{'abcdefghij'[rng.integers(0, 10)]}. "
+        f"{surnames[rng.integers(0, pool_sz)]}{'abcd'[rng.integers(0, 4)]}"
+        for _ in range(n)
+    ]
+    perm = rng.permutation(n)
+    delta = DeltaCover()
+    ingested: list[int] = []
+    i = 0
+    while i < n:
+        bs = int(rng.integers(1, 8))
+        ids = [int(x) for x in perm[i : i + bs]]
+        i += bs
+        pool = ingested + ids
+        edges = None
+        if len(pool) >= 2 and rng.random() < 0.7:
+            es = set()
+            for _ in range(int(rng.integers(1, 5))):
+                a, b = rng.choice(pool, size=2, replace=False)
+                if a != b:
+                    es.add((int(a), int(b)))
+            if es:
+                edges = np.asarray(sorted(es), dtype=np.int64)
+        delta.ingest(ids, [names[e] for e in ids], edges)
+        ingested = pool
+        _assert_packed_equal(delta.packed, _scratch_packed(delta))
+
+
+# ---------------------------------------------------------------------------
 # O(dirty) ingest: incremental grounding + localized canopy replay
 # ---------------------------------------------------------------------------
 
@@ -398,6 +561,7 @@ def test_ingest_cost_tracks_dirty_set():
     r = svc.ingest(_name_group("evangelina montgomery", 5))
     n_total = svc.delta.n_entities
     total_pairs = len(svc.delta.packed.pair_levels)
+    n_nbhd = len(svc.delta.cover)
     assert n_before == 30 and n_total == 35
     assert total_pairs > pairs_before  # the new component added candidates
     # Replay swept only the new component (5 ids), not all 35.
@@ -405,12 +569,44 @@ def test_ingest_cost_tracks_dirty_set():
     # Grounding patched only the new component's pairs (10), not all.
     assert 0 < r.grounding_pair_visits <= 12, r.grounding_pair_visits
     assert r.grounding_pair_visits < total_pairs // 3
+    # Cover splice staged only the new component's neighborhood rows —
+    # no term proportional to the number of neighborhoods/corpus.
+    assert 0 < r.cover_splice_rows <= 3, r.cover_splice_rows
+    assert r.cover_splice_rows < n_nbhd
+    # Grounding arrays spliced only the new component's rows, not the
+    # O(total_pairs) full materialization.
+    assert 0 < r.grounding_splice_rows <= 14, r.grounding_splice_rows
+    assert r.grounding_splice_rows < total_pairs // 3
 
     # Second probe: an arrival similar to ONE existing group re-sweeps
     # that group's component only.
     r2 = svc.ingest(["alessandro brunelleschiz"])
     assert r2.replay_visits <= 12, r2.replay_visits  # group + arrival
     assert r2.replay_visits < svc.delta.n_entities // 2
+    # ... and restages only that component's neighborhoods.
+    assert r2.cover_splice_rows <= 4, r2.cover_splice_rows
+    assert r2.cover_splice_rows < len(svc.delta.cover)
+
+
+def test_splice_counters_zero_on_untouched_ingest():
+    """An ingest whose batch touches nothing previously covered must not
+    restage any pre-existing neighborhood row: total splice work across
+    a run of disjoint components stays O(sum of component sizes)."""
+    svc = ResolveService(scheme="smp")
+    bases = ["alessandro brunelleschi", "konstantin verkhovsky",
+             "bartholomew fitzgerald", "evangelina montgomery"]
+    rows_per_ingest = []
+    for base in bases:
+        r = svc.ingest(_name_group(base, 8))
+        rows_per_ingest.append(r.cover_splice_rows)
+    # every later ingest splices about as much as the first (its own
+    # component), instead of restaging the whole growing cover
+    assert max(rows_per_ingest[1:]) <= rows_per_ingest[0] + 2, rows_per_ingest
+    total_rows_staged = sum(rows_per_ingest)
+    scratch_rows = sum(
+        r.n_neighborhoods for r in svc.reports
+    )  # what per-ingest full restaging would have staged
+    assert total_rows_staged < scratch_rows
 
 
 def test_level_cache_bound_keeps_fixpoint(stream_ds, batch_smp):
@@ -462,6 +658,45 @@ def test_lsh_bounded_tolerates_readd():
     assert idx.n_indexed == 2
     live = {e for band in idx.buckets for m in band.values() for e in m}
     assert live == {2, 3}
+
+
+def test_lsh_bounded_long_stream_window_resolution():
+    """Long arrival stream against a bounded index: the bucket tables
+    stay bounded throughout, and because every entity's >= t_loose
+    partners arrive within the retention window, resolution on the
+    retained window still matches the batch run over the union."""
+    from repro.core.types import EntityTable, Relations
+
+    bases = [
+        "alessandro brunelleschi", "konstantin verkhovsky",
+        "bartholomew fitzgerald", "evangelina montgomery",
+        "thaddeus oppenheimer", "wilhelmina fairbanks",
+        "maximilian thornberry", "serafina castellanos",
+        "archibald winterbottom", "theodora blankenship",
+        "montgomery abernathy", "clementine vandergrift",
+    ]
+    n_groups, group_size = len(bases), 4
+    names = [f"{base}{chr(97 + i)}" for base in bases for i in range(group_size)]
+    cap = 3 * group_size  # window >= one group: similar pairs co-resident
+    svc = ResolveService(scheme="smp", lsh=LSHConfig(max_ids=cap))
+    idx = svc.delta.index
+    for g in range(n_groups):
+        svc.ingest(names[g * group_size : (g + 1) * group_size])
+        # bucket-table bound holds at every point of the stream: at most
+        # one live entry per (band, live id)
+        assert idx.n_indexed <= cap
+        entries = sum(len(m) for band in idx.buckets for m in band.values())
+        assert entries <= idx.cfg.num_bands * cap, entries
+    assert idx.n_evicted == (n_groups * group_size) - cap
+
+    # eviction never touched intra-group similarity (groups co-arrive),
+    # so the stream fixpoint equals the batch pipeline over the union
+    packed, _, _ = pipeline.prepare(
+        EntityTable(names=list(names)), Relations(edges={})
+    )
+    batch = run_smp(packed, MLNMatcher(PAPER_LEARNED))
+    assert svc.matches.as_set() == batch.matches.as_set()
+    assert len(svc.matches) > 0
 
 
 def test_lsh_unbounded_by_default():
