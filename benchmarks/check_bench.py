@@ -1,21 +1,34 @@
 """CI gate: fail if scale-robust perf invariants regress.
 
-``python -m benchmarks.check_bench BASELINE.json FRESH.json``
+``python -m benchmarks.check_bench [--gate=NAME] BASELINE.json FRESH.json``
 
-Two baselines are gated, dispatched on the JSON's ``benchmark`` field:
+Two baselines are gated, dispatched on the JSON's ``benchmark`` field;
+``--gate`` restricts the run to one invariant family (CI wires each as
+its own named step), default is every gate that applies to the file:
 
-* ``BENCH_parallel.json`` — the ``dispatches_per_round`` of every
-  scheme: bounded by O(bins + quiescence points) per round with the bin
-  count capped by ``DEFAULT_BINS``, so a smoke-scale run is comparable
-  to the committed default-scale baseline.  A regression to the legacy
-  O(bins x rounds) dispatch pattern blows well past the slack.
-* ``BENCH_stream.json`` — the O(dirty) ingest-path ratios:
-  ``splice_per_dirty`` (cover rows staged per dirty neighborhood) and
-  ``splice_per_visit`` (grounding array rows spliced per pair visited).
-  Both are ~O(1) by construction; a regression to per-ingest full
-  repacking / full grounding materialization scales them with the
-  corpus.  Gated as max-over-entries so smoke batch sizes need not
-  match the committed grid.
+* ``BENCH_parallel.json``
+  - ``dispatch``: the ``dispatches_per_round`` of every scheme, bounded
+    by O(bins + quiescence points) per round with the bin count capped
+    by ``DEFAULT_BINS``, so a smoke-scale run is comparable to the
+    committed default-scale baseline.  A regression to the legacy
+    O(bins x rounds) dispatch pattern blows well past the slack.
+  - ``promotion``: ``promote_host_scans`` of the fused engine must be
+    exactly 0 — step-7 delta checks run batched on device
+    (``repro.core.parallel.DevicePromoter``); any host coupling-COO
+    walk is a regression, no slack.
+* ``BENCH_stream.json``
+  - ``stream``: the O(dirty) ingest-path ratios — ``splice_per_dirty``
+    (cover rows staged per dirty neighborhood), ``splice_per_visit``
+    (grounding array rows spliced per pair visited) and
+    ``growth_copy_per_row`` (backing-buffer rows memcpy'd per row
+    placed; amortized O(1) under capacity doubling, O(bin) per append
+    under the old per-ingest ``np.concatenate``).  All ~O(1) by
+    construction and gated as max-over-entries so smoke batch sizes
+    need not match the committed grid.
+  - ``lru``: the bounded-serving-memory block — peak array-resident
+    bins must not exceed the configured LRU capacity (exact, no slack),
+    the eviction path must have actually fired, and promotion must have
+    done zero host scans.
 
 Wall times are recorded in the JSON for the trajectory but never gated
 (CI machines are noisy).
@@ -38,8 +51,10 @@ ABS_SLACK = 2.0
 STREAM_REL_SLACK = 2.0
 STREAM_ABS_SLACK = 1.0
 
+GATES = ("dispatch", "promotion", "stream", "lru")
 
-def _check_parallel(base: dict, fresh: dict, failures: list[str]) -> None:
+
+def _check_dispatch(base: dict, fresh: dict, failures: list[str]) -> None:
     for inst, iblock in base.get("instances", {}).items():
         fblock = fresh.get("instances", {}).get(inst, {})
         for scheme, b in iblock.get("schemes", {}).items():
@@ -62,14 +77,37 @@ def _check_parallel(base: dict, fresh: dict, failures: list[str]) -> None:
                 )
 
 
+def _check_promotion_parallel(fresh: dict, failures: list[str]) -> None:
+    """Fused engine: zero host promotion scans, exact (no slack)."""
+    checked = 0
+    for inst, iblock in fresh.get("instances", {}).items():
+        for scheme, got in iblock.get("schemes", {}).items():
+            tag = f"{inst}/{scheme}"
+            scans = got.get("promote_host_scans")
+            if scans is None:
+                failures.append(f"{tag}: promote_host_scans missing")
+                continue
+            checked += 1
+            if scans != 0:
+                failures.append(
+                    f"{tag}: promote_host_scans {scans} != 0 — the fused "
+                    "engine fell back to the host coupling-COO walk"
+                )
+            else:
+                print(f"ok {tag}: promote_host_scans == 0")
+    if not checked:
+        failures.append("promotion: no schemes found in fresh results")
+
+
 def _max_ratio(entries: list[dict], key: str) -> float | None:
     vals = [e[key] for e in entries if key in e]
     return max(vals) if vals else None
 
 
-def _check_stream(base: dict, fresh: dict, failures: list[str]) -> None:
+def _check_stream_ratios(base: dict, fresh: dict, failures: list[str]) -> None:
     for block, key in (
         ("throughput", "splice_per_dirty"),
+        ("throughput", "growth_copy_per_row"),
         ("grounding", "splice_per_visit"),
     ):
         b = _max_ratio(base.get(block, []), key)
@@ -90,19 +128,80 @@ def _check_stream(base: dict, fresh: dict, failures: list[str]) -> None:
             print(f"ok {tag}: {key} {got} <= {limit:.2f}")
 
 
+def _check_lru(fresh: dict, failures: list[str]) -> None:
+    """Bounded serving memory: exact bounds, independent of baseline."""
+    entries = fresh.get("serving_memory", [])
+    if not entries:
+        failures.append("serving_memory: block missing from fresh results")
+        return
+    for e in entries:
+        cap = e.get("lru_capacity")
+        peak = e.get("peak_resident_bins")
+        tag = f"stream/serving_memory[capacity={cap}]"
+        if cap is None or peak is None:
+            failures.append(f"{tag}: lru_capacity/peak_resident_bins missing")
+            continue
+        if peak > cap:
+            failures.append(
+                f"{tag}: peak_resident_bins {peak} > capacity {cap} — the "
+                "LRU bound did not hold"
+            )
+        else:
+            print(f"ok {tag}: peak_resident_bins {peak} <= {cap}")
+        if e.get("n_bins", 0) > cap and not e.get("evictions", 0):
+            failures.append(
+                f"{tag}: no evictions despite {e.get('n_bins')} bins — the "
+                "eviction path was not exercised"
+            )
+        scans = e.get("promote_host_scans")
+        if scans is None:
+            failures.append(f"{tag}: promote_host_scans missing")
+        elif scans != 0:
+            failures.append(f"{tag}: promote_host_scans {scans} != 0")
+        else:
+            print(f"ok {tag}: promote_host_scans == 0")
+
+
 def main(argv: list[str]) -> int:
-    if len(argv) != 2:
+    gate = "all"
+    args = []
+    for a in argv:
+        if a.startswith("--gate="):
+            gate = a.split("=", 1)[1]
+        else:
+            args.append(a)
+    if gate != "all" and gate not in GATES:
+        print(f"unknown gate {gate!r}; choose from {GATES} or all")
+        return 2
+    if len(args) != 2:
         print(__doc__)
         return 2
-    with open(argv[0]) as f:
+    with open(args[0]) as f:
         base = json.load(f)
-    with open(argv[1]) as f:
+    with open(args[1]) as f:
         fresh = json.load(f)
     failures: list[str] = []
-    if fresh.get("benchmark") == "stream_throughput" or "throughput" in fresh:
-        _check_stream(base, fresh, failures)
+    is_stream = (
+        fresh.get("benchmark") == "stream_throughput" or "throughput" in fresh
+    )
+    ran = False
+    if is_stream:
+        if gate in ("all", "stream"):
+            _check_stream_ratios(base, fresh, failures)
+            ran = True
+        if gate in ("all", "lru"):
+            _check_lru(fresh, failures)
+            ran = True
     else:
-        _check_parallel(base, fresh, failures)
+        if gate in ("all", "dispatch"):
+            _check_dispatch(base, fresh, failures)
+            ran = True
+        if gate in ("all", "promotion"):
+            _check_promotion_parallel(fresh, failures)
+            ran = True
+    if not ran:
+        print(f"gate {gate!r} does not apply to {args[1]}")
+        return 2
     if failures:
         print("BENCH REGRESSION:\n  " + "\n  ".join(failures))
         return 1

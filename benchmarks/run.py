@@ -17,6 +17,11 @@ that return them (``table1_parallel`` -> ``BENCH_parallel.json``,
 (default: the repo root).  The committed copies are the perf baseline
 trajectory; CI regenerates them at smoke scale and fails if the
 per-round host dispatch counts regress (``benchmarks.check_bench``).
+
+A module that raises fails the run with a non-zero exit *after* the
+remaining modules have run, and its JSON is never written — a partial
+file would otherwise feed ``check_bench`` a stale or truncated result
+that mis-compares against the committed baseline.
 """
 
 from __future__ import annotations
@@ -25,6 +30,7 @@ import json
 import os
 import sys
 import time
+import traceback
 
 try:  # installed package (pip install -e .) ...
     import repro  # noqa: F401
@@ -63,13 +69,25 @@ def main() -> None:
     unknown = want - {name for name, _ in MODULES}
     if unknown:
         raise SystemExit(f"unknown benchmark(s): {sorted(unknown)}")
+    failures: list[str] = []
     for name, desc in MODULES:
         if want and name not in want:
             continue
         print(f"\n==== {name}: {desc} ====", flush=True)
         t0 = time.perf_counter()
-        mod = __import__(f"benchmarks.{name}", fromlist=["main"])
-        result = mod.main()
+        try:
+            mod = __import__(f"benchmarks.{name}", fromlist=["main"])
+            result = mod.main()
+        except Exception:
+            # A raising module must fail the whole run (non-zero exit) and
+            # must NOT leave a JSON for check_bench to mis-compare; the
+            # remaining modules still run so one breakage doesn't mask
+            # another's results.
+            traceback.print_exc()
+            failures.append(name)
+            print(f"==== {name} FAILED in {time.perf_counter()-t0:.1f}s ====",
+                  flush=True)
+            continue
         print(f"==== {name} done in {time.perf_counter()-t0:.1f}s ====", flush=True)
         if emit_json and result is not None and name in JSON_FILES:
             os.makedirs(json_dir, exist_ok=True)
@@ -78,6 +96,8 @@ def main() -> None:
                 json.dump(result, f, indent=2, sort_keys=True)
                 f.write("\n")
             print(f"wrote {path}", flush=True)
+    if failures:
+        raise SystemExit(f"benchmark module(s) raised: {failures}")
 
 
 if __name__ == "__main__":

@@ -27,6 +27,19 @@ A third block measures the serving read path: ``snapshot()`` /
 corpus is being ingested — readers only ever observe committed
 fixpoints (the snapshot is cached between ingests), so read throughput
 should not collapse under ingest load.
+
+A fourth block measures *bounded serving memory*: the whole corpus is
+streamed through the parallel engine with an LRU ``GroundingCache``
+capacity below the bin count, recording the peak array-resident bin
+count (must stay <= the capacity), the eviction / cold-reground
+traffic the bound costs, and the step-7 promotion host-scan count
+(must stay 0: promotion's delta checks run batched on device).  The
+throughput block additionally reports the packed-array append
+accounting (``growth_copy_per_row``: rows memcpy'd by the
+capacity-doubling buffers per row placed — amortized O(1), where the
+former per-append ``np.concatenate`` re-copied the bin every ingest).
+All of these are gated in CI by ``benchmarks.check_bench`` against the
+committed ``BENCH_stream.json``.
 """
 
 from __future__ import annotations
@@ -45,6 +58,8 @@ from repro.stream import ResolveService
 
 BATCH_SIZES = (8, 32) if SMOKE else (16, 64, 256)
 GROUNDING_BATCH_SIZES = (32,) if SMOKE else (64,)
+LRU_BATCH_SIZE = 16 if SMOKE else 64
+LRU_CAPACITY = 1
 READER_COUNTS = (2,) if SMOKE else (1, 4)
 READER_BATCH_SIZE = 64  # ids per resolve_many() call
 READER_INGEST_BATCH = 8 if SMOKE else 32  # keep several ingest commits in flight
@@ -138,6 +153,9 @@ def main() -> dict:
         splice_per_dirty = splice_rows / max(
             sum(r.n_dirty for r in svc.reports), 1
         )
+        cd = svc.delta.cover_delta
+        rows_placed = cd.total_append_rows + cd.total_restack_rows
+        growth_copy_per_row = cd.total_growth_copy_rows / max(rows_placed, 1)
         scratch = _scratch_evals(ds, batches)
         row(
             bs,
@@ -162,6 +180,9 @@ def main() -> dict:
             "replay_frac": round(replay_frac, 4),
             "cover_splice_rows": int(splice_rows),
             "splice_per_dirty": round(splice_per_dirty, 3),
+            "append_rows": int(cd.total_append_rows),
+            "growth_copy_rows": int(cd.total_growth_copy_rows),
+            "growth_copy_per_row": round(growth_copy_per_row, 3),
             "stream_evals": int(svc.total_evals),
             "scratch_evals": int(scratch),
         })
@@ -199,6 +220,44 @@ def main() -> dict:
             "grounding_splice_rows": int(splice),
             "splice_per_visit": round(splice_per_visit, 3),
         })
+
+    row("")
+    row("# stream_throughput: bounded serving memory (parallel engine, "
+        "LRU grounding cache)")
+    row(
+        "lru_capacity,n_bins,peak_resident_bins,evictions,cold_regrounds,"
+        "promote_host_scans,ingest_s"
+    )
+    batches = arrival_stream(ds, batch_size=LRU_BATCH_SIZE)
+    svc = ResolveService(
+        scheme="mmp", parallel=True, gcache_capacity=LRU_CAPACITY
+    )
+
+    def _run_lru():
+        for b in batches:
+            svc.ingest(b.names, b.edges, ids=b.ids)
+
+    _, t_lru = timed(_run_lru)
+    g = svc.engine.gcache
+    host_scans = sum(r.promote_host_scans for r in svc.reports)
+    row(
+        LRU_CAPACITY,
+        len(svc.delta.packed.bins),
+        g.peak_resident_bins,
+        g.evictions,
+        g.cold_regrounds,
+        host_scans,
+        f"{t_lru:.2f}",
+    )
+    out["serving_memory"] = [{
+        "lru_capacity": LRU_CAPACITY,
+        "n_bins": len(svc.delta.packed.bins),
+        "peak_resident_bins": int(g.peak_resident_bins),
+        "evictions": int(g.evictions),
+        "cold_regrounds": int(g.cold_regrounds),
+        "promote_host_scans": int(host_scans),
+        "ingest_s": round(t_lru, 3),
+    }]
 
     row("")
     row("# stream_throughput: resolve_many QPS under concurrent ingest")

@@ -72,7 +72,8 @@ def _measure(name: str, packed, gg, matcher, schemes) -> dict:
     row(f"# table1[{name}]: parallel rounds (SPMD mesh; model for 30 shards)")
     row(
         "scheme,wall_fused_s,wall_legacy_s,speedup_vs_legacy,rounds,evals,"
-        "dispatches,dispatches_legacy,dispatches_per_round,modeled_speedup_30"
+        "dispatches,dispatches_legacy,dispatches_per_round,"
+        "promote_host_scans,modeled_speedup_30"
     )
     for scheme in schemes:
         legacy, t_legacy = timed(
@@ -97,6 +98,7 @@ def _measure(name: str, packed, gg, matcher, schemes) -> dict:
             res.dispatches,
             legacy.dispatches,
             f"{dpr:.2f}",
+            res.promote_host_scans,
             f"{sp:.1f}",
         )
         out["schemes"][scheme] = {
@@ -108,6 +110,11 @@ def _measure(name: str, packed, gg, matcher, schemes) -> dict:
             "dispatches": int(res.dispatches),
             "dispatches_legacy": int(legacy.dispatches),
             "dispatches_per_round": round(dpr, 3),
+            # host coupling-COO promotion walks of the fused engine —
+            # device-resident promotion keeps this 0 (gated in CI); the
+            # legacy loop's count shows what the host baseline pays
+            "promote_host_scans": int(res.promote_host_scans),
+            "promote_host_scans_legacy": int(legacy.promote_host_scans),
         }
     return out
 

@@ -235,7 +235,10 @@ def assemble_cover(
             seeds,
             entities,
             relations,
-            present=present if present is not None else set(range(len(entities))),
+            # the delta only reads len(present) (its O(1) universe
+            # guard), so a range stands in for the full id set without
+            # an O(n) materialization per ingest
+            present=present if present is not None else range(len(entities)),
             touched=touched,
             new_ids=new_ids or [],
             new_edges=new_edges,
@@ -330,6 +333,18 @@ class PackedCover:
     # dirty neighborhoods, and the device GroundingCache fingerprints
     # bin rows with them.
     row_keys: list[tuple] | None = None
+    # splice-maintained incidence lookup, attached by the CoverDelta
+    # path: (gid -> {row key: refcount}, entity -> {row key: refcount},
+    # row key -> neighborhood positions).  The first two dicts are the
+    # delta's LIVE maps (maintained in the acquire/release refcount
+    # loops, O(dirty) per ingest) and are only valid until the next
+    # ingest repacks — exactly the window the engine queries them in;
+    # the position map is rebuilt per pack (a dict append inside the
+    # bin-sequence walk pack already does).  When absent (batch path),
+    # queries fall back to the lazily built CSR / entity index below.
+    slot_lookup: tuple[dict, dict, dict] | None = dataclasses.field(
+        default=None, repr=False, compare=False
+    )
     # memoized slot-incidence CSR (gid -> neighborhoods), see
     # slot_incidence(); a PackedCover is immutable once built.
     _slot_csr: tuple[np.ndarray, np.ndarray, np.ndarray] | None = dataclasses.field(
@@ -349,10 +364,43 @@ class PackedCover:
             )
         return {k: np.asarray(v, dtype=np.int64) for k, v in out.items()}
 
+    def _positions_of_entity(self, e: int) -> set[int]:
+        """Neighborhood positions whose full membership holds ``e``
+        (splice-lookup path; callers guard on ``slot_lookup``)."""
+        _, ent_rows, pos = self.slot_lookup
+        out: set[int] = set()
+        for rk in ent_rows.get(int(e), ()):
+            out.update(pos.get(rk, ()))
+        return out
+
+    def neighborhoods_of_entities(self, ids) -> set[int]:
+        """Neighborhoods whose full membership contains any of ``ids``.
+
+        Resolved per query from the splice-maintained lookup when
+        present (no per-ingest index rebuild); falls back to the
+        memoized ``Cover.entity_index`` on the batch path.
+        """
+        out: set[int] = set()
+        if self.slot_lookup is not None:
+            for e in ids:
+                out |= self._positions_of_entity(int(e))
+            return out
+        idx = self.cover.entity_index()
+        for e in ids:
+            out.update(idx.get(int(e), ()))
+        return out
+
     def neighborhoods_of_pairs(self, gids: np.ndarray) -> list[int]:
         """Neighborhoods containing BOTH endpoints of any of the pairs."""
+        if self.slot_lookup is not None:
+            out: set[int] = set()
+            for g in gids:
+                a, b = pairlib.split_gid(np.int64(g))
+                out |= self._positions_of_entity(int(a)) & \
+                    self._positions_of_entity(int(b))
+            return sorted(out)
         idx = self.cover.entity_index()
-        out: set[int] = set()
+        out = set()
         for g in gids:
             a, b = pairlib.split_gid(np.int64(g))
             na = idx.get(int(a), [])
@@ -399,7 +447,21 @@ class PackedCover:
         return self._slot_csr
 
     def neighborhoods_of_slot_pairs(self, gids: np.ndarray) -> list[int]:
-        """Neighborhoods with any of ``gids`` as a candidate slot (sorted)."""
+        """Neighborhoods with any of ``gids`` as a candidate slot (sorted).
+
+        With a splice-maintained ``slot_lookup`` (streaming path) this
+        resolves per query — gid -> row keys -> positions — without ever
+        materializing the O(total candidate slots) CSR; rows with equal
+        keys hold identical tensors, so their positions carry exactly
+        the queried slot.
+        """
+        if self.slot_lookup is not None:
+            gid_rows, _, pos = self.slot_lookup
+            out: set[int] = set()
+            for g in gids:
+                for rk in gid_rows.get(int(g), ()):
+                    out.update(pos.get(rk, ()))
+            return sorted(out)
         uniq, indptr, nbhd = self.slot_incidence()
         if not len(gids) or not len(uniq):
             return []
@@ -635,9 +697,25 @@ class CoverDelta:
     * **row staging + packing** — rows are staged once per row key
       ``(k, members, intra-edges)`` and spliced into the per-bin padded
       arrays: an untouched bin is reused wholesale, an appended-to bin
-      concatenates only the fresh tail, and only a bin whose row
-      sequence changed mid-way is re-stacked (from memoized rows — no
-      re-staging).
+      writes only the fresh tail into its capacity-doubling backing
+      buffer (published arrays are views; growth copies are amortized
+      O(1) per appended row — ``total_growth_copy_rows`` counts them),
+      and only a bin whose row sequence changed mid-way is re-stacked
+      into a fresh buffer (from memoized rows — no re-staging).
+    * **incidence lookups** — ``gid -> row keys`` and ``entity -> row
+      keys`` refcount maps are maintained in the same acquire/release
+      loops and attached to the packed cover (``PackedCover.
+      slot_lookup``), so evidence-driven re-activation queries
+      (``neighborhoods_of_slot_pairs`` / ``neighborhoods_of_pairs`` /
+      ``neighborhoods_of_entities``) resolve per query instead of
+      rebuilding the O(total slots) CSR or the O(n) entity index per
+      ingest.
+    * **boundary adjacency** — maintained incrementally from
+      ``new_edges`` with the same per-edge insertion sequence as
+      ``Relations.adjacency_sets`` over the concatenated chunks
+      (identical set iteration order, so boundary-ranking tie-breaks
+      match the scratch build bit-for-bit) — no per-ingest O(E)
+      rebuild.
 
     The result is bit-for-bit equal to the scratch build at every ingest
     (differential-tested in ``tests/test_stream.py``) with staging work
@@ -690,9 +768,18 @@ class CoverDelta:
         self._row_ref: dict[tuple, int] = {}
         self._lev_ref: dict[int, int] = {}
         self._pair_levels: dict[int, int] = {}
-        # per-bin packed splice state
+        # splice-maintained incidence refcounts (candidate gid -> row
+        # keys, entity -> row keys), updated in the same acquire/release
+        # loops as _lev_ref — the query side of
+        # PackedCover.neighborhoods_of_{slot_pairs,pairs,entities}.
+        self._gid_rows: dict[int, dict[tuple, int]] = {}
+        self._ent_rows: dict[int, dict[tuple, int]] = {}
+        # per-bin packed splice state: published arrays are views into
+        # capacity-doubling backing buffers (appends write only the
+        # fresh tail; growth copies are amortized O(appended rows))
         self._bin_seq: dict[int, list[tuple]] = {}
         self._bin_arrays: dict[int, NeighborhoodBatch] = {}
+        self._bin_buf: dict[int, dict[str, np.ndarray]] = {}
         # assemble -> pack handoff + per-ingest outputs
         self._pending: tuple | None = None
         self._adj: dict[int, set[int]] = {}
@@ -700,6 +787,12 @@ class CoverDelta:
         self.last_dirty: list[int] = []
         self.last_splice_rows = 0
         self.total_splice_rows = 0
+        self.last_append_rows = 0
+        self.total_append_rows = 0
+        self.last_growth_copy_rows = 0
+        self.total_growth_copy_rows = 0
+        self.last_restack_rows = 0
+        self.total_restack_rows = 0
         self.last_added_pairs: dict[int, int] = {}
         self.last_retracted_pairs: list[int] = []
 
@@ -735,6 +828,22 @@ class CoverDelta:
             for b in self._adj.get(a, ()):
                 if a < b and b in fset:
                     yield (a, b)
+
+    @staticmethod
+    def _ref_add(index: dict, key, rk: tuple) -> None:
+        d = index.setdefault(key, {})
+        d[rk] = d.get(rk, 0) + 1
+
+    @staticmethod
+    def _ref_sub(index: dict, key, rk: tuple) -> None:
+        d = index[key]
+        c = d[rk] - 1
+        if c:
+            d[rk] = c
+        else:
+            del d[rk]
+            if not d:
+                del index[key]
 
     def _add_part(self, key: tuple, window: np.ndarray, s: int) -> None:
         part = self._parts.get(key)
@@ -775,9 +884,9 @@ class CoverDelta:
         canopies: list[np.ndarray],
         seeds: list[int],
         entities: EntityTable,
-        relations: Relations,
+        relations: Relations | None = None,
         *,
-        present: set[int],
+        present,  # any sized collection of the current ids (len-only use)
         touched: set[int],
         new_ids: list[int],
         new_edges: np.ndarray | None,
@@ -789,8 +898,25 @@ class CoverDelta:
         entity ids whose similarity region was re-swept or that gained a
         relation edge this ingest.  Equal to the scratch
         :func:`assemble_cover` over the same inputs.
+
+        ``relations`` is accepted for API symmetry with the scratch path
+        but unused: the boundary adjacency is maintained incrementally
+        from ``new_edges`` (every relation edge must arrive through it
+        exactly once, like every id through ``new_ids``), inserted with
+        the same per-edge ``a -> b, b -> a`` sequence in arrival order
+        as ``Relations.adjacency_sets`` runs over the concatenated edge
+        chunks — identical set insertion history, hence identical set
+        iteration order, so the boundary-expansion tie-breaks stay
+        bit-for-bit the scratch build's without the per-ingest O(E)
+        adjacency rebuild.
         """
-        self._adj = relations.adjacency_sets(self.boundary_relation)
+        if new_edges is not None and len(new_edges):
+            for x, y in np.asarray(new_edges, dtype=np.int64):
+                x, y = int(x), int(y)
+                if x == y:
+                    continue  # rejected upstream; adjacency must not self-link
+                self._adj.setdefault(x, set()).add(y)
+                self._adj.setdefault(y, set()).add(x)
         self._names = entities.names
         k_core = max(2, int(self.k_max * 0.6))
         self._acquires: list[tuple] = []
@@ -1012,6 +1138,63 @@ class CoverDelta:
         self._pending = (cover, keys)
         return cover
 
+    # -- packed-array backing buffers -------------------------------------
+
+    _ROW_FIELDS = (
+        ("entity_ids", "ids"), ("entity_mask", "emask"), ("coauthor", "co"),
+        ("sim_level", "lev"), ("pair_gid", "gid"), ("pair_mask", "pmask"),
+    )
+
+    def _alloc_buf(self, proto_key: tuple, n: int) -> dict[str, np.ndarray]:
+        """Fresh backing buffers shaped like ``proto_key``'s staged row,
+        capacity = pow2 >= n."""
+        proto = self._rows[proto_key]
+        cap = 1 << max(n - 1, 0).bit_length()
+        return {
+            f: np.empty((cap,) + proto[rf].shape, proto[rf].dtype)
+            for f, rf in self._ROW_FIELDS
+        }
+
+    def _publish(self, buf: dict[str, np.ndarray], n: int) -> NeighborhoodBatch:
+        return NeighborhoodBatch(**{f: buf[f][:n] for f, _ in self._ROW_FIELDS})
+
+    def _bin_append(self, k: int, seq: list[tuple], n0: int) -> NeighborhoodBatch:
+        """Append ``seq[n0:]`` to bin ``k``'s buffer: O(fresh rows) writes.
+
+        Rows ``[:n0]`` are already in the buffer (and published as views
+        by the previous pack — append never touches them).  When the
+        tail outgrows capacity the buffer doubles and the resident rows
+        are copied once — amortized O(1) copies per appended row, vs the
+        O(bin) memcpy of the former per-append ``np.concatenate``.
+        """
+        n1 = len(seq)
+        buf = self._bin_buf[k]
+        if next(iter(buf.values())).shape[0] < n1:
+            new = self._alloc_buf(seq[0], n1)
+            for f, _ in self._ROW_FIELDS:
+                new[f][:n0] = buf[f][:n0]
+            self.last_growth_copy_rows += n0
+            self._bin_buf[k] = buf = new
+        for i in range(n0, n1):
+            row = self._rows[seq[i]]
+            for f, rf in self._ROW_FIELDS:
+                buf[f][i] = row[rf]
+        self.last_append_rows += n1 - n0
+        return self._publish(buf, n1)
+
+    def _bin_restack(self, k: int, seq: list[tuple]) -> NeighborhoodBatch:
+        """Rebuild bin ``k`` from memoized rows into a FRESH buffer (the
+        row sequence changed mid-way, or the bin is new) — never in
+        place, since a previous pack's views alias the old buffer."""
+        buf = self._alloc_buf(seq[0], len(seq))
+        for i, rk in enumerate(seq):
+            row = self._rows[rk]
+            for f, rf in self._ROW_FIELDS:
+                buf[f][i] = row[rf]
+        self._bin_buf[k] = buf
+        self.last_restack_rows += len(seq)
+        return self._publish(buf, len(seq))
+
     # -- pack -------------------------------------------------------------
 
     def pack(
@@ -1066,6 +1249,9 @@ class CoverDelta:
                 self._lev_ref[g] -= 1
                 if self._lev_ref[g] == 0:
                     gid_removed.add(g)
+                self._ref_sub(self._gid_rows, g, rk)
+            for e in rk[1]:
+                self._ref_sub(self._ent_rows, e, rk)
         for rk in self._acquires:
             ref = self._row_ref.get(rk, 0)
             if ref == 0 and rk not in released_to_zero:
@@ -1080,30 +1266,39 @@ class CoverDelta:
                     if g not in gid_removed:
                         gid_fresh.add(g)
                 self._lev_ref[g] = ref_g + 1
+                self._ref_add(self._gid_rows, g, rk)
+            for e in rk[1]:
+                self._ref_add(self._ent_rows, e, rk)
         retracted = [g for g in gid_removed if self._lev_ref.get(g, 0) == 0]
         for g in retracted:
             del self._pair_levels[g]
             del self._lev_ref[g]
         added = {g: self._pair_levels[g] for g in gid_fresh}
 
-        # 3. bin sequences + neighborhood indices.
+        # 3. bin sequences + neighborhood indices (+ the row-key ->
+        # positions map that resolves the splice-maintained incidence
+        # lookups — built inside the walk pack already does).
         n_nb = len(keys)
         neighborhood_bin = np.zeros(n_nb, dtype=np.int64)
         neighborhood_row = np.zeros(n_nb, dtype=np.int64)
         bin_seqs: dict[int, list[tuple]] = {}
+        pos_of_key: dict[tuple, list[int]] = {}
         for n, rk in enumerate(keys):
             k = rk[0]
             seq = bin_seqs.setdefault(k, [])
             neighborhood_bin[n] = k
             neighborhood_row[n] = len(seq)
             seq.append(rk)
+            pos_of_key.setdefault(rk, []).append(n)
 
-        # 4. per-bin splice: reuse / append / re-stack.
+        # 4. per-bin splice: reuse / append / re-stack, against
+        # capacity-doubling backing buffers (appends write only the
+        # fresh tail rows; published arrays are views, so rows already
+        # visible to a previous PackedCover are never overwritten).
+        self.last_append_rows = 0
+        self.last_growth_copy_rows = 0
+        self.last_restack_rows = 0
         bins: dict[int, NeighborhoodBatch] = {}
-        fields = (
-            "entity_ids", "entity_mask", "coauthor",
-            "sim_level", "pair_gid", "pair_mask",
-        )
         for k, seq in bin_seqs.items():
             old_seq = self._bin_seq.get(k)
             old_arr = self._bin_arrays.get(k)
@@ -1114,15 +1309,15 @@ class CoverDelta:
                 and len(seq) > len(old_seq)
                 and seq[: len(old_seq)] == old_seq
             ):
-                tail = _stack_rows([self._rows[rk] for rk in seq[len(old_seq) :]])
-                bins[k] = NeighborhoodBatch(*(
-                    np.concatenate([getattr(old_arr, f), getattr(tail, f)])
-                    for f in fields
-                ))
+                bins[k] = self._bin_append(k, seq, len(old_seq))
             else:
-                bins[k] = _stack_rows([self._rows[rk] for rk in seq])
+                bins[k] = self._bin_restack(k, seq)
         self._bin_seq = bin_seqs
         self._bin_arrays = dict(bins)
+        self._bin_buf = {k: b for k, b in self._bin_buf.items() if k in bins}
+        self.total_append_rows += self.last_append_rows
+        self.total_growth_copy_rows += self.last_growth_copy_rows
+        self.total_restack_rows += self.last_restack_rows
         bin_rows = {k: np.where(neighborhood_bin == k)[0] for k in bins}
 
         # 5. evict rows that left the cover; publish per-ingest outputs.
@@ -1145,4 +1340,5 @@ class CoverDelta:
             pair_levels=dict(self._pair_levels),
             cover=cover,
             row_keys=list(keys),
+            slot_lookup=(self._gid_rows, self._ent_rows, pos_of_key),
         )

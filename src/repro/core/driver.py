@@ -38,6 +38,19 @@ class EMResult:
     # Host-visible full rounds of the fused engine (the quiescence
     # points): every other round ran inside a fused greedy segment.
     full_rounds: int = 0
+    # Serving-memory accounting of the bounded GroundingCache (parallel
+    # engine): high-water mark of array-resident bins, LRU evictions and
+    # cold re-grounds issued during this run.  Zero everywhere for the
+    # sequential drivers and for unbounded caches that never evict.
+    peak_resident_bins: int = 0
+    cache_evictions: int = 0
+    cold_regrounds: int = 0
+    # Step-7 promotion passes that fell back to the host coupling-COO
+    # walk (driver._promote).  The fused engine promotes on device
+    # (parallel.DevicePromoter) and keeps this at 0 — gated in CI; the
+    # legacy fused=False loop and the sequential run_mmp count every
+    # pass here by design (they ARE the host baseline).
+    promote_host_scans: int = 0
 
 
 def _eval_neighborhood(matcher, packed, n, m_plus, with_messages):
@@ -286,6 +299,7 @@ def run_mmp(
     evals = 0
     emitted = 0
     promoted_total = 0
+    host_scans = 0
     cap = max_evals or n_nb * 64
     while worklist and evals < cap:
         n = worklist.popleft()
@@ -298,6 +312,7 @@ def run_mmp(
             pool.add_message(msg)
             emitted += 1
         m_plus2, promoted = _promote(pool, gg, m_plus)
+        host_scans += 1
         promoted_total += promoted
         newly = np.concatenate([new, m_plus2.difference(m_plus)]) if promoted else new
         m_plus = m_plus2
@@ -308,5 +323,5 @@ def run_mmp(
                     in_list[m] = True
     return EMResult(
         m_plus, evals, 1, emitted, promoted_total, time.perf_counter() - t0,
-        dispatches=evals,
+        dispatches=evals, promote_host_scans=host_scans,
     )

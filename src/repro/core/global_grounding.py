@@ -46,6 +46,17 @@ class GlobalGrounding:
     coup_p: np.ndarray  # (Nc,) int32 index into gids
     coup_q: np.ndarray  # (Nc,) int32 index into gids (p < q)
     w_co: float
+    # Device copies of (u, coup_p, coup_q, w_co), populated lazily by
+    # repro.core.parallel.DevicePromoter and cached HERE because the
+    # grounding object is the natural cache key: the streaming
+    # maintainer returns the *same* object while no delta is pending, so
+    # consecutive ingests reuse one upload, and a splice returns a fresh
+    # object whose stale-free cache repopulates on first use.  The host
+    # arrays are never mutated after construction (the splice copies
+    # before patching), so a populated cache can never go stale.
+    _device: tuple | None = dataclasses.field(
+        default=None, repr=False, compare=False
+    )
 
     def index_of(self, gids: np.ndarray) -> np.ndarray:
         idx = np.searchsorted(self.gids, gids)
@@ -164,12 +175,12 @@ class GroundingMaintainer:
 
     The grounding *computation* — adjacency intersections and coupling
     discovery, the O(sum deg^2) cost of the batch build — touches only
-    the delta.  ``grounding()`` then assembles the array form in one
-    vectorized pass over the candidate set (cached until the next
-    delta): the same per-ingest O(P) order the packing pass already
-    pays, with no per-pair adjacency work.  Incremental array splicing
-    to drop that last O(P) is a ROADMAP follow-up alongside incremental
-    cover assembly.
+    the delta.  ``grounding()`` keeps the array form live and *splices*
+    it per delta (:meth:`_splice`): only the pending rows are
+    recomputed (``last_splice_rows`` counts them, surfaced as
+    ``IngestReport.grounding_splice_rows``); untouched unary entries and
+    coupling rows carry over as memcpy.  Only the very first call pays
+    the full vectorized materialization.
 
     Caller contract: every ``new_edges`` batch must be the *boundary
     relation's* tuples (the maintainer has no relation labels to filter

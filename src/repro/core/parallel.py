@@ -17,7 +17,9 @@ boundary sits exactly at the *quiescence points*:
   bytes of the tensors the grounding reads, so the streaming engine
   reuses cached bins across ingests and *splices* only the dirty rows'
   freshly grounded arrays into place (``rows_ground`` counts exactly the
-  recomputed rows).
+  recomputed rows).  Serving memory is boundable: an LRU over bins
+  (``capacity`` / ``hbm_budget_bytes``) drops cold bins' tensors and
+  re-grounds them on demand, bit-for-bit (see the class docstring).
 
 * **Fused multi-round closure** (:func:`build_fused_fn`): rounds that
   touch no host state — all NO-MP/SMP rounds, and MMP's ``fast_rounds``
@@ -31,12 +33,16 @@ boundary sits exactly at the *quiescence points*:
   multi-round closure is ONE host dispatch instead of
   O(bins x rounds).
 
-* **Quiescence points**: only MMP's maximal-message bookkeeping
-  (pool merge, step-7 promotion — Algorithm 3 keeps those on the
-  coordinator) runs on the host.  Full maximal-message rounds dispatch
-  once per bin at the *full* bin shape with an active-row mask (no
-  per-round recompiles), and component labels are turned into messages
-  by batched numpy segment ops (``driver._labels_to_messages``).
+* **Quiescence points**: only MMP's maximal-message *pool merge*
+  (Algorithm 3 keeps it on the coordinator) runs on the host.  Full
+  maximal-message rounds dispatch once per bin at the *full* bin shape
+  with an active-row mask (no per-round recompiles), component labels
+  are turned into messages by batched numpy segment ops
+  (``driver._labels_to_messages``), and the step-7 promotion delta
+  checks run *batched on device* (:class:`DevicePromoter`): the pool's
+  group bitsets ship to device and the whole promotion fixpoint is one
+  jitted ``while_loop`` — no host walk over the global coupling COO
+  (``EMResult.promote_host_scans`` == 0, gated in CI).
 
 Consistency (Thms. 2/4) guarantees the device schedule reaches the same
 fixpoint as the sequential drivers: the matcher is monotone, evaluating
@@ -136,7 +142,8 @@ def _pow2(n: int) -> int:
 
 
 class GroundingCache:
-    """Per-bin device-resident grounded structures with splice updates.
+    """Per-bin device-resident grounded structures with splice updates
+    and an optional LRU bound on resident device memory.
 
     ``get`` fingerprints every row by the packer's row key when the
     cover was packed with a ``row_cache`` (``PackedCover.row_keys`` —
@@ -154,22 +161,113 @@ class GroundingCache:
     :meth:`invalidate` to drop everything (e.g. after changing matcher
     weights in place).
 
-    Counters (read by tests and ``IngestReport``):
-      ``ground_calls``  grounding dispatches issued
-      ``rows_ground``   rows whose grounding was actually recomputed
-      ``bin_hits``      bins served without re-grounding any row
-      ``splice_calls``  bins updated via :meth:`splice` (device scatter)
+    **Serving-memory bound** (``capacity`` / ``hbm_budget_bytes``): the
+    cached ``(B, P, P)`` coupling tensors dominate device memory, so a
+    long-lived service can cap how many bins stay resident.  Entries
+    are LRU-ordered by :meth:`get`; inserting past the bound drops the
+    coldest bins' device arrays (their row signatures are kept — host
+    tuples, not HBM).  A later ``get`` of an evicted bin *cold
+    re-grounds* it from the raw row tensors — grounding is a pure
+    function of those tensors, so the recomputed arrays are bit-for-bit
+    the evicted ones and every fixpoint is unchanged (tested under
+    capacities {1, 2, all}).  Eviction trades compute for memory only.
+
+    Counters (read by tests, ``EMResult`` and ``IngestReport``):
+      ``ground_calls``        grounding dispatches issued
+      ``rows_ground``         rows whose grounding was actually recomputed
+      ``bin_hits``            bins served without re-grounding any row
+      ``splice_calls``        bins updated via :meth:`splice` (device scatter)
+      ``evictions``           bins whose device arrays were LRU-dropped
+      ``cold_regrounds``      gets that re-ground an evicted (unchanged) bin
+      ``peak_resident_bins``  high-water mark of array-resident bins
+      ``peak_resident_bytes`` high-water mark of tracked device bytes
     """
 
-    def __init__(self):
-        self._bins: dict[tuple, tuple[tuple, tuple]] = {}
+    def __init__(self, capacity: int | None = None,
+                 hbm_budget_bytes: int | None = None):
+        if capacity is not None and capacity < 1:
+            raise ValueError(f"GroundingCache capacity must be >= 1: {capacity}")
+        if hbm_budget_bytes is not None and hbm_budget_bytes <= 0:
+            raise ValueError(
+                f"GroundingCache hbm_budget_bytes must be > 0: {hbm_budget_bytes}"
+            )
+        self.capacity = capacity
+        self.hbm_budget_bytes = hbm_budget_bytes
+        # key -> (sigs, arrays | None, nbytes); dict order == LRU order
+        # (oldest first), arrays None for entries evicted but remembered
+        self._bins: dict[tuple, tuple[tuple, tuple | None, int]] = {}
         self.ground_calls = 0
         self.rows_ground = 0
         self.bin_hits = 0
         self.splice_calls = 0
+        self.evictions = 0
+        self.cold_regrounds = 0
+        self.peak_resident_bins = 0
+        self.peak_resident_bytes = 0
+        # per-run window peak: run_parallel resets it at run start so
+        # EMResult can report the residency high-water of THAT run,
+        # while peak_resident_bins stays the cache-lifetime mark
+        self.window_peak_bins = 0
+
+    @property
+    def bounded(self) -> bool:
+        return self.capacity is not None or self.hbm_budget_bytes is not None
+
+    @property
+    def resident_bins(self) -> int:
+        return sum(1 for _, arrays, _ in self._bins.values() if arrays is not None)
+
+    @property
+    def resident_bytes(self) -> int:
+        return sum(n for _, arrays, n in self._bins.values() if arrays is not None)
 
     def invalidate(self) -> None:
         self._bins.clear()
+
+    def begin_peak_window(self) -> None:
+        """Start a fresh residency-peak window (bins already resident
+        count toward it — they occupy HBM whether or not this run
+        touches them)."""
+        self.window_peak_bins = self.resident_bins
+
+    @staticmethod
+    def _nbytes(arrays: tuple) -> int:
+        return sum(int(a.nbytes) for a in arrays)
+
+    def _touch(self, key: tuple) -> None:
+        self._bins[key] = self._bins.pop(key)
+
+    def _store(self, key: tuple, sigs: tuple, arrays: tuple) -> None:
+        """Insert/refresh an entry as most-recent, then evict the coldest
+        array-resident entries (never the one just stored) until the
+        configured bin-count capacity and byte budget both hold."""
+        self._bins.pop(key, None)
+        self._bins[key] = (sigs, arrays, self._nbytes(arrays))
+
+        def over() -> bool:
+            if self.capacity is not None and self.resident_bins > self.capacity:
+                return True
+            return (
+                self.hbm_budget_bytes is not None
+                and self.resident_bins > 1
+                and self.resident_bytes > self.hbm_budget_bytes
+            )
+
+        while over():
+            victim = next(
+                k for k, (_, arrays, _) in self._bins.items()
+                if arrays is not None and k != key
+            )
+            vsigs, _, _ = self._bins[victim]
+            self._bins[victim] = (vsigs, None, 0)
+            # keep LRU position: an evicted entry stays coldest until re-used
+            self.evictions += 1
+        resident = self.resident_bins
+        self.peak_resident_bins = max(self.peak_resident_bins, resident)
+        self.window_peak_bins = max(self.window_peak_bins, resident)
+        self.peak_resident_bytes = max(
+            self.peak_resident_bytes, self.resident_bytes
+        )
 
     @staticmethod
     def _row_sigs(bt: _BinTensors, row_keys: tuple | None = None) -> tuple:
@@ -241,15 +339,21 @@ class GroundingCache:
         key = (matcher_key, k)
         sigs = self._row_sigs(bt, row_keys)
         cached = self._bins.get(key)
-        if cached is not None and cached[0] == sigs:
+        if cached is not None and cached[0] == sigs and cached[1] is not None:
             self.bin_hits += 1
+            self._touch(key)
             return cached[1]
-        if cached is None:
+        if cached is None or cached[1] is None:
+            # miss, or LRU-evicted arrays: (cold) re-ground every row —
+            # grounding is pure in the row tensors, so this reproduces
+            # the dropped arrays bit-for-bit.
+            if cached is not None:
+                self.cold_regrounds += 1
             fn = _ground_bin_fn(*matcher_key)
             arrays = self._ground_rows(fn, bt, np.arange(len(sigs)))
         else:
-            arrays = self.splice(matcher_key, bt, sigs, cached)
-        self._bins[key] = (sigs, arrays)
+            arrays = self.splice(matcher_key, bt, sigs, (cached[0], cached[1]))
+        self._store(key, sigs, arrays)
         return arrays
 
 
@@ -421,6 +525,172 @@ def build_fused_fn(spec: FusedSpec, mesh: Mesh, axes: tuple[str, ...]):
     fn = functools.partial(_fused_rounds, spec, axes)
     mapped = kcommon.shard_map(fn, mesh, in_specs, (rep, rep, rep, rep))
     return jax.jit(mapped, donate_argnums=(7 * nbins,))
+
+
+# ---------------------------------------------------------------------------
+# Device-resident step-7 promotion (quiescence points without host scans)
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=64)
+def _promote_loop_fn(num_gids: int, num_coup: int, m_pad: int, k_pad: int):
+    """Jitted promotion fixpoint for one (grounding, pool) shape.
+
+    One dispatch runs the whole ``while changed`` sweep of Algorithm 3
+    step 7 on device: every sweep evaluates ALL groups' global deltas
+    against the current base bitset in a single batched computation
+    (``lin + w_co * quad`` over the coupling COO) and promotes every
+    group with new pairs and a non-negative delta at once.  Batching
+    the sweep is sound because ``w_co >= 0`` makes ``P_E`` supermodular:
+    a group's delta is non-decreasing in the base, so a group promotable
+    against the sweep-start base is still promotable after any other
+    promotion of that sweep — the closure reached is the same least
+    fixpoint the sequential group walk reaches (``driver._promote``,
+    kept as the host baseline).
+    """
+
+    def f(u, coup_p, coup_q, w_co, gidx, gseg, gvalid, base):
+        # (K, Np) membership bitsets of the pool groups, scattered once;
+        # padded members carry gseg == k_pad and land in a dropped row.
+        add = (
+            jnp.zeros((k_pad + 1, num_gids), jnp.bool_)
+            .at[gseg, gidx].set(True)[:k_pad]
+        )
+
+        def cond(state):
+            return state[2]
+
+        def body(state):
+            bits, promoted, _ = state
+            new = add & ~bits[None, :]
+            has_new = jnp.any(new, axis=1) & gvalid
+            lin = jnp.sum(jnp.where(new, u[None, :], jnp.float32(0)), axis=1)
+            both = bits[None, :] | add
+            quad_base = jnp.sum(bits[coup_p] & bits[coup_q])
+            quad_both = jnp.sum(both[:, coup_p] & both[:, coup_q], axis=1)
+            delta = lin + w_co * (quad_both - quad_base).astype(jnp.float32)
+            mask = has_new & (delta >= -1e-6)
+            bits = bits | jnp.any(add & mask[:, None], axis=0)
+            return (bits, promoted + jnp.sum(mask.astype(jnp.int32)),
+                    jnp.any(mask))
+
+        bits, promoted, _ = jax.lax.while_loop(
+            cond, body, (base, jnp.int32(0), jnp.bool_(True))
+        )
+        return bits, promoted
+
+    return jax.jit(f)
+
+
+class DevicePromoter:
+    """Step-7 promotion with the delta checks batched on device.
+
+    The host ``driver._promote`` walks the global coupling COO with
+    numpy once per group per sweep — an O(groups x couplings) host scan
+    at every quiescence point.  This class keeps the grounding's unary
+    and coupling arrays on device (uploaded once per grounding) and
+    ships the pool's group bitsets alongside, so a quiescence point is
+    ONE jitted dispatch running the whole promotion fixpoint
+    (:func:`_promote_loop_fn`); the host only assembles the group
+    member indices (O(pool), memoized per ``MessagePool.groups()``
+    snapshot) and reads back the (Np,) bitset.  ``host_scans`` counts
+    fallbacks to the host walk (only taken for ``w_co < 0``, where the
+    supermodularity argument for batched sweeps fails) — the quantity
+    ``benchmarks/check_bench.py`` gates at zero.
+    """
+
+    def __init__(self, gg: GlobalGrounding):
+        self.gg = gg
+        self.batched_ok = float(gg.w_co) >= 0.0 and len(gg.gids) > 0
+        self.dispatches = 0
+        self.host_scans = 0
+        # (groups list, device arrays): keeps a strong ref to the groups
+        # snapshot so identity comparison can never hit a recycled id
+        self._groups_memo: tuple[list, tuple | None] | None = None
+
+    def _device_grounding(self) -> tuple:
+        # cached ON the grounding object: the streaming maintainer hands
+        # out the same GlobalGrounding while no delta is pending, so the
+        # upload happens once per grounding *version*, not once per run
+        gg = self.gg
+        if gg._device is None:
+            gg._device = (
+                jnp.asarray(gg.u),
+                jnp.asarray(gg.coup_p.astype(np.int32)),
+                jnp.asarray(gg.coup_q.astype(np.int32)),
+                jnp.float32(gg.w_co),
+            )
+        return gg._device
+
+    def _group_arrays(self, groups: list[np.ndarray]) -> tuple | None:
+        """Flat member-index CSR of the pool groups (pow2-padded), memoized
+        on the identity of the ``MessagePool.groups()`` snapshot (the pool
+        invalidates it on every mutation)."""
+        if self._groups_memo is not None and self._groups_memo[0] is groups:
+            return self._groups_memo[1]
+        gg = self.gg
+        idx_parts: list[np.ndarray] = []
+        seg_parts: list[np.ndarray] = []
+        n_groups = 0
+        for grp in groups:
+            idx = gg.index_of(grp)
+            idx = idx[idx >= 0]
+            if len(idx) < 2:  # retracted below pair size: never promotable
+                continue
+            idx_parts.append(idx.astype(np.int32))
+            seg_parts.append(np.full(len(idx), n_groups, dtype=np.int32))
+            n_groups += 1
+        if not n_groups:
+            out = None
+        else:
+            gidx = np.concatenate(idx_parts)
+            gseg = np.concatenate(seg_parts)
+            m_pad = _pow2(len(gidx))
+            k_pad = _pow2(n_groups)
+            if m_pad > len(gidx):
+                pad = m_pad - len(gidx)
+                gidx = np.concatenate([gidx, np.zeros(pad, np.int32)])
+                gseg = np.concatenate([gseg, np.full(pad, k_pad, np.int32)])
+            gvalid = np.zeros(k_pad, dtype=bool)
+            gvalid[:n_groups] = True
+            out = (
+                jnp.asarray(gidx), jnp.asarray(gseg), jnp.asarray(gvalid),
+                m_pad, k_pad,
+            )
+        self._groups_memo = (groups, out)
+        return out
+
+    def promote(self, pool: MessagePool, m_plus: MatchStore):
+        """Drop-in for ``driver._promote``: same (matches, promoted) pair.
+
+        ``promoted`` counts group-promotion events; the batched sweep may
+        count a group the sequential walk skipped as already-subsumed
+        within the same sweep, so only the *match set* (identical by
+        supermodularity) is bit-for-bit comparable across engines.
+        """
+        groups = pool.groups()
+        if not groups:
+            return m_plus, 0
+        if not self.batched_ok:
+            self.host_scans += 1
+            return _promote(pool, self.gg, m_plus)
+        garrs = self._group_arrays(groups)
+        if garrs is None:
+            return m_plus, 0
+        gg = self.gg
+        gidx, gseg, gvalid, m_pad, k_pad = garrs
+        base0 = gg.bool_of(m_plus)
+        fn = _promote_loop_fn(len(gg.gids), len(gg.coup_p), m_pad, k_pad)
+        bits, promoted = fn(
+            *self._device_grounding(), gidx, gseg, gvalid, jnp.asarray(base0)
+        )
+        self.dispatches += 1
+        promoted = int(promoted)
+        if promoted:
+            extra = gg.gids[np.asarray(bits) & ~base0]
+            if len(extra):
+                m_plus = m_plus.union(extra)
+        return m_plus, promoted
 
 
 # ---------------------------------------------------------------------------
@@ -639,7 +909,12 @@ def run_parallel(
     ``gcache`` is the persistent grounding cache: the streaming engine
     passes one per service so clean bins are never re-ground across
     ingests; batch callers get a per-run cache (grounding still happens
-    exactly once per bin per cover, across all rounds).
+    exactly once per bin per cover, across all rounds).  A *bounded*
+    cache (``GroundingCache(capacity=...)`` or ``hbm_budget_bytes=...``)
+    is honored per dispatch: bin arrays are fetched just-in-time, so at
+    most ``capacity`` bins stay array-resident between dispatches and
+    cold bins re-ground on demand — same fixpoint bit-for-bit, compute
+    traded for bounded HBM.
 
     ``fast_rounds`` (SMP and MMP with the collective MLN): re-activation
     rounds run the *greedy closure* variant — evidence-driven
@@ -685,24 +960,63 @@ def run_parallel(
     gcache = gcache if gcache is not None else GroundingCache()
     mkey = _matcher_cache_key(matcher)
 
+    _rk_memo: dict[int, tuple | None] = {}
+
     def bin_row_keys(k):
         # packer row keys (streaming path) double as grounding
         # fingerprints; padding rows get a stable sentinel
         if packed.row_keys is None:
             return None
-        real = tuple(packed.row_keys[int(n)] for n in packed.bin_rows[k])
-        pad = bins[k].entity_mask.shape[0] - len(real)
-        return real + (("__pad__", k),) * pad
+        if k not in _rk_memo:
+            real = tuple(packed.row_keys[int(n)] for n in packed.bin_rows[k])
+            pad = bins[k].entity_mask.shape[0] - len(real)
+            _rk_memo[k] = real + (("__pad__", k),) * pad
+        return _rk_memo[k]
 
-    grounds = {
-        k: gcache.get(mkey, k, bins[k], bin_row_keys(k)) for k in bin_ks
-    }
+    run_grounds: dict[int, tuple] = {}
+
+    def ground_of(k):
+        """Fetch one bin's grounded device arrays.
+
+        Unbounded cache: memoized per run — exactly one ``get`` per bin
+        per cover (the historical counter contract).  Bounded cache:
+        fetched per dispatch, so between dispatches only the LRU's
+        ``capacity`` bins stay array-resident and a cold bin re-grounds
+        on demand — the run never pins every bin's ``(B, P, P)`` tensors
+        for its whole lifetime.
+        """
+        if gcache.bounded:
+            return gcache.get(mkey, k, bins[k], bin_row_keys(k))
+        g = run_grounds.get(k)
+        if g is None:
+            g = run_grounds[k] = gcache.get(mkey, k, bins[k], bin_row_keys(k))
+        return g
+
     dev_uidx = {k: jnp.asarray(bins[k].uidx) for k in bin_ks}
     dev_pmask = {k: jnp.asarray(bins[k].pair_mask) for k in bin_ks}
+    evictions0 = gcache.evictions
+    cold0 = gcache.cold_regrounds
+    gcache.begin_peak_window()
+
+    # A fused dispatch passes EVERY bin's grounded tensors to one jitted
+    # program — transiently full residency, which would defeat a memory
+    # bound tighter than the bin count.  In *spill mode* the run instead
+    # routes everything through the per-bin full-round loop: each
+    # dispatch stages one bin's arrays and releases them, so peak device
+    # residency really is capacity (+ the one bin in flight) — memory
+    # bought with extra dispatches and cold re-grounds, never with a
+    # different fixpoint.
+    spill_mode = gcache.hbm_budget_bytes is not None or (
+        gcache.capacity is not None and gcache.capacity < len(bin_ks)
+    )
 
     base_kind = mkey[0]
     if base_kind == "mln" and not matcher.collective:
         base_kind = "mln_greedy"
+
+    # step-7 promotion runs on device (batched delta checks, zero host
+    # coupling-COO scans); the promoter counts any host fallback.
+    promoter = DevicePromoter(gg) if scheme == "mmp" else None
 
     m_plus = init_matches if init_matches is not None else MatchStore()
     m_bits = _seed_bits(universe, m_plus)
@@ -766,7 +1080,7 @@ def run_parallel(
         fn = build_fused_fn(spec, mesh, axes)
         args = []
         for k in bin_ks:
-            args += list(grounds[k])
+            args += list(ground_of(k))
             args += [dev_uidx[k], dev_pmask[k], jnp.asarray(act_masks[k])]
         bits, r, ev, hist = fn(*args, jnp.asarray(m_bits), jnp.asarray(budget, jnp.int32))
         dispatches += 1
@@ -786,6 +1100,10 @@ def run_parallel(
             history=history,
             dispatches=dispatches,
             full_rounds=full_rounds,
+            peak_resident_bins=gcache.window_peak_bins,
+            cache_evictions=gcache.evictions - evictions0,
+            cold_regrounds=gcache.cold_regrounds - cold0,
+            promote_host_scans=promoter.host_scans if promoter else 0,
         )
 
     collective = base_kind == "mln"
@@ -814,7 +1132,7 @@ def run_parallel(
             )
             fn = build_bin_round_fn(spec, mesh, axes)
             x, lab, bits = fn(
-                *grounds[k], dev_uidx[k], dev_pmask[k], jnp.asarray(am),
+                *ground_of(k), dev_uidx[k], dev_pmask[k], jnp.asarray(am),
                 m_bits_dev,
             )
             dispatches += 1
@@ -832,9 +1150,11 @@ def run_parallel(
     if scheme == "nomp":
         # one round, no exchange: a single fused dispatch for cheap
         # matchers, one full-shape dispatch per bin for the collective
-        # MLN (shares the compiled full-round programs with SMP/MMP).
+        # MLN (shares the compiled full-round programs with SMP/MMP) —
+        # and per bin in spill mode, where an all-bins fused dispatch
+        # would transiently materialize every bin's tensors.
         if active:
-            if collective:
+            if collective or spill_mode:
                 full_round_over(active)
             else:
                 bits, rounds, evals, history = fused_call(
@@ -843,9 +1163,11 @@ def run_parallel(
                 m_plus = m_plus.union(universe[bits & ~m_bits])
         return finish()
 
-    if scheme == "smp" and not collective:
+    if scheme == "smp" and not collective and not spill_mode:
         # greedy/rules matchers: the whole multi-round closure is ONE
         # fused dispatch — every round body is a cheap batched fixpoint.
+        # (In spill mode this falls through to the per-bin round loop
+        # below, which stages one bin's tensors at a time.)
         if active:
             bits, rounds, evals, history = fused_call(
                 base_kind, masks_for(active), max_rounds
@@ -853,14 +1175,16 @@ def run_parallel(
             m_plus = m_plus.union(universe[bits & ~m_bits])
         return finish()
 
-    # -- SMP (collective) and MMP: host-visible full rounds + fused -------
-    # greedy segments.  Re-activation rounds only propagate evidence, so
-    # they run as greedy closure inside the fused device loop; a full
-    # round over every neighborhood runs at each quiescence point (and
-    # first), so the fixpoint is closed under the full matcher — the
-    # same soundness argument as MMP's fast_rounds (Prop. 6 + Thm. 2/4),
-    # now shared by SMP.
-    greedy_ok = fast_rounds and collective
+    # -- SMP and MMP: host-visible full rounds + fused greedy segments. ---
+    # Re-activation rounds only propagate evidence, so they run as
+    # greedy closure inside the fused device loop; a full round over
+    # every neighborhood runs at each quiescence point (and first), so
+    # the fixpoint is closed under the full matcher — the same soundness
+    # argument as MMP's fast_rounds (Prop. 6 + Thm. 2/4), now shared by
+    # SMP.  Spill mode disables the fused segments outright (they stage
+    # every bin at once): each round is per-bin full dispatches, the
+    # memory-for-dispatches trade of a bounded cache.
+    greedy_ok = fast_rounds and collective and not spill_mode
     full_round = True
     seeds = list(active)
     bits0 = m_bits.copy()
@@ -883,7 +1207,7 @@ def run_parallel(
         # every seed is inert, but the (streaming-persistent) pool must
         # still be replayed against the current grounding — exactly what
         # run_mmp's step 7 does after evaluating those seeds
-        m_plus2, promoted = _promote(pool, gg, m_plus)
+        m_plus2, promoted = promoter.promote(pool, m_plus)
         promoted_total += promoted
         if promoted:
             extra = m_plus2.difference(m_plus)
@@ -902,7 +1226,7 @@ def run_parallel(
             m_bits = bits
             m_plus = m_plus.union(newly)
             if scheme == "mmp":
-                m_plus2, promoted = _promote(pool, gg, m_plus)
+                m_plus2, promoted = promoter.promote(pool, m_plus)
                 promoted_total += promoted
                 if promoted:
                     extra = m_plus2.difference(m_plus)
@@ -924,7 +1248,7 @@ def run_parallel(
             for msg in round_msgs:
                 pool.add_message(msg)
                 emitted += 1
-            m_plus2, promoted = _promote(pool, gg, m_plus)
+            m_plus2, promoted = promoter.promote(pool, m_plus)
             promoted_total += promoted
             if promoted:
                 extra = m_plus2.difference(m_plus)
@@ -975,6 +1299,7 @@ def _run_parallel_legacy(
     promoted_total = 0
     rounds = 0
     dispatches = 0
+    host_scans = 0
     history: list[int] = []
 
     # MMP fast rounds: greedy closure for re-activations, full maximal-
@@ -1032,6 +1357,7 @@ def _run_parallel_legacy(
                 pool.add_message(msg)
                 emitted += 1
             m_plus2, promoted = _promote(pool, gg, m_plus)
+            host_scans += 1
             promoted_total += promoted
             if promoted:
                 extra = m_plus2.difference(m_plus)
@@ -1059,4 +1385,5 @@ def _run_parallel_legacy(
         wall_time_s=time.perf_counter() - t0,
         history=history,
         dispatches=dispatches,
+        promote_host_scans=host_scans,
     )

@@ -25,7 +25,12 @@ cost proportional to the dirty set rather than the corpus.  One
    (``grounding_pair_visits`` / ``grounding_splice_rows``); the batch
    drivers are warm-started with only the dirty neighborhoods seeded,
    and the device :class:`~repro.core.parallel.GroundingCache` splices
-   only the changed rows (``reground_rows``).
+   only the changed rows (``reground_rows``).  The cache's resident
+   device memory is boundable (``ResolveService(gcache_capacity=...)``
+   / ``gcache_hbm_budget=``): cold bins are LRU-evicted and re-ground
+   on demand, bit-for-bit (``peak_resident_bins`` / ``cache_evictions``
+   / ``cold_regrounds``); MMP's step-7 promotion runs batched on device
+   (``promote_host_scans`` == 0).
 5. **Commit** (:mod:`repro.stream.service`) — matches fold into a
    persistent union-find atomically; ``resolve(id)`` /
    ``resolve_many`` / ``snapshot()`` read committed fixpoints only.

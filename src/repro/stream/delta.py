@@ -66,8 +66,6 @@ from repro.core.cover import (
     Cover,
     CoverDelta,
     PackedCover,
-    assemble_cover,
-    pack_cover,
 )
 from repro.core.types import EntityTable, Relations
 from repro.kernels.ngram_sim import ops as sim_ops
@@ -316,8 +314,6 @@ class DeltaCover:
             self.edge_chunks.append(edges)
         touched = self._probe(ids, names) if ids else set()
 
-        entities = self.entities()
-        relations = self.relations()
         canopies = self._canopies(touched)
         seeds = sorted(self._canopy_cache)
         # the cover-delta's dirt set: the re-swept similarity region plus
@@ -326,29 +322,21 @@ class DeltaCover:
         assembly_touched = set(self._last_region)
         if edges is not None and len(edges):
             assembly_touched.update(int(e) for e in edges.reshape(-1))
-        cover = assemble_cover(
+        # Drive the incremental CoverDelta directly: it maintains the
+        # boundary adjacency from new_edges itself (no per-ingest O(E)
+        # Relations rebuild) and only reads entity *names*, so the live
+        # name list is passed without the O(n) copy of entities().
+        cover = self.cover_delta.assemble(
             canopies,
-            entities,
-            relations,
-            k_max=self.k_max,
-            boundary_relation=self.boundary_relation,
+            seeds,
+            EntityTable(names=self.names, features=self.features),
             present=self.present,
-            delta=self.cover_delta,
-            seeds=seeds,
             touched=assembly_touched,
             new_ids=ids,
             new_edges=edges,
         )
-        packed = pack_cover(
-            cover,
-            entities,
-            relations,
-            k_bins=self.k_bins,
-            thresholds=self.thresholds,
-            boundary_relation=self.boundary_relation,
-            level_cache=self.level_cache,
-            delta=self.cover_delta,
-            prev=self.packed,
+        packed = self.cover_delta.pack(
+            cover, prev=self.packed, level_cache=self.level_cache
         )
 
         # Bound the Jaro-Winkler level memo (oldest-inserted first; pure

@@ -56,7 +56,15 @@ class AdvanceStats:
 
 
 class IncrementalEngine:
-    def __init__(self, matcher, *, scheme: str = "smp", parallel: bool = False):
+    def __init__(
+        self,
+        matcher,
+        *,
+        scheme: str = "smp",
+        parallel: bool = False,
+        gcache_capacity: int | None = None,
+        gcache_hbm_budget: int | None = None,
+    ):
         if scheme not in ("smp", "mmp"):
             raise ValueError(f"streaming scheme must be smp|mmp, got {scheme!r}")
         self.matcher = matcher
@@ -68,7 +76,12 @@ class IncrementalEngine:
         # clean bins keep their grounded arrays on device across
         # ingests; dirty bins splice in only the changed rows.  Created
         # lazily so the sequential engine never imports the mesh stack.
+        # ``gcache_capacity`` / ``gcache_hbm_budget`` bound the cache's
+        # resident device memory (LRU over bins: cold bins drop their
+        # grounded tensors and re-ground on demand, bit-for-bit).
         self.gcache = None
+        self.gcache_capacity = gcache_capacity
+        self.gcache_hbm_budget = gcache_hbm_budget
         self.total_evals = 0
         self.total_rounds = 0
         self.total_dispatches = 0
@@ -100,9 +113,9 @@ class IncrementalEngine:
             for g in self.m_plus.gids
             if int(pairlib.split_gid(np.int64(g))[0]) not in bad
         ]
-        idx = packed.cover.entity_index()
-        for e in bad:
-            dirty |= set(idx.get(e, ()))
+        # per-entity query against the splice-maintained incidence
+        # lookup — no per-ingest Cover.entity_index() rebuild
+        dirty |= packed.neighborhoods_of_entities(bad)
         carried = MatchStore(np.asarray(keep, dtype=np.int64))
         return carried, dirty, len(self.m_plus) - len(carried)
 
@@ -132,7 +145,10 @@ class IncrementalEngine:
             from repro.core.parallel import GroundingCache, run_parallel
 
             if self.gcache is None:
-                self.gcache = GroundingCache()
+                self.gcache = GroundingCache(
+                    capacity=self.gcache_capacity,
+                    hbm_budget_bytes=self.gcache_hbm_budget,
+                )
             rows_before = self.gcache.rows_ground
             result = run_parallel(
                 packed,

@@ -16,7 +16,11 @@ Every per-ingest cost tracks the dirty set, not the corpus:
 * for MMP, the global grounding is patched in place via
   ``GroundingMaintainer.apply_delta`` instead of rebuilt
   (``IngestReport.grounding_pair_visits``);
-* only dirty neighborhoods seed the fixpoint advance.
+* only dirty neighborhoods seed the fixpoint advance;
+* serving memory is boundable: ``gcache_capacity`` /
+  ``gcache_hbm_budget`` cap the device grounding cache (LRU over bins,
+  cold bins re-ground on demand bit-for-bit —
+  ``IngestReport.peak_resident_bins`` proves the bound).
 
 Serving reads don't race ingests: :meth:`ResolveService.snapshot`
 returns an immutable :class:`ResolveSnapshot` of a consistent fixpoint
@@ -65,6 +69,20 @@ class IngestReport:
     # grounding array rows spliced by GroundingMaintainer.grounding()
     # (mmp) — O(delta), not the O(candidate pairs) full materialization
     grounding_splice_rows: int = 0
+    # Bounded serving memory (parallel engine, LRU GroundingCache):
+    # high-water mark of array-resident bins, plus this ingest's LRU
+    # evictions and cold (eviction-forced) re-grounds.
+    peak_resident_bins: int = 0
+    cache_evictions: int = 0
+    cold_regrounds: int = 0
+    # step-7 promotion passes that fell back to the host coupling-COO
+    # walk — 0 on the device-resident path (gated in CI)
+    promote_host_scans: int = 0
+    # packed-array append accounting (CoverDelta backing buffers):
+    # tail rows written by the append path and rows memcpy'd by
+    # capacity-doubling growth — amortized O(fresh), gated in CI
+    append_rows: int = 0
+    growth_copy_rows: int = 0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -115,7 +133,15 @@ class ResolveService:
         boundary_relation: str = "coauthor",
         lsh: LSHConfig | None = None,
         level_cache_max: int | None = None,
+        gcache_capacity: int | None = None,
+        gcache_hbm_budget: int | None = None,
     ):
+        """``gcache_capacity`` / ``gcache_hbm_budget`` (parallel engine
+        only) bound the device grounding cache — the HBM-budget knob of
+        the serving path: at most ``gcache_capacity`` bins (or
+        ``gcache_hbm_budget`` bytes of grounded tensors) stay resident;
+        colder bins are dropped LRU-first and re-ground on demand,
+        bit-for-bit, trading compute for bounded memory."""
         self.weights = weights
         self.scheme = scheme
         self.delta = DeltaCover(
@@ -133,6 +159,8 @@ class ResolveService:
             matcher if matcher is not None else MLNMatcher(weights),
             scheme=scheme,
             parallel=parallel,
+            gcache_capacity=gcache_capacity,
+            gcache_hbm_budget=gcache_hbm_budget,
         )
         # MMP needs the global grounding; maintained incrementally so no
         # ingest pays the O(corpus) from-scratch build.  The delta's
@@ -211,6 +239,12 @@ class ResolveService:
                 reground_rows=stats.reground_rows,
                 cover_splice_rows=d.cover_splice_rows,
                 grounding_splice_rows=grounding_splice,
+                peak_resident_bins=stats.result.peak_resident_bins,
+                cache_evictions=stats.result.cache_evictions,
+                cold_regrounds=stats.result.cold_regrounds,
+                promote_host_scans=stats.result.promote_host_scans,
+                append_rows=self.delta.cover_delta.last_append_rows,
+                growth_copy_rows=self.delta.cover_delta.last_growth_copy_rows,
             )
             self.reports.append(report)
         return report
