@@ -29,6 +29,14 @@ its own named step), default is every gate that applies to the file:
     bins must not exceed the configured LRU capacity (exact, no slack),
     the eviction path must have actually fired, and promotion must have
     done zero host scans.
+  - ``transfer``: the device-transfer block — host->device upload bytes
+    per unit of per-site work (``gcache_upload_per_reground_row``,
+    ``promoter_upload_per_pair_ingest``,
+    ``prepare_upload_per_row_ingest``, from the
+    ``transfer.{gcache,promoter,prepare}_bytes`` registry counters).
+    Per-unit byte cost is bounded by the bin shapes, so the ratios are
+    comparable across corpus scales; a regression to O(corpus)
+    re-uploads per ingest multiplies them far past the slack.
 
 Wall times are recorded in the JSON for the trajectory but never gated
 (CI machines are noisy).
@@ -51,7 +59,13 @@ ABS_SLACK = 2.0
 STREAM_REL_SLACK = 2.0
 STREAM_ABS_SLACK = 1.0
 
-GATES = ("dispatch", "promotion", "stream", "lru")
+GATES = ("dispatch", "promotion", "stream", "lru", "transfer")
+
+# Transfer ratios: per-unit byte costs shift with bin-shape mix between
+# corpus scales; an O(corpus)-re-upload regression scales them with the
+# corpus, far past this.
+TRANSFER_REL_SLACK = 2.0
+TRANSFER_ABS_SLACK = 64.0  # bytes per unit
 
 
 def _check_dispatch(base: dict, fresh: dict, failures: list[str]) -> None:
@@ -162,6 +176,50 @@ def _check_lru(fresh: dict, failures: list[str]) -> None:
             print(f"ok {tag}: promote_host_scans == 0")
 
 
+def _check_transfer(base: dict, fresh: dict, failures: list[str]) -> None:
+    """Upload bytes per unit of per-site work, baseline-relative."""
+    base_entries = base.get("transfer", [])
+    fresh_entries = fresh.get("transfer", [])
+    if not fresh_entries:
+        failures.append("transfer: block missing from fresh results")
+        return
+    if not base_entries:
+        failures.append("transfer: block missing from baseline")
+        return
+    for key in (
+        "gcache_upload_per_reground_row",
+        "promoter_upload_per_pair_ingest",
+        "prepare_upload_per_row_ingest",
+    ):
+        b = _max_ratio(base_entries, key)
+        got = _max_ratio(fresh_entries, key)
+        tag = "stream/transfer"
+        if b is None:
+            failures.append(f"{tag}: {key} missing from baseline")
+            continue
+        if got is None:
+            failures.append(f"{tag}: {key} missing from fresh results")
+            continue
+        limit = b * TRANSFER_REL_SLACK + TRANSFER_ABS_SLACK
+        if got > limit:
+            failures.append(
+                f"{tag}: {key} {got} > limit {limit:.2f} (baseline {b})"
+            )
+        else:
+            print(f"ok {tag}: {key} {got} <= {limit:.2f}")
+    # the accounting itself must have seen traffic: a parallel-engine
+    # ingest run with zero recorded bytes means the counters came unwired
+    for key in ("gcache_bytes", "prepare_bytes"):
+        got = _max_ratio(fresh_entries, key)
+        if not got:
+            failures.append(
+                f"stream/transfer: {key} is 0/missing — transfer "
+                "accounting not recording"
+            )
+        else:
+            print(f"ok stream/transfer: {key} {got} > 0")
+
+
 def main(argv: list[str]) -> int:
     gate = "all"
     args = []
@@ -191,6 +249,9 @@ def main(argv: list[str]) -> int:
             ran = True
         if gate in ("all", "lru"):
             _check_lru(fresh, failures)
+            ran = True
+        if gate in ("all", "transfer"):
+            _check_transfer(base, fresh, failures)
             ran = True
     else:
         if gate in ("all", "dispatch"):

@@ -40,6 +40,15 @@ capacity-doubling buffers per row placed — amortized O(1), where the
 former per-append ``np.concatenate`` re-copied the bin every ingest).
 All of these are gated in CI by ``benchmarks.check_bench`` against the
 committed ``BENCH_stream.json``.
+
+Counters come from the runtime metrics registry (``repro.obs``): each
+cell ``obs.reset()``s then reads one ``snapshot()`` — the benchmark no
+longer sums per-report dataclass fields by hand.  The readers block
+reports ``p50_ms``/``p99_ms`` from the ``resolve.latency_ms`` histogram
+(exact percentiles over the reader threads' per-call samples), and a
+fifth block reports device-transfer bytes per site
+(``transfer.{gcache,promoter,prepare}_bytes``) with scale-robust
+upload-per-unit ratios, gated by ``check_bench --gate=transfer``.
 """
 
 from __future__ import annotations
@@ -50,6 +59,7 @@ import time
 import numpy as np
 
 from benchmarks.common import SMOKE, hepth, row, timed
+from repro import obs
 from repro.core import pipeline
 from repro.core.driver import run_smp
 from repro.core.mln import MLNMatcher, PAPER_LEARNED
@@ -82,10 +92,13 @@ def _mean(xs) -> float:
 
 
 def _reader_qps(ds, n_readers: int) -> dict:
-    """resolve_many() QPS from reader threads under concurrent ingest."""
+    """resolve_many() QPS from reader threads under concurrent ingest,
+    plus the p50/p99 of the per-call resolve latency histogram the
+    snapshot read path records into the metrics registry."""
     batches = arrival_stream(ds, batch_size=READER_INGEST_BATCH)
     svc = ResolveService(scheme="smp")
     svc.ingest(batches[0].names, batches[0].edges, ids=batches[0].ids)
+    obs.reset()  # the latency histogram samples only the reader window
     stop = threading.Event()
     counts = [0] * n_readers
 
@@ -115,11 +128,14 @@ def _reader_qps(ds, n_readers: int) -> dict:
     for t in threads:
         t.join()
     queries = sum(counts)
+    lat = obs.get_registry().histogram("resolve.latency_ms").summary()
     return {
         "n_readers": n_readers,
         "ingest_s": round(ingest_s, 3),
         "queries": queries,
         "qps_total": round(queries / max(ingest_s, 1e-9), 1),
+        "p50_ms": round(lat["p50"], 4),
+        "p99_ms": round(lat["p99"], 4),
     }
 
 
@@ -136,6 +152,7 @@ def main() -> dict:
     )
     for bs in BATCH_SIZES:
         batches = arrival_stream(ds, batch_size=bs)
+        obs.reset()  # each cell reads the registry's cumulative counters
         svc = ResolveService(scheme="smp")
 
         def _run():
@@ -143,19 +160,19 @@ def main() -> dict:
                 svc.ingest(b.names, b.edges, ids=b.ids)
 
         _, t = timed(_run)
-        dirty_frac = _mean(
-            [r.n_dirty / max(r.n_neighborhoods, 1) for r in svc.reports]
-        )
-        replay_frac = _mean(
-            [r.replay_visits / max(r.n_entities, 1) for r in svc.reports]
-        )
-        splice_rows = sum(r.cover_splice_rows for r in svc.reports)
-        splice_per_dirty = splice_rows / max(
-            sum(r.n_dirty for r in svc.reports), 1
-        )
-        cd = svc.delta.cover_delta
-        rows_placed = cd.total_append_rows + cd.total_restack_rows
-        growth_copy_per_row = cd.total_growth_copy_rows / max(rows_placed, 1)
+        # everything below is read from the metrics-registry snapshot —
+        # the benchmark no longer reaches into service/CoverDelta state
+        snap = obs.get_registry().snapshot()
+        c, h = snap["counters"], snap["histograms"]
+        dirty_frac = h["ingest.dirty_frac"]["mean"]
+        replay_frac = h["ingest.replay_frac"]["mean"]
+        splice_rows = c.get("ingest.cover_splice_rows", 0)
+        splice_per_dirty = splice_rows / max(c.get("ingest.n_dirty", 0), 1)
+        stream_evals = c.get("ingest.neighborhood_evals", 0)
+        append_rows = c.get("cover.append_rows", 0)
+        growth_copy_rows = c.get("cover.growth_copy_rows", 0)
+        rows_placed = append_rows + c.get("cover.restack_rows", 0)
+        growth_copy_per_row = growth_copy_rows / max(rows_placed, 1)
         scratch = _scratch_evals(ds, batches)
         row(
             bs,
@@ -167,9 +184,9 @@ def main() -> dict:
             f"{replay_frac:.3f}",
             splice_rows,
             f"{splice_per_dirty:.2f}",
-            svc.total_evals,
+            stream_evals,
             scratch,
-            f"{scratch / max(svc.total_evals, 1):.1f}x",
+            f"{scratch / max(stream_evals, 1):.1f}x",
         )
         out["throughput"].append({
             "batch_size": bs,
@@ -180,10 +197,10 @@ def main() -> dict:
             "replay_frac": round(replay_frac, 4),
             "cover_splice_rows": int(splice_rows),
             "splice_per_dirty": round(splice_per_dirty, 3),
-            "append_rows": int(cd.total_append_rows),
-            "growth_copy_rows": int(cd.total_growth_copy_rows),
+            "append_rows": int(append_rows),
+            "growth_copy_rows": int(growth_copy_rows),
             "growth_copy_per_row": round(growth_copy_per_row, 3),
-            "stream_evals": int(svc.total_evals),
+            "stream_evals": int(stream_evals),
             "scratch_evals": int(scratch),
         })
 
@@ -195,28 +212,32 @@ def main() -> dict:
     )
     for bs in GROUNDING_BATCH_SIZES:
         batches = arrival_stream(ds, batch_size=bs)
+        obs.reset()
         svc = ResolveService(scheme="mmp")
         for b in batches:
             svc.ingest(b.names, b.edges, ids=b.ids)
         total_pairs = len(svc.delta.packed.pair_levels)
-        visits = [r.grounding_pair_visits for r in svc.reports]
-        splice = sum(r.grounding_splice_rows for r in svc.reports)
-        splice_per_visit = splice / max(sum(visits), 1)
+        snap = obs.get_registry().snapshot()
+        c = snap["counters"]
+        vh = snap["histograms"]["ingest.grounding_pair_visits"]
+        visits_mean, visits_max = vh["mean"], vh["max"]
+        splice = c.get("ingest.grounding_splice_rows", 0)
+        splice_per_visit = splice / max(c.get("ingest.grounding_pair_visits", 0), 1)
         row(
             bs,
             n,
             total_pairs,
-            f"{_mean(visits):.1f}",
-            max(visits),
-            f"{_mean(visits) / max(total_pairs, 1):.4f}",
+            f"{visits_mean:.1f}",
+            int(visits_max),
+            f"{visits_mean / max(total_pairs, 1):.4f}",
             splice,
             f"{splice_per_visit:.2f}",
         )
         out["grounding"].append({
             "batch_size": bs,
             "total_pairs": int(total_pairs),
-            "visits_mean": round(_mean(visits), 1),
-            "visits_max": int(max(visits)),
+            "visits_mean": round(visits_mean, 1),
+            "visits_max": int(visits_max),
             "grounding_splice_rows": int(splice),
             "splice_per_visit": round(splice_per_visit, 3),
         })
@@ -229,6 +250,7 @@ def main() -> dict:
         "promote_host_scans,ingest_s"
     )
     batches = arrival_stream(ds, batch_size=LRU_BATCH_SIZE)
+    obs.reset()
     svc = ResolveService(
         scheme="mmp", parallel=True, gcache_capacity=LRU_CAPACITY
     )
@@ -238,33 +260,84 @@ def main() -> dict:
             svc.ingest(b.names, b.edges, ids=b.ids)
 
     _, t_lru = timed(_run_lru)
-    g = svc.engine.gcache
-    host_scans = sum(r.promote_host_scans for r in svc.reports)
+    snap = obs.get_registry().snapshot()
+    c = snap["counters"]
+    peak = int(snap["gauges"].get("ingest.peak_resident_bins", 0))
+    evictions = c.get("ingest.cache_evictions", 0)
+    cold = c.get("ingest.cold_regrounds", 0)
+    host_scans = c.get("ingest.promote_host_scans", 0)
     row(
         LRU_CAPACITY,
         len(svc.delta.packed.bins),
-        g.peak_resident_bins,
-        g.evictions,
-        g.cold_regrounds,
+        peak,
+        evictions,
+        cold,
         host_scans,
         f"{t_lru:.2f}",
     )
     out["serving_memory"] = [{
         "lru_capacity": LRU_CAPACITY,
         "n_bins": len(svc.delta.packed.bins),
-        "peak_resident_bins": int(g.peak_resident_bins),
-        "evictions": int(g.evictions),
-        "cold_regrounds": int(g.cold_regrounds),
+        "peak_resident_bins": peak,
+        "evictions": int(evictions),
+        "cold_regrounds": int(cold),
         "promote_host_scans": int(host_scans),
         "ingest_s": round(t_lru, 3),
     }]
 
+    # -- device-transfer accounting of the same (mmp, parallel, LRU) run:
+    # upload bytes per unit of per-site work.  The ratios are
+    # scale-robust (per-row / per-pair byte cost is bounded by the bin
+    # shapes), which is what ``check_bench --gate=transfer`` gates —
+    # catching an accidental return to O(corpus) re-uploads per ingest.
+    row("")
+    row("# stream_throughput: device-transfer accounting (same LRU run)")
+    row(
+        "site,bytes,denominator,bytes_per_unit"
+    )
+    n_ingests = max(len(batches), 1)
+    packed_rows = sum(
+        b.entity_mask.shape[0] for b in svc.delta.packed.bins.values()
+    )
+    total_pairs = len(svc.delta.packed.pair_levels)
+    gcache_bytes = c.get("transfer.gcache_bytes", 0)
+    promoter_bytes = c.get("transfer.promoter_bytes", 0)
+    prepare_bytes = c.get("transfer.prepare_bytes", 0)
+    reground_rows = c.get("ingest.reground_rows", 0)
+    gcache_per_row = gcache_bytes / max(reground_rows, 1)
+    promoter_per_pair_ingest = promoter_bytes / max(total_pairs * n_ingests, 1)
+    prepare_per_row_ingest = prepare_bytes / max(packed_rows * n_ingests, 1)
+    row("gcache", gcache_bytes, reground_rows, f"{gcache_per_row:.1f}")
+    row("promoter", promoter_bytes, total_pairs * n_ingests,
+        f"{promoter_per_pair_ingest:.2f}")
+    row("prepare", prepare_bytes, packed_rows * n_ingests,
+        f"{prepare_per_row_ingest:.2f}")
+    out["transfer"] = [{
+        "lru_capacity": LRU_CAPACITY,
+        "n_ingests": int(n_ingests),
+        "total_pairs": int(total_pairs),
+        "packed_rows": int(packed_rows),
+        "reground_rows": int(reground_rows),
+        "gcache_bytes": int(gcache_bytes),
+        "promoter_bytes": int(promoter_bytes),
+        "prepare_bytes": int(prepare_bytes),
+        "upload_bytes_per_ingest_mean": round(
+            snap["histograms"]["ingest.upload_bytes"]["mean"], 1
+        ),
+        "gcache_upload_per_reground_row": round(gcache_per_row, 3),
+        "promoter_upload_per_pair_ingest": round(
+            promoter_per_pair_ingest, 3
+        ),
+        "prepare_upload_per_row_ingest": round(prepare_per_row_ingest, 3),
+    }]
+
     row("")
     row("# stream_throughput: resolve_many QPS under concurrent ingest")
-    row("n_readers,ingest_s,queries,qps_total")
+    row("n_readers,ingest_s,queries,qps_total,p50_ms,p99_ms")
     for nr in READER_COUNTS:
         stats = _reader_qps(ds, nr)
-        row(nr, stats["ingest_s"], stats["queries"], stats["qps_total"])
+        row(nr, stats["ingest_s"], stats["queries"], stats["qps_total"],
+            stats["p50_ms"], stats["p99_ms"])
         out["readers"].append(stats)
     return out
 

@@ -32,6 +32,7 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import SMOKE, prepared, row, timed
+from repro import obs
 from repro.core.global_grounding import build_global_grounding
 from repro.core.mln import MLNMatcher
 from repro.core.parallel import run_parallel
@@ -76,45 +77,58 @@ def _measure(name: str, packed, gg, matcher, schemes) -> dict:
         "promote_host_scans,modeled_speedup_30"
     )
     for scheme in schemes:
+        # Each run gets its own registry window: run_parallel publishes
+        # its EMResult as cumulative ``em.*`` counters, so the bench
+        # reads one snapshot per engine instead of dataclass fields.
+        obs.reset()
         legacy, t_legacy = timed(
             lambda s=scheme: run_parallel(packed, matcher, gg, scheme=s,
                                           fused=False)
         )
+        c_legacy = obs.get_registry().snapshot()["counters"]
+        obs.reset()
         res, t_fused = timed(
             lambda s=scheme: run_parallel(packed, matcher, gg, scheme=s)
         )
+        c_fused = obs.get_registry().snapshot()["counters"]
         assert res.matches.as_set() == legacy.matches.as_set(), (name, scheme)
+        rounds = c_fused.get("em.rounds", 0)
+        evals = c_fused.get("em.neighborhood_evals", 0)
+        dispatches = c_fused.get("em.dispatches", 0)
+        host_scans = c_fused.get("em.promote_host_scans", 0)
         hist = res.history or [packed.num_neighborhoods]
         sp = skew_speedup(packed, hist, 30, overhead_s=0.05 * t_fused,
                           t_total=t_fused)
-        dpr = res.dispatches / max(res.rounds, 1)
+        dpr = dispatches / max(rounds, 1)
         row(
             scheme,
             f"{t_fused:.3f}",
             f"{t_legacy:.3f}",
             f"{t_legacy / max(t_fused, 1e-9):.1f}x",
-            res.rounds,
-            res.neighborhood_evals,
-            res.dispatches,
-            legacy.dispatches,
+            rounds,
+            evals,
+            dispatches,
+            c_legacy.get("em.dispatches", 0),
             f"{dpr:.2f}",
-            res.promote_host_scans,
+            host_scans,
             f"{sp:.1f}",
         )
         out["schemes"][scheme] = {
             "wall_s": round(t_fused, 4),
             "wall_legacy_s": round(t_legacy, 4),
             "speedup_vs_legacy": round(t_legacy / max(t_fused, 1e-9), 2),
-            "rounds": int(res.rounds),
-            "evals": int(res.neighborhood_evals),
-            "dispatches": int(res.dispatches),
-            "dispatches_legacy": int(legacy.dispatches),
+            "rounds": int(rounds),
+            "evals": int(evals),
+            "dispatches": int(dispatches),
+            "dispatches_legacy": int(c_legacy.get("em.dispatches", 0)),
             "dispatches_per_round": round(dpr, 3),
             # host coupling-COO promotion walks of the fused engine —
             # device-resident promotion keeps this 0 (gated in CI); the
             # legacy loop's count shows what the host baseline pays
-            "promote_host_scans": int(res.promote_host_scans),
-            "promote_host_scans_legacy": int(legacy.promote_host_scans),
+            "promote_host_scans": int(host_scans),
+            "promote_host_scans_legacy": int(
+                c_legacy.get("em.promote_host_scans", 0)
+            ),
         }
     return out
 

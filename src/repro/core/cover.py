@@ -36,6 +36,7 @@ from repro.core import pairs as pairlib
 from repro.core import similarity as simlib
 from repro.core.types import EntityTable, NeighborhoodBatch, Relations
 from repro.kernels.ngram_sim import ops as sim_ops
+from repro.obs.registry import get_registry
 
 DEFAULT_BINS = (8, 16, 24, 32)
 
@@ -1330,6 +1331,13 @@ class CoverDelta:
         self.total_splice_rows += splice_rows
         self.last_added_pairs = added
         self.last_retracted_pairs = retracted
+        # registry-backed view of the splice accounting (cover.* family):
+        # cumulative counterparts of the per-ingest last_* fields above
+        reg = get_registry()
+        reg.counter("cover.splice_rows").inc(splice_rows)
+        reg.counter("cover.append_rows").inc(self.last_append_rows)
+        reg.counter("cover.growth_copy_rows").inc(self.last_growth_copy_rows)
+        reg.counter("cover.restack_rows").inc(self.last_restack_rows)
         self._acquires = []
         self._releases = []
         return PackedCover(

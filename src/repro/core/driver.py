@@ -53,6 +53,44 @@ class EMResult:
     promote_host_scans: int = 0
 
 
+# EMResult fields published as monotone ``em.*`` counters; the remaining
+# fields are a high-water gauge (peak_resident_bins) and a latency
+# histogram (wall_time_s -> em.wall_ms).
+_EM_COUNTER_FIELDS = (
+    "neighborhood_evals",
+    "rounds",
+    "full_rounds",
+    "dispatches",
+    "messages_emitted",
+    "messages_promoted",
+    "cache_evictions",
+    "cold_regrounds",
+    "promote_host_scans",
+)
+
+
+def publish_em_result(res: EMResult) -> EMResult:
+    """Publish an :class:`EMResult` into the runtime metrics registry.
+
+    The dataclass stays the per-call API; the registry (``em.*`` family)
+    is the cumulative, process-wide view the benchmarks snapshot.  Every
+    driver (sequential and parallel) routes its result through here, so
+    ``em.runs`` counts engine invocations regardless of scheme.
+    """
+    from repro.obs import get_registry
+
+    reg = get_registry()
+    reg.counter("em.runs").inc()
+    for name in _EM_COUNTER_FIELDS:
+        v = int(getattr(res, name))
+        if v:
+            reg.counter(f"em.{name}").inc(v)
+    reg.gauge("em.peak_resident_bins").max(res.peak_resident_bins)
+    reg.gauge("em.matches").max(len(res.matches.gids))
+    reg.histogram("em.wall_ms").observe(res.wall_time_s * 1e3)
+    return res
+
+
 def _eval_neighborhood(matcher, packed, n, m_plus, with_messages):
     """Run the matcher on neighborhood n with current evidence projected in."""
     k = int(packed.neighborhood_bin[n])
@@ -81,8 +119,10 @@ def run_nomp(packed: PackedCover, matcher: TypeIMatcher) -> EMResult:
         nb, x, _ = _eval_neighborhood(matcher, packed, n, MatchStore(), False)
         m_plus = m_plus.union(_new_gids(nb.pair_gid[0], x, m_plus))
         evals += 1
-    return EMResult(m_plus, evals, 1, 0, 0, time.perf_counter() - t0,
-                    dispatches=evals)
+    return publish_em_result(
+        EMResult(m_plus, evals, 1, 0, 0, time.perf_counter() - t0,
+                 dispatches=evals)
+    )
 
 
 def run_smp(
@@ -124,8 +164,10 @@ def run_smp(
                 if m != n and not in_list[m]:
                     worklist.append(m)
                     in_list[m] = True
-    return EMResult(m_plus, evals, 1, 0, 0, time.perf_counter() - t0,
-                    dispatches=evals)
+    return publish_em_result(
+        EMResult(m_plus, evals, 1, 0, 0, time.perf_counter() - t0,
+                 dispatches=evals)
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -321,7 +363,7 @@ def run_mmp(
                 if m != n and not in_list[m]:
                     worklist.append(m)
                     in_list[m] = True
-    return EMResult(
+    return publish_em_result(EMResult(
         m_plus, evals, 1, emitted, promoted_total, time.perf_counter() - t0,
         dispatches=evals, promote_host_scans=host_scans,
-    )
+    ))

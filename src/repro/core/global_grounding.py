@@ -37,6 +37,7 @@ import numpy as np
 from repro.core import pairs as pairlib
 from repro.core.mln import MLNWeights
 from repro.core.types import MatchStore, Relations
+from repro.obs.registry import get_registry
 
 
 @dataclasses.dataclass
@@ -360,6 +361,7 @@ class GroundingMaintainer:
 
         stats.pairs_visited = len(visited)
         self.total_pair_visits += stats.pairs_visited
+        get_registry().counter("grounding.pair_visits").inc(stats.pairs_visited)
         return stats
 
     # -- materialization --------------------------------------------------
@@ -510,6 +512,7 @@ class GroundingMaintainer:
         else:
             self._gg = self._splice(self._gg)
         self.total_splice_rows += self.last_splice_rows
+        get_registry().counter("grounding.splice_rows").inc(self.last_splice_rows)
         self._pend_add.clear()
         self._pend_del.clear()
         self._pend_u.clear()

@@ -10,6 +10,13 @@ Two families:
 * *Framework properties vs. a reference run* — soundness (fraction of
   M(E) also in E(E)) and completeness (fraction of E(E) recovered by
   M(E)), per §2.2.1 Defs. 1-2.
+
+Naming note: these are the paper's *match-quality* metrics.  Runtime
+observability — counters, latency histograms, tracing spans,
+device-transfer accounting — lives in :mod:`repro.obs` (its registry is
+:mod:`repro.obs.registry`); this module is re-exported there as
+:mod:`repro.obs.quality` so "metrics" stops meaning two different
+things at the same import depth.
 """
 
 from __future__ import annotations

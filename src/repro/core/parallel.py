@@ -75,7 +75,15 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import pairs as pairlib
 from repro.core.cover import PackedCover
-from repro.core.driver import EMResult, MessagePool, _labels_to_messages, _promote
+from repro.core.driver import (
+    EMResult,
+    MessagePool,
+    _labels_to_messages,
+    _promote,
+    publish_em_result,
+)
+from repro.obs import profiler_session, record_transfer
+from repro.obs import span as obs_span
 from repro.core.global_grounding import GlobalGrounding
 from repro.core.mln import (
     MLNMatcher,
@@ -297,7 +305,9 @@ class GroundingCache:
             co = np.concatenate([co, np.zeros((pad,) + co.shape[1:], co.dtype)])
             lv = np.concatenate([lv, np.zeros((pad,) + lv.shape[1:], lv.dtype)])
             pm = np.concatenate([pm, np.zeros((pad,) + pm.shape[1:], pm.dtype)])
-        out = fn(em, co, lv, pm)
+        with obs_span("rounds.ground", rows=n):
+            record_transfer("gcache", em, co, lv, pm)
+            out = fn(em, co, lv, pm)
         self.ground_calls += 1
         self.rows_ground += n
         return tuple(a[:n] for a in out) if pad else out
@@ -398,7 +408,7 @@ def _prepare_bins(
             extra = np.full((target - b,) + a.shape[1:], fill, dtype=a.dtype)
             return np.concatenate([a, extra], axis=0)
 
-        out[k] = _BinTensors(
+        bt = _BinTensors(
             entity_mask=_pad(nb.entity_mask, False),
             coauthor=_pad(nb.coauthor, False),
             sim_level=_pad(nb.sim_level.astype(np.int8), 0),
@@ -406,6 +416,11 @@ def _prepare_bins(
             uidx=_pad(uidx, Np),
             pair_gid=_pad(nb.pair_gid, -1),
         )
+        record_transfer(
+            "prepare", bt.entity_mask, bt.coauthor, bt.sim_level,
+            bt.pair_mask, bt.uidx, bt.pair_gid,
+        )
+        out[k] = bt
     return out
 
 
@@ -614,10 +629,13 @@ class DevicePromoter:
         # upload happens once per grounding *version*, not once per run
         gg = self.gg
         if gg._device is None:
+            cp = gg.coup_p.astype(np.int32)
+            cq = gg.coup_q.astype(np.int32)
+            record_transfer("promoter", gg.u, cp, cq)
             gg._device = (
                 jnp.asarray(gg.u),
-                jnp.asarray(gg.coup_p.astype(np.int32)),
-                jnp.asarray(gg.coup_q.astype(np.int32)),
+                jnp.asarray(cp),
+                jnp.asarray(cq),
                 jnp.float32(gg.w_co),
             )
         return gg._device
@@ -653,6 +671,7 @@ class DevicePromoter:
                 gseg = np.concatenate([gseg, np.full(pad, k_pad, np.int32)])
             gvalid = np.zeros(k_pad, dtype=bool)
             gvalid[:n_groups] = True
+            record_transfer("promoter", gidx, gseg, gvalid)
             out = (
                 jnp.asarray(gidx), jnp.asarray(gseg), jnp.asarray(gvalid),
                 m_pad, k_pad,
@@ -673,7 +692,8 @@ class DevicePromoter:
             return m_plus, 0
         if not self.batched_ok:
             self.host_scans += 1
-            return _promote(pool, self.gg, m_plus)
+            with obs_span("rounds.promote", host=True):
+                return _promote(pool, self.gg, m_plus)
         garrs = self._group_arrays(groups)
         if garrs is None:
             return m_plus, 0
@@ -681,11 +701,16 @@ class DevicePromoter:
         gidx, gseg, gvalid, m_pad, k_pad = garrs
         base0 = gg.bool_of(m_plus)
         fn = _promote_loop_fn(len(gg.gids), len(gg.coup_p), m_pad, k_pad)
-        bits, promoted = fn(
-            *self._device_grounding(), gidx, gseg, gvalid, jnp.asarray(base0)
-        )
+        with obs_span("rounds.promote"):
+            record_transfer("promoter", base0)
+            bits, promoted = fn(
+                *self._device_grounding(), gidx, gseg, gvalid,
+                jnp.asarray(base0)
+            )
+            # int() blocks on the dispatch, so the span bills the device
+            # work it launched, not the next host sync
+            promoted = int(promoted)
         self.dispatches += 1
-        promoted = int(promoted)
         if promoted:
             extra = gg.gids[np.asarray(bits) & ~base0]
             if len(extra):
@@ -896,6 +921,40 @@ def run_parallel(
 ) -> EMResult:
     """Round-parallel NO-MP / SMP / MMP over the mesh's data axes.
 
+    See :func:`_run_parallel_impl` for the engine semantics; this entry
+    point additionally (a) runs the whole call inside an opt-in
+    ``jax.profiler`` session (:func:`repro.obs.profiler_session`,
+    enabled via ``REPRO_JAX_PROFILE_DIR``) and (b) publishes the
+    :class:`EMResult` counters into the runtime metrics registry
+    (``em.*`` family).
+    """
+    with profiler_session():
+        res = _run_parallel_impl(
+            packed, matcher, gg, scheme=scheme, mesh=mesh,
+            max_rounds=max_rounds, fast_rounds=fast_rounds, active=active,
+            init_matches=init_matches, pool=pool, gcache=gcache,
+            fused=fused,
+        )
+    return publish_em_result(res)
+
+
+def _run_parallel_impl(
+    packed: PackedCover,
+    matcher,
+    gg: GlobalGrounding | None = None,
+    *,
+    scheme: str = "smp",
+    mesh: Mesh | None = None,
+    max_rounds: int = 256,
+    fast_rounds: bool = True,
+    active: list[int] | None = None,
+    init_matches: MatchStore | None = None,
+    pool: MessagePool | None = None,
+    gcache: GroundingCache | None = None,
+    fused: bool = True,
+) -> EMResult:
+    """Round-parallel NO-MP / SMP / MMP over the mesh's data axes.
+
     scheme='nomp' runs one round with no evidence exchange;
     scheme='smp' exchanges match bitsets per round (Alg. 1 in rounds);
     scheme='mmp' additionally maintains the maximal-message pool and the
@@ -1082,9 +1141,13 @@ def run_parallel(
         for k in bin_ks:
             args += list(ground_of(k))
             args += [dev_uidx[k], dev_pmask[k], jnp.asarray(act_masks[k])]
-        bits, r, ev, hist = fn(*args, jnp.asarray(m_bits), jnp.asarray(budget, jnp.int32))
+        with obs_span("rounds.fused", kind=kind):
+            bits, r, ev, hist = fn(
+                *args, jnp.asarray(m_bits), jnp.asarray(budget, jnp.int32)
+            )
+            # int() blocks on the while_loop, so the span owns its time
+            r = int(r)
         dispatches += 1
-        r = int(r)
         # np.array (not asarray): callers assign this to m_bits and
         # mutate it in place, and asarray of a jax buffer is read-only
         return np.array(bits), r, int(ev), [int(h) for h in np.asarray(hist)[:r]]
@@ -1119,29 +1182,30 @@ def run_parallel(
         new_bits = m_bits.copy()
         round_msgs: list[list[int]] = []
         m_bits_dev = jnp.asarray(m_bits)
-        for k in bin_ks:
-            am = act_masks[k]
-            if not am.any():
-                continue
-            spec = BinRoundSpec(
-                kind=base_kind,
-                k=k,
-                batch=bins[k].entity_mask.shape[0],
-                num_pairs=bins[k].pair_mask.shape[1],
-                universe_size=Np,
-            )
-            fn = build_bin_round_fn(spec, mesh, axes)
-            x, lab, bits = fn(
-                *ground_of(k), dev_uidx[k], dev_pmask[k], jnp.asarray(am),
-                m_bits_dev,
-            )
-            dispatches += 1
-            evals += int(am.sum())
-            new_bits |= np.asarray(bits)
-            if scheme == "mmp" and collective:
-                round_msgs += _labels_to_messages(
-                    bins[k].pair_gid, np.asarray(lab), m_plus, row_mask=am
+        with obs_span("rounds.full", active=len(act_list)):
+            for k in bin_ks:
+                am = act_masks[k]
+                if not am.any():
+                    continue
+                spec = BinRoundSpec(
+                    kind=base_kind,
+                    k=k,
+                    batch=bins[k].entity_mask.shape[0],
+                    num_pairs=bins[k].pair_mask.shape[1],
+                    universe_size=Np,
                 )
+                fn = build_bin_round_fn(spec, mesh, axes)
+                x, lab, bits = fn(
+                    *ground_of(k), dev_uidx[k], dev_pmask[k], jnp.asarray(am),
+                    m_bits_dev,
+                )
+                dispatches += 1
+                evals += int(am.sum())
+                new_bits |= np.asarray(bits)
+                if scheme == "mmp" and collective:
+                    round_msgs += _labels_to_messages(
+                        bins[k].pair_gid, np.asarray(lab), m_plus, row_mask=am
+                    )
         newly = universe[new_bits & ~m_bits]
         m_bits = new_bits
         m_plus = m_plus.union(newly)

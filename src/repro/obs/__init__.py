@@ -1,0 +1,55 @@
+"""Unified runtime observability: metrics registry, tracing, exporters.
+
+The paper's framework decomposes EM into per-stage work (blocking,
+replay, cover splice, grounding splice, message-passing rounds,
+promotion, commit — §4/§5 of 1103.2410); this package is where that
+story is *measured*, in one substrate instead of counters smeared over
+report dataclasses and benchmark plumbing:
+
+* :mod:`repro.obs.registry` — process-wide, thread-safe counters /
+  gauges / histograms (exact p50/p90/p99); ``get_registry()`` /
+  ``reset()``.
+* :mod:`repro.obs.tracing` — nestable ``span()`` context managers with
+  optional device fencing; the serving span taxonomy is in the module
+  docstring and ``docs/ARCHITECTURE.md``.
+* :mod:`repro.obs.transfer` — host→device upload-byte accounting for
+  the three transfer sites (grounding cache, promoter, bin staging).
+* :mod:`repro.obs.export` — JSON snapshots, Chrome-trace/Perfetto
+  ``trace_event`` files, opt-in ``jax.profiler`` sessions.
+* :mod:`repro.obs.quality` — the paper's quality metrics
+  (:mod:`repro.core.metrics`), re-exported so runtime and quality
+  numbers report through one surface.
+
+``IngestReport`` and ``EMResult`` remain the public per-call dataclass
+views; their counters are registry-backed (``ingest.*`` / ``em.*``
+counter families, published at the end of each ingest/run), which is
+what ``benchmarks/stream_throughput.py`` and ``table1_parallel.py``
+consume via ``snapshot()``.
+"""
+
+from repro.obs.export import (  # noqa: F401
+    profiler_session,
+    write_chrome_trace,
+    write_snapshot,
+)
+from repro.obs.registry import (  # noqa: F401
+    MetricsRegistry,
+    get_registry,
+    reset,
+)
+from repro.obs.tracing import Span, SpanRecord, span  # noqa: F401
+from repro.obs.transfer import record_transfer, total_upload_bytes  # noqa: F401
+
+__all__ = [
+    "MetricsRegistry",
+    "Span",
+    "SpanRecord",
+    "get_registry",
+    "profiler_session",
+    "record_transfer",
+    "reset",
+    "span",
+    "total_upload_bytes",
+    "write_chrome_trace",
+    "write_snapshot",
+]

@@ -1,0 +1,23 @@
+"""Paper *quality* metrics, re-exported under the observability roof.
+
+The runtime registry (:mod:`repro.obs.registry`) measures *how fast and
+at what cost* the system runs; this module is the other axis — *how
+well it matches*: precision/recall/F1 against ground truth and the
+§2.2.1 soundness/completeness framework properties.  The
+implementation lives in :mod:`repro.core.metrics` (see its docstring
+for the paper mapping); this alias exists so quality numbers are
+reported through the same ``repro.obs`` surface as the runtime ones —
+e.g. a benchmark snapshot can carry ``obs.quality.prf(...)`` next to a
+registry snapshot — and so ``metrics`` no longer names two different
+things at one import depth.
+"""
+
+from repro.core.metrics import (  # noqa: F401
+    PRF,
+    completeness,
+    prf,
+    soundness,
+    true_pair_gids,
+)
+
+__all__ = ["PRF", "completeness", "prf", "soundness", "true_pair_gids"]

@@ -69,6 +69,7 @@ from repro.core.cover import (
 )
 from repro.core.types import EntityTable, Relations
 from repro.kernels.ngram_sim import ops as sim_ops
+from repro.obs import span as obs_span
 from repro.stream.index import LSHConfig, MinHashLSHIndex
 
 
@@ -312,9 +313,11 @@ class DeltaCover:
         self._grow(ids, names)
         if edges is not None:
             self.edge_chunks.append(edges)
-        touched = self._probe(ids, names) if ids else set()
+        with obs_span("ingest.lsh", batch=len(ids)):
+            touched = self._probe(ids, names) if ids else set()
 
-        canopies = self._canopies(touched)
+        with obs_span("ingest.replay", touched=len(touched)):
+            canopies = self._canopies(touched)
         seeds = sorted(self._canopy_cache)
         # the cover-delta's dirt set: the re-swept similarity region plus
         # every endpoint of this ingest's relation edges (boundary
@@ -326,18 +329,19 @@ class DeltaCover:
         # boundary adjacency from new_edges itself (no per-ingest O(E)
         # Relations rebuild) and only reads entity *names*, so the live
         # name list is passed without the O(n) copy of entities().
-        cover = self.cover_delta.assemble(
-            canopies,
-            seeds,
-            EntityTable(names=self.names, features=self.features),
-            present=self.present,
-            touched=assembly_touched,
-            new_ids=ids,
-            new_edges=edges,
-        )
-        packed = self.cover_delta.pack(
-            cover, prev=self.packed, level_cache=self.level_cache
-        )
+        with obs_span("ingest.cover_splice"):
+            cover = self.cover_delta.assemble(
+                canopies,
+                seeds,
+                EntityTable(names=self.names, features=self.features),
+                present=self.present,
+                touched=assembly_touched,
+                new_ids=ids,
+                new_edges=edges,
+            )
+            packed = self.cover_delta.pack(
+                cover, prev=self.packed, level_cache=self.level_cache
+            )
 
         # Bound the Jaro-Winkler level memo (oldest-inserted first; pure
         # memo, so eviction never changes the cover or the fixpoint).

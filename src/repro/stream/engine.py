@@ -45,6 +45,7 @@ from repro.core.cover import PackedCover
 from repro.core.driver import EMResult, MessagePool, run_mmp, run_smp
 from repro.core.global_grounding import GlobalGrounding
 from repro.core.types import MatchStore
+from repro.obs import span as obs_span
 
 
 @dataclasses.dataclass
@@ -141,37 +142,40 @@ class IncrementalEngine:
         carried, dirty_set, dropped = self._invalidate(packed, set(dirty))
         order = sorted(dirty_set)
         rows_before = 0
-        if self.parallel:
-            from repro.core.parallel import GroundingCache, run_parallel
+        with obs_span("ingest.rounds", dirty=len(order)):
+            if self.parallel:
+                from repro.core.parallel import GroundingCache, run_parallel
 
-            if self.gcache is None:
-                self.gcache = GroundingCache(
-                    capacity=self.gcache_capacity,
-                    hbm_budget_bytes=self.gcache_hbm_budget,
+                if self.gcache is None:
+                    self.gcache = GroundingCache(
+                        capacity=self.gcache_capacity,
+                        hbm_budget_bytes=self.gcache_hbm_budget,
+                    )
+                rows_before = self.gcache.rows_ground
+                result = run_parallel(
+                    packed,
+                    self.matcher,
+                    gg,
+                    scheme=self.scheme,
+                    active=order,
+                    init_matches=carried,
+                    pool=self.pool if self.scheme == "mmp" else None,
+                    gcache=self.gcache,
                 )
-            rows_before = self.gcache.rows_ground
-            result = run_parallel(
-                packed,
-                self.matcher,
-                gg,
-                scheme=self.scheme,
-                active=order,
-                init_matches=carried,
-                pool=self.pool if self.scheme == "mmp" else None,
-                gcache=self.gcache,
-            )
-        elif self.scheme == "smp":
-            result = run_smp(packed, self.matcher, order, init_matches=carried)
-        else:
-            assert gg is not None, "mmp needs the global grounding"
-            result = run_mmp(
-                packed,
-                self.matcher,
-                gg,
-                order,
-                init_matches=carried,
-                pool=self.pool,
-            )
+            elif self.scheme == "smp":
+                result = run_smp(
+                    packed, self.matcher, order, init_matches=carried
+                )
+            else:
+                assert gg is not None, "mmp needs the global grounding"
+                result = run_mmp(
+                    packed,
+                    self.matcher,
+                    gg,
+                    order,
+                    init_matches=carried,
+                    pool=self.pool,
+                )
         self.m_plus = result.matches
         self.total_evals += result.neighborhood_evals
         self.total_rounds += result.rounds

@@ -43,6 +43,8 @@ from repro.core.cover import DEFAULT_BINS
 from repro.core.global_grounding import GroundingMaintainer
 from repro.core.mln import MLNMatcher, MLNWeights, PAPER_LEARNED
 from repro.core.types import MatchStore
+from repro.obs import get_registry, total_upload_bytes
+from repro.obs import span as obs_span
 from repro.stream.delta import DeltaCover
 from repro.stream.engine import IncrementalEngine
 from repro.stream.index import LSHConfig
@@ -83,6 +85,75 @@ class IngestReport:
     # capacity-doubling growth — amortized O(fresh), gated in CI
     append_rows: int = 0
     growth_copy_rows: int = 0
+    # host->device bytes uploaded during this ingest, summed over the
+    # three transfer sites (repro.obs.transfer: grounding cache,
+    # promoter, bin staging) — the per-ingest delta of the cumulative
+    # ``transfer.*_bytes`` registry counters
+    upload_bytes: int = 0
+
+
+# IngestReport fields published as monotone ``ingest.*`` counters;
+# n_entities / n_neighborhoods / peak_resident_bins become gauges and
+# wall_time_s the ``ingest.wall_ms`` histogram (see _publish_ingest).
+_INGEST_COUNTER_FIELDS = (
+    "n_dirty",
+    "n_invalidated",
+    "neighborhood_evals",
+    "new_matches",
+    "replay_visits",
+    "grounding_pair_visits",
+    "reground_rows",
+    "cover_splice_rows",
+    "grounding_splice_rows",
+    "cache_evictions",
+    "cold_regrounds",
+    "promote_host_scans",
+    "append_rows",
+    "growth_copy_rows",
+    "upload_bytes",
+)
+
+
+def _publish_ingest(report: IngestReport) -> IngestReport:
+    """Publish an :class:`IngestReport` into the runtime registry.
+
+    The dataclass stays the per-call API; the cumulative ``ingest.*``
+    family is what ``benchmarks/stream_throughput.py`` snapshots.  The
+    ``dirty_frac`` / ``replay_frac`` histograms are the O(dirty)-story
+    ratios (work per ingest over corpus size) whose tails ROADMAP item 2
+    asks for.
+    """
+    reg = get_registry()
+    reg.counter("ingest.count").inc()
+    for name in _INGEST_COUNTER_FIELDS:
+        v = int(getattr(report, name))
+        if v:
+            reg.counter(f"ingest.{name}").inc(v)
+    reg.gauge("ingest.n_entities").set(report.n_entities)
+    reg.gauge("ingest.n_neighborhoods").set(report.n_neighborhoods)
+    reg.gauge("ingest.peak_resident_bins").max(report.peak_resident_bins)
+    reg.histogram("ingest.wall_ms").observe(report.wall_time_s * 1e3)
+    reg.histogram("ingest.upload_bytes").observe(report.upload_bytes)
+    reg.histogram("ingest.grounding_pair_visits").observe(
+        report.grounding_pair_visits
+    )
+    reg.histogram("ingest.dirty_frac").observe(
+        report.n_dirty / max(report.n_neighborhoods, 1)
+    )
+    reg.histogram("ingest.replay_frac").observe(
+        report.replay_visits / max(report.n_entities, 1)
+    )
+    return report
+
+
+def _observe_resolve(t0: float, n_queries: int) -> None:
+    """Record one resolve call: latency histogram + query counter."""
+    reg = get_registry()
+    reg.histogram("resolve.latency_ms").observe(
+        (time.perf_counter() - t0) * 1e3
+    )
+    reg.counter("resolve.queries").inc(n_queries)
+    reg.counter("resolve.calls").inc()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -108,7 +179,10 @@ class ResolveSnapshot:
         return self._members[root]
 
     def resolve_many(self, entity_ids) -> list[np.ndarray]:
-        return [self.resolve(e) for e in entity_ids]
+        t0 = time.perf_counter()
+        out = [self.resolve(e) for e in entity_ids]
+        _observe_resolve(t0, len(out))
+        return out
 
     def clusters(self) -> list[np.ndarray]:
         return [m for m in self._members.values() if len(m) >= 2]
@@ -195,58 +269,65 @@ class ResolveService:
             ids = list(range(base, base + len(names)))
         else:
             ids = [int(i) for i in ids]
+        bytes0 = total_upload_bytes()
         prev_matches = self.engine.m_plus
-        d = self.delta.ingest(ids, list(names), edges)
-        grounding_visits = 0
-        grounding_splice = 0
-        gg = None
-        if self.grounding is not None:
-            gstats = self.grounding.apply_delta(
-                d.added_pairs, d.retracted_pairs, d.new_edges
+        with obs_span("ingest", batch=len(ids)):
+            d = self.delta.ingest(ids, list(names), edges)
+            grounding_visits = 0
+            grounding_splice = 0
+            gg = None
+            if self.grounding is not None:
+                with obs_span("ingest.grounding_splice"):
+                    gstats = self.grounding.apply_delta(
+                        d.added_pairs, d.retracted_pairs, d.new_edges
+                    )
+                    grounding_visits = gstats.pairs_visited
+                    gg = self.grounding.grounding()
+                    grounding_splice = self.grounding.last_splice_rows
+            stats = self.engine.advance(
+                d.packed, d.dirty, gg, retracted=d.retracted_pairs
             )
-            grounding_visits = gstats.pairs_visited
-            gg = self.grounding.grounding()
-            grounding_splice = self.grounding.last_splice_rows
-        stats = self.engine.advance(
-            d.packed, d.dirty, gg, retracted=d.retracted_pairs
-        )
 
-        # Commit: cluster updates and the published fixpoint mutate
-        # atomically so snapshot()/resolve() readers see a consistent
-        # state — either before or after this ingest, never mid-way.
-        with self._lock:
-            new = stats.result.matches.difference(prev_matches)
-            if stats.n_invalidated:
-                self.uf = UnionFind()
-                self._members = {}
-                new = stats.result.matches.gids
-            for g in new:
-                a, b = pairlib.split_gid(np.int64(g))
-                self._add_match(int(a), int(b))
-            self._fixpoint = stats.result.matches
+            # Commit: cluster updates and the published fixpoint mutate
+            # atomically so snapshot()/resolve() readers see a consistent
+            # state — either before or after this ingest, never mid-way.
+            with self._lock, obs_span("ingest.commit"):
+                new = stats.result.matches.difference(prev_matches)
+                if stats.n_invalidated:
+                    self.uf = UnionFind()
+                    self._members = {}
+                    new = stats.result.matches.gids
+                for g in new:
+                    a, b = pairlib.split_gid(np.int64(g))
+                    self._add_match(int(a), int(b))
+                self._fixpoint = stats.result.matches
 
-            report = IngestReport(
-                ids=ids,
-                n_entities=self.delta.n_entities,
-                n_neighborhoods=len(d.cover),
-                n_dirty=stats.n_dirty,
-                n_invalidated=stats.n_invalidated,
-                neighborhood_evals=stats.result.neighborhood_evals,
-                new_matches=int(len(new)),
-                replay_visits=d.replay_visits,
-                grounding_pair_visits=grounding_visits,
-                wall_time_s=time.perf_counter() - t0,
-                reground_rows=stats.reground_rows,
-                cover_splice_rows=d.cover_splice_rows,
-                grounding_splice_rows=grounding_splice,
-                peak_resident_bins=stats.result.peak_resident_bins,
-                cache_evictions=stats.result.cache_evictions,
-                cold_regrounds=stats.result.cold_regrounds,
-                promote_host_scans=stats.result.promote_host_scans,
-                append_rows=self.delta.cover_delta.last_append_rows,
-                growth_copy_rows=self.delta.cover_delta.last_growth_copy_rows,
-            )
-            self.reports.append(report)
+                report = IngestReport(
+                    ids=ids,
+                    n_entities=self.delta.n_entities,
+                    n_neighborhoods=len(d.cover),
+                    n_dirty=stats.n_dirty,
+                    n_invalidated=stats.n_invalidated,
+                    neighborhood_evals=stats.result.neighborhood_evals,
+                    new_matches=int(len(new)),
+                    replay_visits=d.replay_visits,
+                    grounding_pair_visits=grounding_visits,
+                    wall_time_s=time.perf_counter() - t0,
+                    reground_rows=stats.reground_rows,
+                    cover_splice_rows=d.cover_splice_rows,
+                    grounding_splice_rows=grounding_splice,
+                    peak_resident_bins=stats.result.peak_resident_bins,
+                    cache_evictions=stats.result.cache_evictions,
+                    cold_regrounds=stats.result.cold_regrounds,
+                    promote_host_scans=stats.result.promote_host_scans,
+                    append_rows=self.delta.cover_delta.last_append_rows,
+                    growth_copy_rows=(
+                        self.delta.cover_delta.last_growth_copy_rows
+                    ),
+                    upload_bytes=total_upload_bytes() - bytes0,
+                )
+                self.reports.append(report)
+                _publish_ingest(report)
         return report
 
     # -- query path -------------------------------------------------------
@@ -303,15 +384,24 @@ class ResolveService:
 
     def resolve(self, entity_id: int) -> np.ndarray:
         """Cluster of ``entity_id`` under the current match fixpoint."""
+        t0 = time.perf_counter()
         with self._lock:
-            return self._resolve_locked(int(entity_id))
+            out = self._resolve_locked(int(entity_id))
+        _observe_resolve(t0, 1)
+        return out
 
     def resolve_many(self, entity_ids) -> list[np.ndarray]:
         """Batched resolve under a single lock acquisition — the whole
         batch is answered against one consistent fixpoint, at O(alpha)
-        + O(|cluster|) per query (no full-state snapshot copy)."""
+        + O(|cluster|) per query (no full-state snapshot copy).  Each
+        call lands one sample in the ``resolve.latency_ms`` histogram
+        (lock wait included — it is the latency a reader experiences
+        under concurrent ingests)."""
+        t0 = time.perf_counter()
         with self._lock:
-            return [self._resolve_locked(int(e)) for e in entity_ids]
+            out = [self._resolve_locked(int(e)) for e in entity_ids]
+        _observe_resolve(t0, len(out))
+        return out
 
     def clusters(self) -> list[np.ndarray]:
         with self._lock:
