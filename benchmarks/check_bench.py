@@ -37,6 +37,15 @@ its own named step), default is every gate that applies to the file:
     Per-unit byte cost is bounded by the bin shapes, so the ratios are
     comparable across corpus scales; a regression to O(corpus)
     re-uploads per ingest multiplies them far past the slack.
+  - ``tails``: the serving block — coalesced ingest throughput must
+    beat the per-arrival synchronous baseline by the speedup floor
+    (5x at full scale; a lower absolute floor at smoke scale, where
+    tiny corpora shrink the fixed per-ingest cost being amortized and
+    the fresh JSON's ``smoke`` flag says which regime applies), the
+    readers must actually have sampled latency, and the resolve p99
+    under concurrent load is gated baseline-relative with generous
+    slack (CI boxes are noisy; losing the lock-free read path
+    multiplies p99 by ingest wall time, far past it).
 
 Wall times are recorded in the JSON for the trajectory but never gated
 (CI machines are noisy).
@@ -59,7 +68,18 @@ ABS_SLACK = 2.0
 STREAM_REL_SLACK = 2.0
 STREAM_ABS_SLACK = 1.0
 
-GATES = ("dispatch", "promotion", "stream", "lru", "transfer")
+GATES = ("dispatch", "promotion", "stream", "lru", "transfer", "tails")
+
+# Serving coalescing: the full-scale speedup floor is the acceptance
+# bar (>= 5x over per-arrival ingest); smoke corpora amortize a much
+# smaller fixed cost, so CI gates a lower absolute floor there.
+TAILS_MIN_SPEEDUP = 5.0
+TAILS_SMOKE_MIN_SPEEDUP = 1.5
+# p99 resolve latency under concurrent load, baseline-relative: the
+# lock-free read path is ~fixed cost; regressing to reads that wait on
+# an in-flight ingest multiplies p99 by ingest wall time.
+TAILS_P99_REL_SLACK = 3.0
+TAILS_P99_ABS_SLACK = 1.0  # ms
 
 # Transfer ratios: per-unit byte costs shift with bin-shape mix between
 # corpus scales; an O(corpus)-re-upload regression scales them with the
@@ -220,6 +240,51 @@ def _check_transfer(base: dict, fresh: dict, failures: list[str]) -> None:
             print(f"ok stream/transfer: {key} {got} > 0")
 
 
+def _check_tails(base: dict, fresh: dict, failures: list[str]) -> None:
+    """Serving block: coalescing speedup floor + p99 under load."""
+    entries = fresh.get("serving", [])
+    if not entries:
+        failures.append("serving: block missing from fresh results")
+        return
+    floor = (
+        TAILS_SMOKE_MIN_SPEEDUP if fresh.get("smoke") else TAILS_MIN_SPEEDUP
+    )
+    base_p99 = _max_ratio(base.get("serving", []), "p99_ms")
+    for e in entries:
+        tag = f"stream/serving[n_requests={e.get('n_requests')}]"
+        speedup = e.get("speedup")
+        if speedup is None:
+            failures.append(f"{tag}: speedup missing")
+        elif speedup < floor:
+            failures.append(
+                f"{tag}: coalescing speedup {speedup} < floor {floor} "
+                "over per-arrival synchronous ingest"
+            )
+        else:
+            print(f"ok {tag}: speedup {speedup} >= {floor}")
+        if not e.get("queries"):
+            failures.append(
+                f"{tag}: no reader queries recorded — the concurrent-load "
+                "latency measurement did not run"
+            )
+            continue
+        p99 = e.get("p99_ms")
+        if p99 is None:
+            failures.append(f"{tag}: p99_ms missing")
+            continue
+        if base_p99 is None:
+            failures.append("stream/serving: p99_ms missing from baseline")
+            continue
+        limit = base_p99 * TAILS_P99_REL_SLACK + TAILS_P99_ABS_SLACK
+        if p99 > limit:
+            failures.append(
+                f"{tag}: resolve p99 under load {p99}ms > limit "
+                f"{limit:.2f}ms (baseline {base_p99}ms)"
+            )
+        else:
+            print(f"ok {tag}: p99 under load {p99}ms <= {limit:.2f}ms")
+
+
 def main(argv: list[str]) -> int:
     gate = "all"
     args = []
@@ -252,6 +317,9 @@ def main(argv: list[str]) -> int:
             ran = True
         if gate in ("all", "transfer"):
             _check_transfer(base, fresh, failures)
+            ran = True
+        if gate in ("all", "tails"):
+            _check_tails(base, fresh, failures)
             ran = True
     else:
         if gate in ("all", "dispatch"):

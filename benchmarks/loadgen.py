@@ -1,0 +1,231 @@
+"""Load generator for the serving front-end: Poisson ingest arrivals +
+Zipf-skewed resolve traffic.
+
+Drives a :class:`repro.stream.serving.ServingFrontend` the way a live
+deployment would be driven:
+
+* **arrivals** are an open-loop Poisson process at ``arrival_rate``
+  requests/sec (exponential inter-arrival gaps, seeded rng) — or, with
+  ``arrival_rate=inf``, an offered-load sweep that submits as fast as
+  admission control lets it (what the ``serving`` block of
+  ``stream_throughput`` uses to measure *sustained* coalesced ingest
+  throughput);
+* **queries** come from ``n_readers`` concurrent reader threads issuing
+  ``resolve_many`` over Zipf-skewed entity ids (``zipf_a``): a few hot
+  entities absorb most of the traffic, the tail is cold — the usual
+  shape of entity-lookup workloads.  Readers run against the lock-free
+  published snapshot, so their latency histogram
+  (``resolve.latency_ms``) is pure read-path cost even while ingests
+  are in flight.
+
+``run_load`` returns the measured block: sustained committed-entity
+throughput, coalescing shape (batches, mean coalesced size), queue
+wait and resolve-latency percentiles (p50/p99 from the exact-sample
+``repro.obs`` histograms), and the admission-shed count.
+
+CLI (standalone)::
+
+    python -m benchmarks.loadgen [--rate R] [--requests N] [--readers K]
+                                 [--admission block|reject] [--seed S]
+
+or via the harness (smoke-sized): ``python -m benchmarks.run --smoke
+loadgen``.  Everything is seeded; two runs with the same arguments
+offer identical request/query schedules.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+
+import numpy as np
+
+from benchmarks.common import SMOKE, hepth, row, timed
+from repro import obs
+from repro.data.synthetic import arrival_stream
+from repro.stream import (
+    AdmissionError,
+    ResolveService,
+    ServingConfig,
+    ServingFrontend,
+)
+
+# harness-run (smoke/default) scenario sizes; the CLI overrides them
+N_REQUESTS = 48 if SMOKE else 200
+REQUEST_ENTITIES = 4  # paper-aligned arrival batches (~one paper each)
+
+
+@dataclasses.dataclass(frozen=True)
+class LoadgenConfig:
+    """One load scenario (arrival process + query mix), fully seeded."""
+
+    arrival_rate: float = float("inf")  # requests/sec; inf = offered load
+    n_readers: int = 2
+    reader_qps: float = 200.0  # per-reader resolve_many calls/sec
+    reader_batch: int = 32  # ids per resolve_many call
+    zipf_a: float = 1.3  # query skew (>1; lower = heavier tail)
+    seed: int = 0
+    submit_timeout: float | None = None  # per-submit bound (block policy)
+
+
+def poisson_schedule(rng: np.random.Generator, rate: float, n: int) -> np.ndarray:
+    """Arrival offsets (seconds from t0) of an n-event Poisson process."""
+    if not np.isfinite(rate):
+        return np.zeros(n)
+    return np.cumsum(rng.exponential(1.0 / rate, size=n))
+
+
+def zipf_ids(
+    rng: np.random.Generator, n_entities: int, size: int, a: float
+) -> np.ndarray:
+    """Zipf-skewed entity ids: rank r is queried with mass ~ 1/r^a,
+    folded onto the live id range (hot mass lands on the low ids)."""
+    return (rng.zipf(a, size=size) - 1) % max(n_entities, 1)
+
+
+def run_load(
+    frontend: ServingFrontend, requests, cfg: LoadgenConfig
+) -> dict:
+    """Offer ``requests`` (name/edges/ids triples) to ``frontend`` on the
+    configured arrival schedule, with Zipf readers querying throughout;
+    block until everything admitted has committed, return the stats."""
+    obs.reset()
+    rng = np.random.default_rng(cfg.seed)
+    sched = poisson_schedule(rng, cfg.arrival_rate, len(requests))
+    n0 = frontend.snapshot().n_entities
+    stop = threading.Event()
+    counts = [0] * cfg.n_readers
+
+    def reader(i: int) -> None:
+        r = np.random.default_rng(cfg.seed + 1000 + i)
+        period = 1.0 / cfg.reader_qps if cfg.reader_qps else 0.0
+        while not stop.is_set():
+            n_live = frontend.snapshot().n_entities
+            ids = zipf_ids(r, n_live or 1, cfg.reader_batch, cfg.zipf_a)
+            frontend.resolve_many(ids)
+            counts[i] += cfg.reader_batch
+            if period:
+                time.sleep(period)
+
+    threads = [
+        threading.Thread(target=reader, args=(i,))
+        for i in range(cfg.n_readers)
+    ]
+    for t in threads:
+        t.start()
+
+    shed = 0
+    t0 = time.perf_counter()
+    for k, (names, edges, ids) in enumerate(requests):
+        target = t0 + sched[k]
+        now = time.perf_counter()
+        if target > now:
+            time.sleep(target - now)
+        try:
+            frontend.submit(names, edges, ids, timeout=cfg.submit_timeout)
+        except AdmissionError:
+            shed += 1
+    frontend.drain(timeout=600)
+    wall = time.perf_counter() - t0
+    stop.set()
+    for t in threads:
+        t.join()
+
+    reg = obs.get_registry()
+    committed = frontend.snapshot().n_entities - n0
+    lat = reg.histogram("resolve.latency_ms").summary()
+    wait = reg.histogram("serve.queue.wait_ms").summary()
+    csize = reg.histogram("serve.batch.coalesced_size").summary()
+    offered = len(requests)
+    return {
+        "arrival_rate": (
+            None if not np.isfinite(cfg.arrival_rate) else cfg.arrival_rate
+        ),
+        "n_requests": offered,
+        "shed": int(reg.value("serve.admission.shed")),
+        "entities_offered": sum(len(r[0]) for r in requests),
+        "entities_committed": int(committed),
+        "wall_s": round(wall, 3),
+        "entities_per_s": round(committed / max(wall, 1e-9), 1),
+        "n_batches": int(reg.value("serve.batches")),
+        "mean_coalesced_size": round(csize["mean"], 1),
+        "queue_wait_p50_ms": round(wait["p50"], 3),
+        "queue_wait_p99_ms": round(wait["p99"], 3),
+        "n_readers": cfg.n_readers,
+        "queries": int(sum(counts)),
+        "qps_total": round(sum(counts) / max(wall, 1e-9), 1),
+        "p50_ms": round(lat["p50"], 4),
+        "p99_ms": round(lat["p99"], 4),
+    }
+
+
+def dataset_requests(n_requests: int, request_entities: int = REQUEST_ENTITIES):
+    """Paper-aligned request stream: the hepth corpus split into
+    ~``request_entities``-reference arrival batches."""
+    ds = hepth()
+    batches = arrival_stream(ds, batch_size=request_entities)
+    return [
+        (b.names, b.edges, [int(i) for i in b.ids])
+        for b in batches[:n_requests]
+    ]
+
+
+def main(argv: list[str] | None = None) -> dict:
+    rate = float("inf")
+    n_requests = N_REQUESTS
+    n_readers = 2
+    admission = "block"
+    seed = 0
+    if argv:
+        it = iter(argv)
+        for a in it:
+            if a == "--rate":
+                rate = float(next(it))
+            elif a == "--requests":
+                n_requests = int(next(it))
+            elif a == "--readers":
+                n_readers = int(next(it))
+            elif a == "--admission":
+                admission = next(it)
+            elif a == "--seed":
+                seed = int(next(it))
+            else:
+                raise SystemExit(f"unknown argument {a!r}\n\n{__doc__}")
+    requests, gen_s = timed(lambda: dataset_requests(n_requests))
+    row(f"# loadgen: hepth, {len(requests)} requests x ~{REQUEST_ENTITIES} "
+        f"entities (corpus prep {gen_s:.1f}s)")
+    svc = ResolveService(scheme="smp")
+    cfg = LoadgenConfig(arrival_rate=rate, n_readers=n_readers, seed=seed)
+    with ServingFrontend(
+        svc, ServingConfig(admission=admission)
+    ) as fe:
+        stats = run_load(fe, requests, cfg)
+    row(
+        "arrival_rate,n_requests,shed,entities,wall_s,entities_per_s,"
+        "n_batches,mean_coalesced_size,queue_wait_p99_ms,"
+        "n_readers,qps_total,p50_ms,p99_ms"
+    )
+    row(
+        stats["arrival_rate"] if stats["arrival_rate"] is not None else "inf",
+        stats["n_requests"],
+        stats["shed"],
+        stats["entities_committed"],
+        stats["wall_s"],
+        stats["entities_per_s"],
+        stats["n_batches"],
+        stats["mean_coalesced_size"],
+        stats["queue_wait_p99_ms"],
+        stats["n_readers"],
+        stats["qps_total"],
+        stats["p50_ms"],
+        stats["p99_ms"],
+    )
+    return {"benchmark": "loadgen", "dataset": "hepth", "smoke": SMOKE,
+            "load": [stats]}
+
+
+if __name__ == "__main__":
+    import sys
+
+    main(sys.argv[1:])

@@ -44,6 +44,7 @@ MODULES = [
     ("table1_parallel", "Table 1: parallel rounds / grid speedup"),
     ("fig4_rules", "Fig 4: RULES matcher"),
     ("stream_throughput", "Streaming ingest: entities/sec vs micro-batch size"),
+    ("loadgen", "Serving load generator: Poisson ingest + Zipf readers"),
     ("kernels_bench", "Pallas-kernel roofline microbench"),
 ]
 

@@ -32,16 +32,30 @@ cost proportional to the dirty set rather than the corpus.  One
    / ``cold_regrounds``); MMP's step-7 promotion runs batched on device
    (``promote_host_scans`` == 0).
 5. **Commit** (:mod:`repro.stream.service`) — matches fold into a
-   persistent union-find atomically; ``resolve(id)`` /
-   ``resolve_many`` / ``snapshot()`` read committed fixpoints only.
+   persistent union-find, then the whole ingest publishes to readers
+   in one snapshot swap (double-buffered: ``resolve(id)`` /
+   ``resolve_many`` / ``snapshot()`` are lock-free reads of committed
+   fixpoints and never wait on an in-flight ingest).
 
-The invariant throughout: after any ingest sequence, cover, grounding,
-and fixpoint are bit-for-bit what the batch pipeline computes over the
-union of everything ingested.
+Under real traffic the service is fronted by
+:class:`repro.stream.serving.ServingFrontend` (stage 0, so to speak):
+an async ingest queue that coalesces arrivals up to a size/latency
+budget into one delta+fixpoint pass each, with bounded-queue admission
+control — see ``docs/SERVING.md`` for the operator view.
+
+The invariant throughout: after any ingest sequence — and any
+coalescing of it — cover, grounding, and fixpoint are bit-for-bit what
+the batch pipeline computes over the union of everything ingested.
 """
 
 from repro.stream.service import (  # noqa: F401
     IngestReport,
     ResolveService,
     ResolveSnapshot,
+)
+from repro.stream.serving import (  # noqa: F401
+    AdmissionError,
+    IngestTicket,
+    ServingConfig,
+    ServingFrontend,
 )

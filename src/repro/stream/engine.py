@@ -57,6 +57,19 @@ class AdvanceStats:
 
 
 class IncrementalEngine:
+    """Dirty-seeded fixpoint advance over a maintained cover.
+
+    Thread-safety contract: the engine is **single-writer, no-reader**
+    state.  ``advance`` mutates the persistent fixpoint (``m_plus``),
+    the MMP message pool, and the device grounding cache with no
+    internal locking — it must only ever be called by the one thread
+    that owns the ingest path (``ResolveService.ingest``, itself driven
+    by the single ``ServingFrontend`` worker under load).  Concurrent
+    *readers* never touch this object: they read the service's
+    published :class:`~repro.stream.service.ResolveSnapshot`, which is
+    frozen from ``m_plus`` only inside the ingest commit.
+    """
+
     def __init__(
         self,
         matcher,
@@ -136,6 +149,9 @@ class IncrementalEngine:
         ingest.  ``retracted`` lists the candidate gids the cover delta
         dropped; they are pruned from the persistent message pool so
         stale groups stop being replayed at every promotion pass.
+
+        Not thread-safe: one in-flight call at a time, from the thread
+        that owns the ingest path (see the class docstring).
         """
         if retracted and self.scheme == "mmp":
             self.pool.discard(retracted)

@@ -22,11 +22,29 @@ Every per-ingest cost tracks the dirty set, not the corpus:
   cold bins re-ground on demand bit-for-bit —
   ``IngestReport.peak_resident_bins`` proves the bound).
 
-Serving reads don't race ingests: :meth:`ResolveService.snapshot`
-returns an immutable :class:`ResolveSnapshot` of a consistent fixpoint
-(cluster mutation happens atomically under a lock at the end of each
-ingest), and :meth:`ResolveService.resolve_many` answers a batch of
-queries under one lock acquisition.
+Serving reads don't race ingests — and they don't *wait* on them
+either.  The service keeps **double-buffered snapshots**: readers
+always resolve against an immutable published :class:`ResolveSnapshot`
+(a plain attribute read — no lock), while the in-flight ingest mutates
+a private write buffer; the commit section freezes the write buffer
+into a fresh snapshot and publishes it by a single reference swap.  A
+reader therefore observes the fixpoint before or after an ingest,
+never a half-applied one, and its latency is independent of ingest
+wall time (``tests/test_serving.py`` pins both properties).
+
+Thread-safety contract (per lock):
+
+* ``_lock`` — the **writer** lock.  Serializes concurrent ``ingest``
+  commits and the write-buffer mutation (``uf``/``_members``/
+  ``_fixpoint``/``reports``).  Readers never take it.
+* ``_published`` — the read buffer.  Immutable once published;
+  replaced, never mutated (reference assignment is atomic under the
+  GIL), so ``resolve``/``resolve_many``/``snapshot``/``clusters`` are
+  lock-free and safe from any number of threads.
+
+The higher-traffic front-end (async ingest queue, micro-batch
+coalescing, admission control) lives in :mod:`repro.stream.serving`
+and drives this service single-writer; see ``docs/SERVING.md``.
 """
 
 from __future__ import annotations
@@ -160,9 +178,17 @@ def _observe_resolve(t0: float, n_queries: int) -> None:
 class ResolveSnapshot:
     """An immutable, consistent view of the match fixpoint.
 
-    Taken atomically between cluster updates, so a reader thread never
-    observes a half-applied ingest.  Resolution against a snapshot is
-    pure dict lookups — no locks, no interaction with ongoing ingests.
+    Frozen at the end of an ingest commit (the read buffer of the
+    service's double-buffered pair), so a reader thread never observes
+    a half-applied ingest.  Resolution against a snapshot is pure dict
+    lookups — no locks, no interaction with ongoing ingests.  All
+    methods are safe from any number of threads; the backing dicts and
+    arrays are never mutated after publication.
+
+    What a reader can observe mid-ingest: exactly the fixpoint of some
+    prefix of the ingest sequence.  A snapshot taken at ingest k keeps
+    answering for ingest k forever — a polling reader re-calls
+    ``ResolveService.snapshot()`` to step forward.
     """
 
     matches: MatchStore
@@ -244,8 +270,23 @@ class ResolveService:
         self.uf = UnionFind()
         self._members: dict[int, set[int]] = {}  # uf root -> cluster members
         self._fixpoint = MatchStore()
+        # Writer lock: serializes ingest commits and write-buffer
+        # mutation.  The read path never takes it (see module docstring).
         self._lock = threading.RLock()
-        self._snapshot_cache: ResolveSnapshot | None = None
+        # Write-buffer freeze caches, maintained incrementally by
+        # _add_match so the per-commit publish cost is O(clusters
+        # touched this ingest), not O(all clusters):
+        self._root_cache: dict[int, int] = {}  # entity -> flattened root
+        self._frozen: dict[int, np.ndarray] = {}  # root -> sorted members
+        # The read buffer: swapped by reference at the end of each
+        # commit, immutable afterwards.
+        self._published = ResolveSnapshot(
+            matches=self._fixpoint,
+            n_entities=0,
+            n_ingests=0,
+            _root={},
+            _members={},
+        )
         self.reports: list[IngestReport] = []
 
     # -- ingest path ------------------------------------------------------
@@ -262,6 +303,16 @@ class ResolveService:
         fresh; relation ``edges`` are given in global ids and may point
         at earlier arrivals.  Without ``ids``, fresh sequential ids are
         assigned.
+
+        Thread safety: the cover/grounding/engine stages mutate
+        unprotected incremental state, so ``ingest`` must be called
+        from **one writer at a time** (the commit section additionally
+        takes ``_lock`` against racing writers, but the stages before
+        it are not serialized — use :class:`repro.stream.serving.
+        ServingFrontend`, whose single worker thread owns this method,
+        to multiplex many producers).  Readers are unaffected
+        throughout: they keep resolving against the previously
+        published snapshot until the commit swaps in the new one.
         """
         t0 = time.perf_counter()
         if ids is None:
@@ -288,14 +339,18 @@ class ResolveService:
                 d.packed, d.dirty, gg, retracted=d.retracted_pairs
             )
 
-            # Commit: cluster updates and the published fixpoint mutate
-            # atomically so snapshot()/resolve() readers see a consistent
-            # state — either before or after this ingest, never mid-way.
+            # Commit: the write buffer mutates under the writer lock,
+            # then the whole ingest is published to readers in one
+            # reference swap — snapshot()/resolve() observe the state
+            # before or after this ingest, never mid-way, and never
+            # wait on it.
             with self._lock, obs_span("ingest.commit"):
                 new = stats.result.matches.difference(prev_matches)
                 if stats.n_invalidated:
                     self.uf = UnionFind()
                     self._members = {}
+                    self._root_cache = {}
+                    self._frozen = {}
                     new = stats.result.matches.gids
                 for g in new:
                     a, b = pairlib.split_gid(np.int64(g))
@@ -328,85 +383,93 @@ class ResolveService:
                 )
                 self.reports.append(report)
                 _publish_ingest(report)
+                # Swap-on-commit: freeze the write buffer into the new
+                # read snapshot.  The dict() copies are O(entities)
+                # pointer copies; the member arrays are shared with the
+                # freeze caches and never mutated after publication.
+                self._published = ResolveSnapshot(
+                    matches=self._fixpoint,
+                    n_entities=self.delta.n_entities,
+                    n_ingests=len(self.reports),
+                    _root=dict(self._root_cache),
+                    _members=dict(self._frozen),
+                )
         return report
 
     # -- query path -------------------------------------------------------
 
     @property
     def matches(self) -> MatchStore:
+        """Live engine fixpoint — the *write side*.  Coherent only
+        between ingests; concurrent readers should prefer
+        ``snapshot().matches`` (committed, immutable)."""
         return self.engine.m_plus
 
     @property
     def total_evals(self) -> int:
+        """Cumulative matcher evaluations (write side; read it between
+        ingests or accept a momentarily stale value)."""
         return self.engine.total_evals
 
     def _add_match(self, a: int, b: int) -> None:
-        """Union a matched pair, keeping the root -> members map current
-        so resolve queries stay O(alpha) + O(|cluster|)."""
+        """Union a matched pair into the write buffer (caller holds
+        ``_lock``), keeping the root -> members map *and* the freeze
+        caches current, so the per-commit publish is O(touched
+        clusters) and resolve queries stay O(1) dict lookups."""
         ra, rb = self.uf.find(a), self.uf.find(b)
         ma = self._members.pop(ra, {ra})
         mb = self._members.pop(rb, {rb})
         self.uf.union(a, b)
-        self._members[self.uf.find(a)] = ma | mb
+        merged = ma | mb
+        r = self.uf.find(a)
+        self._members[r] = merged
+        # freeze caches: new sorted array per touched cluster, stale
+        # root entries retargeted (fresh array, never in-place — the
+        # previous array may be shared with a published snapshot)
+        self._frozen.pop(ra, None)
+        self._frozen.pop(rb, None)
+        self._frozen[r] = np.asarray(sorted(merged), dtype=np.int64)
+        for e in merged:
+            if self._root_cache.get(e) != r:
+                self._root_cache[e] = r
 
     def snapshot(self) -> ResolveSnapshot:
-        """Freeze the current fixpoint for lock-free batched reads.
+        """The current read buffer: the fixpoint of the last committed
+        ingest, frozen.
 
-        Cached between ingests: cluster state only mutates in the
-        ingest commit section (which bumps ``reports``), so a polling
-        reader pays the O(clusters) freeze once per ingest, not per
-        call.
-        """
-        with self._lock:
-            cached = self._snapshot_cache
-            if cached is not None and cached.n_ingests == len(self.reports):
-                return cached
-            members = {
-                r: np.asarray(sorted(m), dtype=np.int64)
-                for r, m in self._members.items()
-            }
-            root = {int(e): self.uf.find(int(e)) for e in self.uf.parent}
-            snap = ResolveSnapshot(
-                matches=self._fixpoint,
-                n_entities=self.delta.n_entities,
-                n_ingests=len(self.reports),
-                _root=root,
-                _members=members,
-            )
-            self._snapshot_cache = snap
-            return snap
-
-    def _resolve_locked(self, eid: int) -> np.ndarray:
-        if eid not in self.uf.parent:
-            return np.asarray([eid], dtype=np.int64)
-        members = self._members[self.uf.find(eid)]
-        return np.asarray(sorted(members), dtype=np.int64)
+        Lock-free (a single attribute read) and safe from any thread at
+        any time — including while an ingest is in flight, which it
+        never waits on.  Successive calls between two commits return
+        the identical object; a polling reader re-calls to step to the
+        next committed fixpoint."""
+        return self._published
 
     def resolve(self, entity_id: int) -> np.ndarray:
-        """Cluster of ``entity_id`` under the current match fixpoint."""
+        """Cluster of ``entity_id`` under the last committed fixpoint.
+
+        Lock-free: resolves against the published snapshot, so latency
+        is independent of any in-flight ingest.  Safe from any thread.
+        Unknown ids resolve to singletons."""
         t0 = time.perf_counter()
-        with self._lock:
-            out = self._resolve_locked(int(entity_id))
+        out = self._published.resolve(int(entity_id))
         _observe_resolve(t0, 1)
         return out
 
     def resolve_many(self, entity_ids) -> list[np.ndarray]:
-        """Batched resolve under a single lock acquisition — the whole
-        batch is answered against one consistent fixpoint, at O(alpha)
-        + O(|cluster|) per query (no full-state snapshot copy).  Each
-        call lands one sample in the ``resolve.latency_ms`` histogram
-        (lock wait included — it is the latency a reader experiences
-        under concurrent ingests)."""
+        """Batched resolve against one consistent committed fixpoint.
+
+        The whole batch is answered from a single published snapshot
+        (lock-free — no reader ever waits on an ingest), at O(1) dict
+        lookups per query.  Each call lands one sample in the
+        ``resolve.latency_ms`` histogram — pure read-path latency now
+        that there is no lock wait to include."""
         t0 = time.perf_counter()
-        with self._lock:
-            out = [self._resolve_locked(int(e)) for e in entity_ids]
+        snap = self._published
+        out = [snap.resolve(int(e)) for e in entity_ids]
         _observe_resolve(t0, len(out))
         return out
 
     def clusters(self) -> list[np.ndarray]:
-        with self._lock:
-            return [
-                np.asarray(sorted(m), dtype=np.int64)
-                for m in self._members.values()
-                if len(m) >= 2
-            ]
+        """Non-singleton clusters of the last committed fixpoint
+        (lock-free, reads the published snapshot)."""
+        return self._published.clusters()

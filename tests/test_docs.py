@@ -1,22 +1,32 @@
 """Docs can't rot: every module path the prose references must import.
 
-README.md and docs/ARCHITECTURE.md name ``repro.*`` dotted paths and
-repo file paths; if a refactor moves or renames one, this test fails CI
-instead of leaving the documentation pointing at nothing.  CI also runs
-``examples/quickstart.py`` itself (the bench-smoke job), so the
-quickstart commands stay executable end to end.
+README.md, docs/ARCHITECTURE.md and docs/SERVING.md name ``repro.*``
+dotted paths and repo file paths; if a refactor moves or renames one,
+this test fails CI instead of leaving the documentation pointing at
+nothing.  CI also runs ``examples/quickstart.py`` itself (the
+bench-smoke job), so the quickstart commands stay executable end to
+end.  SERVING.md is additionally an *operator* document: every config
+knob it names as ``Class.attr`` must exist on the corresponding
+config/dataclass with exactly that name, so the tuning guidance can't
+drift from the code.
 """
 
 from __future__ import annotations
 
+import dataclasses
 import importlib
+import inspect
 import re
 from pathlib import Path
 
 import pytest
 
 REPO = Path(__file__).resolve().parent.parent
-DOCS = [REPO / "README.md", REPO / "docs" / "ARCHITECTURE.md"]
+DOCS = [
+    REPO / "README.md",
+    REPO / "docs" / "ARCHITECTURE.md",
+    REPO / "docs" / "SERVING.md",
+]
 
 # dotted references like ``repro.stream.index`` or
 # ``repro.core.parallel.GroundingCache`` (trailing parts may be attrs)
@@ -70,3 +80,108 @@ def test_quickstart_paths_from_readme_exist():
     text = _doc_text(REPO / "README.md")
     assert "examples/quickstart.py" in text
     assert (REPO / "examples" / "quickstart.py").exists()
+
+
+# ---------------------------------------------------------------------------
+# SERVING.md is an operator document: every knob it names must exist
+# ---------------------------------------------------------------------------
+
+# backticked ``Class.attr`` references, e.g. `ServingConfig.max_batch`
+CLASSATTR = re.compile(r"`([A-Z][A-Za-z0-9_]*)\.([a-z_][a-z0-9_]*)`")
+# constructor-style mentions, e.g. ResolveService(gcache_capacity=...)
+CALL = re.compile(r"\b([A-Z][A-Za-z0-9_]*)\(")
+
+
+def _serving_namespace():
+    import repro.stream as ns
+
+    return ns
+
+
+def _call_kwargs(text: str):
+    """(ClassName, kwarg) pairs from call-style doc mentions, top-level
+    kwargs only (nested constructor calls report to their own class)."""
+    out = []
+    for m in CALL.finditer(text):
+        depth, end = 1, None
+        for j in range(m.end(), len(text)):
+            ch = text[j]
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = j
+                    break
+        if end is None:
+            continue
+        args = text[m.end():end]
+        lvl, masked = 0, []
+        for ch in args:
+            if ch == "(":
+                lvl += 1
+            masked.append(ch if lvl == 0 else " ")
+            if ch == ")":
+                lvl -= 1
+        for km in re.finditer(
+            r"(?:^|,)\s*([a-z_][a-z0-9_]*)\s*=", "".join(masked)
+        ):
+            out.append((m.group(1), km.group(1)))
+    return out
+
+
+def _assert_knob(cls, cls_name: str, attr: str) -> None:
+    if dataclasses.is_dataclass(cls):
+        fields = {f.name for f in dataclasses.fields(cls)}
+        assert attr in fields or hasattr(cls, attr), (
+            f"SERVING.md names {cls_name}.{attr} but {cls_name} has no "
+            f"such field (has: {sorted(fields)})"
+        )
+        return
+    if hasattr(cls, attr):  # method / property / class attribute
+        return
+    params = inspect.signature(cls.__init__).parameters
+    assert attr in params, (
+        f"SERVING.md names {cls_name}.{attr} but {cls_name} has neither "
+        f"an attribute nor an __init__ parameter of that name"
+    )
+
+
+def test_serving_doc_knobs_exist():
+    """Every ``Class.attr`` and every ``Class(kwarg=...)`` SERVING.md
+    names must exist on the real class — operator guidance that points
+    at a renamed knob is worse than none."""
+    text = _doc_text(REPO / "docs" / "SERVING.md")
+    ns = _serving_namespace()
+    checked = 0
+    for cls_name, attr in CLASSATTR.findall(text):
+        cls = getattr(ns, cls_name, None)
+        if cls is None:  # not a serving-layer class (e.g. a paper term)
+            continue
+        _assert_knob(cls, cls_name, attr)
+        checked += 1
+    for cls_name, kwarg in _call_kwargs(text):
+        cls = getattr(ns, cls_name, None)
+        if cls is None:
+            continue
+        params = inspect.signature(cls.__init__).parameters
+        assert kwarg in params, (
+            f"SERVING.md calls {cls_name}({kwarg}=...) but __init__ has "
+            f"no such parameter (has: {sorted(params)})"
+        )
+        checked += 1
+    # the document must actually exercise the knob table: all four
+    # ServingConfig knobs plus the constructor examples
+    assert checked >= 8, f"only {checked} knob references found"
+
+
+def test_serving_config_knobs_all_documented():
+    """The converse direction: every ``ServingConfig`` field must appear
+    in SERVING.md — an undocumented knob is invisible to operators."""
+    from repro.stream import ServingConfig
+
+    text = _doc_text(REPO / "docs" / "SERVING.md")
+    for f in dataclasses.fields(ServingConfig):
+        assert f"ServingConfig.{f.name}" in text, (
+            f"ServingConfig.{f.name} is not documented in SERVING.md"
+        )

@@ -1,0 +1,479 @@
+"""Serving front-end (repro.stream.serving) + double-buffered reads.
+
+Two families of properties:
+
+* **Coalescing is schedule-invariant.**  The frontend merges queued
+  arrivals into one ``CoverDelta`` + one fixpoint per flush; by the
+  stream==batch theorem that must be *bit-for-bit* the fixpoint of
+  per-arrival synchronous ingest — asserted differentially on the
+  hepth stream and on an evidence-lattice-style chain stream (the
+  paper's §2.1 chain: matches derivable only through coauthor evidence
+  arriving in *other* requests; the hand-packed ``make_lattice_cover``
+  instance itself has no name/relation stream form, so the chain
+  corpus reproduces its structure through the real ingest path).
+
+* **Readers never block on an ingest.**  resolve/resolve_many/snapshot
+  are lock-free reads of the published snapshot: they complete even
+  while the writer lock is held (deterministic) and their latency is
+  decoupled from ingest wall time (measured under a live ingest).
+
+Plus admission control (reject sheds + counts, block backpressures,
+timed-out blocks shed), coalescing budgets, and ticket semantics.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.core import pipeline
+from repro.core.driver import run_mmp, run_smp
+from repro.core.global_grounding import build_global_grounding
+from repro.core.mln import MLNMatcher, PAPER_LEARNED
+from repro.core.types import EntityTable, Relations
+from repro.data.synthetic import arrival_stream
+from repro.stream import (
+    AdmissionError,
+    ResolveService,
+    ServingConfig,
+    ServingFrontend,
+)
+
+
+def _cluster_state(clusters) -> frozenset:
+    return frozenset(tuple(int(x) for x in c) for c in clusters)
+
+
+def _coalesced(requests, *, scheme="smp", cfg=None, **svc_kwargs):
+    """Queue every request up front, then let the worker coalesce —
+    deterministic batch formation (no arrival-timing dependence)."""
+    svc = ResolveService(scheme=scheme, **svc_kwargs)
+    fe = ServingFrontend(
+        svc,
+        cfg or ServingConfig(max_batch=64, max_delay_ms=0),
+        start=False,
+    )
+    tickets = [fe.submit(n, e, i) for n, e, i in requests]
+    fe.start()
+    assert fe.drain(120)
+    fe.close()
+    for t in tickets:
+        assert t.wait(0) is not None
+    return svc, tickets
+
+
+def _synchronous(requests, *, scheme="smp", **svc_kwargs):
+    svc = ResolveService(scheme=scheme, **svc_kwargs)
+    for names, edges, ids in requests:
+        svc.ingest(names, edges, ids=ids)
+    return svc
+
+
+def _hepth_requests(ds, batch_size=4):
+    return [
+        (b.names, b.edges, [int(i) for i in b.ids])
+        for b in arrival_stream(ds, batch_size=batch_size)
+    ]
+
+
+# ---------------------------------------------------------------------------
+# Differential: coalesced ingest == per-arrival synchronous ingest
+# ---------------------------------------------------------------------------
+
+
+def test_coalesced_equals_per_arrival_hepth(hepth_small):
+    """Paper-sized requests coalesced up to 64 entities reach the exact
+    per-arrival fixpoint — and actually coalesced (fewer ingests than
+    requests, the whole point of the front-end)."""
+    requests = _hepth_requests(hepth_small)
+    sync = _synchronous(requests, scheme="smp")
+    svc, tickets = _coalesced(requests, scheme="smp")
+    assert len(svc.reports) < len(requests)  # coalescing really happened
+    assert svc.matches.as_set() == sync.matches.as_set()
+    assert svc.delta.packed.pair_levels == sync.delta.packed.pair_levels
+    assert _cluster_state(svc.clusters()) == _cluster_state(sync.clusters())
+    # every ticket saw the report of the coalesced ingest containing it
+    for t, (_, _, ids) in zip(tickets, requests):
+        assert t.ids == ids
+        assert set(ids) <= set(t.wait(0).ids)
+
+
+def test_coalesced_equals_per_arrival_hepth_mmp(hepth_small):
+    """Same differential under MMP: the coalesced grounding deltas and
+    message-pool replay must also be schedule-invariant."""
+    requests = _hepth_requests(hepth_small, batch_size=8)
+    sync = _synchronous(requests, scheme="mmp")
+    svc, _ = _coalesced(requests, scheme="mmp")
+    assert len(svc.reports) < len(requests)
+    assert svc.matches.as_set() == sync.matches.as_set()
+    # both equal the batch pipeline over the union (ground truth)
+    packed, gg, _ = pipeline.prepare(
+        hepth_small.entities, hepth_small.relations
+    )
+    batch = run_mmp(packed, MLNMatcher(PAPER_LEARNED), gg)
+    assert svc.matches.as_set() == batch.matches.as_set()
+
+
+def _chain_requests():
+    """Evidence-lattice-style stream: ``depth`` stages of ambiguous name
+    pairs, with coauthor edges linking stage i to stage i-1 — the §2.1
+    chain shape of ``make_lattice_cover``, expressed through names +
+    relations so it can stream.  Each request carries one stage and the
+    edges into the previous stage, so coalescing merges evidence
+    producers with their consumers."""
+    depth, per_stage = 6, 4
+    names, ids, edges_of = [], [], []
+    nid = 0
+    prev_stage: list[int] = []
+    for _ in range(depth):
+        stage = []
+        stage_names = []
+        base = f"rosalind feynmanova{chr(97 + len(edges_of))}"
+        for j in range(per_stage):
+            stage_names.append(f"{base}{chr(97 + j)}")
+            stage.append(nid)
+            nid += 1
+        e = [
+            (a, b)
+            for a, b in zip(stage, prev_stage)
+        ]
+        edges_of.append(
+            (stage_names, np.asarray(e, dtype=np.int64) if e else None, stage)
+        )
+        names.extend(stage_names)
+        ids.extend(stage)
+        prev_stage = stage
+    return edges_of, names
+
+
+@pytest.mark.parametrize("scheme", ["smp", "mmp"])
+def test_coalesced_equals_per_arrival_evidence_chain(scheme):
+    requests, all_names = _chain_requests()
+    sync = _synchronous(requests, scheme=scheme)
+    svc, _ = _coalesced(
+        requests,
+        scheme=scheme,
+        cfg=ServingConfig(max_batch=10, max_delay_ms=0),
+    )
+    assert len(svc.reports) < len(requests)
+    assert svc.matches.as_set() == sync.matches.as_set()
+    assert len(svc.matches) > 0  # the chain actually resolves
+    # and both equal the batch pipeline over the union
+    ents = EntityTable(names=list(all_names))
+    rels = sync.delta.relations()
+    packed, _, _ = pipeline.prepare(ents, rels)
+    if scheme == "smp":
+        batch = run_smp(packed, MLNMatcher(PAPER_LEARNED))
+    else:
+        gg = build_global_grounding(
+            packed.pair_levels, rels, PAPER_LEARNED
+        )
+        batch = run_mmp(packed, MLNMatcher(PAPER_LEARNED), gg)
+    assert svc.matches.as_set() == batch.matches.as_set()
+
+
+def test_coalesced_survives_resplit_retraction():
+    """The adversarial canopy re-split (match invalidation + candidate
+    retraction) fires *inside* a coalesced flush and still reaches the
+    batch fixpoint."""
+    names = [
+        f"john smithsonian{chr(97 + i // 26)}{chr(97 + i % 26)}"
+        for i in range(28)
+    ]
+    first = [i for i in range(28) if i % 2 == 0]
+    second = [i for i in range(28) if i % 2 == 1]
+    # first half committed, second half split over many tiny coalesced
+    # requests — the re-split happens mid-stream under the frontend
+    svc = ResolveService(scheme="smp")
+    svc.ingest([names[i] for i in first], ids=first)
+    fe = ServingFrontend(
+        svc, ServingConfig(max_batch=8, max_delay_ms=0), start=False
+    )
+    for i in second:
+        fe.submit([names[i]], None, [i])
+    fe.start()
+    assert fe.drain(60)
+    fe.close()
+    assert any(r.n_invalidated for r in svc.reports)  # retraction fired
+    packed, _, _ = pipeline.prepare(
+        EntityTable(names=list(names)), Relations(edges={})
+    )
+    seq = run_smp(packed, MLNMatcher(PAPER_LEARNED))
+    assert svc.matches.as_set() == seq.matches.as_set()
+
+
+# ---------------------------------------------------------------------------
+# Readers never block on an ingest
+# ---------------------------------------------------------------------------
+
+
+def test_reads_complete_while_writer_lock_held(hepth_small):
+    """Deterministic non-blocking proof: resolve/resolve_many/snapshot
+    complete while the writer lock is held (simulating the commit
+    section of an in-flight ingest).  Under the old reader-side RLock
+    these would deadlock here."""
+    requests = _hepth_requests(hepth_small)
+    svc = _synchronous(requests[:4], scheme="smp")
+    out: dict = {}
+
+    def reader():
+        out["resolve"] = svc.resolve(0)
+        out["many"] = svc.resolve_many(range(8))
+        out["snap"] = svc.snapshot().clusters()
+
+    with svc._lock:  # a writer is mid-commit, forever (as far as readers know)
+        t = threading.Thread(target=reader)
+        t.start()
+        t.join(timeout=5)
+        assert not t.is_alive(), "reader blocked on the writer lock"
+    assert len(out["many"]) == 8
+    assert out["snap"] == svc.snapshot().clusters()
+
+
+def test_reader_latency_decoupled_from_ingest(hepth_small):
+    """Latency under active ingest: while one large ingest runs, a
+    reader thread's per-call resolve latency stays far below the ingest
+    wall time — the double-buffered swap means readers wait on nothing."""
+    requests = _hepth_requests(hepth_small)
+    svc = _synchronous(requests[:2], scheme="smp")
+    union_names = [n for r in requests[2:] for n in r[0]]
+    union_ids = [i for r in requests[2:] for i in r[2]]
+    edge_arrays = [r[1] for r in requests[2:] if r[1] is not None and len(r[1])]
+    union_edges = np.vstack(edge_arrays) if edge_arrays else None
+
+    lat: list[float] = []
+    stop = threading.Event()
+
+    def reader():
+        ids = list(range(16))
+        while not stop.is_set():
+            t0 = time.perf_counter()
+            svc.resolve_many(ids)
+            lat.append(time.perf_counter() - t0)
+            time.sleep(0.001)
+
+    t = threading.Thread(target=reader)
+    t.start()
+    t0 = time.perf_counter()
+    svc.ingest(union_names, union_edges, ids=union_ids)  # one big ingest
+    ingest_s = time.perf_counter() - t0
+    stop.set()
+    t.join()
+    assert lat, "reader never ran"
+    # generous bound: lock-free reads are ~us; blocking on the ingest
+    # would cost its full wall time (>= hundreds of ms)
+    assert max(lat) < max(0.5 * ingest_s, 0.05), (max(lat), ingest_s)
+
+
+def test_resolve_observes_only_committed_states(hepth_small):
+    """The resolve() path (not just snapshot()) only ever sees cluster
+    states that exist after some ingest prefix."""
+    batches = arrival_stream(hepth_small, 5)
+    ref = ResolveService(scheme="smp")
+    expected = {_cluster_state([])}
+    for b in batches:
+        ref.ingest(b.names, b.edges, ids=b.ids)
+        expected.add(_cluster_state(ref.clusters()))
+
+    svc = ResolveService(scheme="smp")
+    seen: list[frozenset] = []
+    stop = threading.Event()
+
+    def reader():
+        while not stop.is_set():
+            seen.append(_cluster_state(svc.clusters()))
+
+    t = threading.Thread(target=reader)
+    t.start()
+    try:
+        for b in batches:
+            svc.ingest(b.names, b.edges, ids=b.ids)
+    finally:
+        stop.set()
+        t.join()
+    bad = [s for s in set(seen) if s not in expected]
+    assert not bad, f"reader observed {len(bad)} non-committed states"
+
+
+# ---------------------------------------------------------------------------
+# Admission control / backpressure
+# ---------------------------------------------------------------------------
+
+
+def test_admission_reject_sheds_and_counts():
+    obs.reset()
+    svc = ResolveService(scheme="smp")
+    fe = ServingFrontend(
+        svc,
+        ServingConfig(max_queue=2, admission="reject", max_delay_ms=0),
+        start=False,  # worker paused: the queue genuinely fills
+    )
+    t1 = fe.submit(["ada one"])
+    t2 = fe.submit(["ada two"])
+    with pytest.raises(AdmissionError):
+        fe.submit(["ada three"])
+    reg = obs.get_registry()
+    assert reg.value("serve.admission.shed") == 1
+    assert reg.value("serve.requests") == 2
+    fe.start()
+    assert fe.drain(60)
+    fe.close()
+    assert t1.done() and t2.done()
+    assert svc.delta.n_entities == 2  # the shed request never ingested
+
+
+def test_admission_block_timeout_sheds():
+    svc = ResolveService(scheme="smp")
+    fe = ServingFrontend(
+        svc,
+        ServingConfig(max_queue=1, admission="block", max_delay_ms=0),
+        start=False,
+    )
+    fe.submit(["bea one"])
+    t0 = time.perf_counter()
+    with pytest.raises(AdmissionError):
+        fe.submit(["bea two"], timeout=0.05)
+    assert time.perf_counter() - t0 >= 0.04  # it did wait before shedding
+    fe.start()
+    assert fe.drain(60)
+    fe.close()
+
+
+def test_admission_block_backpressure_releases():
+    """A blocked submit parks until the worker drains queue space, then
+    completes — backpressure propagates to producers and releases."""
+    svc = ResolveService(scheme="smp")
+    fe = ServingFrontend(
+        svc,
+        ServingConfig(max_queue=1, admission="block", max_delay_ms=0),
+        start=False,
+    )
+    fe.submit(["cleo one"])
+    unblocked = threading.Event()
+
+    def producer():
+        fe.submit(["cleo two"])  # blocks: queue is at max_queue
+        unblocked.set()
+
+    p = threading.Thread(target=producer)
+    p.start()
+    assert not unblocked.wait(0.1), "submit should have blocked"
+    fe.start()  # worker drains -> space -> producer completes
+    assert unblocked.wait(30)
+    p.join()
+    assert fe.drain(60)
+    fe.close()
+    assert svc.delta.n_entities == 2
+
+
+# ---------------------------------------------------------------------------
+# Coalescing budgets + ticket semantics
+# ---------------------------------------------------------------------------
+
+
+def test_size_budget_shapes_batches():
+    obs.reset()
+    svc = ResolveService(scheme="smp")
+    fe = ServingFrontend(
+        svc, ServingConfig(max_batch=16, max_delay_ms=0), start=False
+    )
+    for k in range(10):  # 10 requests x 4 entities, budget 16 -> 4+4+2
+        fe.submit([f"dora eleanor{chr(97 + k)}{chr(97 + j)}" for j in range(4)])
+    fe.start()
+    assert fe.drain(120)
+    fe.close()
+    sizes = [len(r.ids) for r in svc.reports]
+    assert sizes == [16, 16, 8], sizes
+    h = obs.get_registry().histogram("serve.batch.coalesced_size").summary()
+    assert h["count"] == 3 and h["max"] == 16
+    reqs = obs.get_registry().histogram("serve.batch.requests").summary()
+    assert reqs["count"] == 3 and reqs["max"] == 4
+
+
+def test_oversized_request_never_split():
+    svc = ResolveService(scheme="smp")
+    fe = ServingFrontend(
+        svc, ServingConfig(max_batch=4, max_delay_ms=0), start=False
+    )
+    fe.submit([f"edna fitzwilliam{chr(97 + j)}" for j in range(9)])  # > budget
+    fe.submit(["edna extra"])
+    fe.start()
+    assert fe.drain(60)
+    fe.close()
+    sizes = [len(r.ids) for r in svc.reports]
+    assert sizes[0] == 9, sizes  # one atomic ingest for the big request
+
+
+def test_latency_budget_flushes_partial_batch():
+    """With a size budget far above the traffic, the delay budget alone
+    must flush: a lone sub-budget request commits within ~max_delay."""
+    svc = ResolveService(scheme="smp")
+    fe = ServingFrontend(
+        svc, ServingConfig(max_batch=1024, max_delay_ms=25)
+    )
+    t = fe.submit(["freya gorostiza"])
+    report = t.wait(timeout=30)  # would hang forever if only size flushed
+    assert len(report.ids) == 1
+    fe.close()
+
+
+def test_ticket_error_and_recovery():
+    """A poisoned request fails only its own flush; the frontend keeps
+    serving, and the error surfaces through the ticket."""
+    obs.reset()
+    svc = ResolveService(scheme="smp")
+    fe = ServingFrontend(svc, ServingConfig(max_delay_ms=0))
+    ok1 = fe.submit(["gwen hypatia"], None, [0]).wait(30)
+    assert ok1.ids == [0]
+    bad = fe.submit(["gwen dup"], None, [0])  # duplicate explicit id
+    with pytest.raises(ValueError):
+        bad.wait(30)
+    ok2 = fe.submit(["gwen later"]).wait(30)  # service still serves
+    assert ok2.ids == [1]
+    fe.close()
+    assert obs.get_registry().value("serve.errors") == 1
+
+
+def test_mixed_explicit_and_auto_ids_coalesce():
+    """Auto-assigned ids skip past explicit ones inside the same
+    coalesced flush (the worker is the single id allocator)."""
+    svc = ResolveService(scheme="smp")
+    fe = ServingFrontend(
+        svc, ServingConfig(max_batch=64, max_delay_ms=0), start=False
+    )
+    ta = fe.submit(["hana ibrahimovic"])          # auto -> 0
+    tb = fe.submit(["hana jimenez"], None, [7])   # explicit hole
+    tc = fe.submit(["hana kowalczyk"])            # auto -> 8 (past 7)
+    fe.start()
+    assert fe.drain(60)
+    fe.close()
+    assert ta.ids == [0] and tb.ids == [7] and tc.ids == [8]
+    assert svc.delta.n_entities == 3
+
+
+def test_close_without_start_fails_tickets():
+    svc = ResolveService(scheme="smp")
+    fe = ServingFrontend(svc, start=False)
+    t = fe.submit(["ines jaramillo"])
+    fe.close()
+    with pytest.raises(RuntimeError):
+        t.wait(1)
+    with pytest.raises(RuntimeError):
+        fe.submit(["ines again"])
+
+
+def test_queue_depth_gauge_tracks():
+    obs.reset()
+    svc = ResolveService(scheme="smp")
+    fe = ServingFrontend(svc, ServingConfig(max_delay_ms=0), start=False)
+    for k in range(5):
+        fe.submit([f"jo kalinowski{chr(97 + k)}"])
+    assert obs.get_registry().gauge("serve.queue.depth").value == 5
+    fe.start()
+    assert fe.drain(60)
+    fe.close()
+    assert obs.get_registry().gauge("serve.queue.depth").value == 0
