@@ -37,6 +37,12 @@ its own named step), default is every gate that applies to the file:
     Per-unit byte cost is bounded by the bin shapes, so the ratios are
     comparable across corpus scales; a regression to O(corpus)
     re-uploads per ingest multiplies them far past the slack.
+  - ``recovery``: the durability block — the WAL append overhead must
+    stay under 10% of the ingest p50 (fsync-per-append riding on a
+    much larger delta+fixpoint cost), and recovery (snapshot restore +
+    WAL tail replay) must have reached the uninterrupted run's state
+    digest bit-for-bit (``fixpoint_equal``).  Absolute bounds, not
+    baseline-relative: both hold at every corpus scale.
   - ``tails``: the serving block — coalesced ingest throughput must
     beat the per-arrival synchronous baseline by the speedup floor
     (5x at full scale; a lower absolute floor at smoke scale, where
@@ -68,7 +74,13 @@ ABS_SLACK = 2.0
 STREAM_REL_SLACK = 2.0
 STREAM_ABS_SLACK = 1.0
 
-GATES = ("dispatch", "promotion", "stream", "lru", "transfer", "tails")
+GATES = ("dispatch", "promotion", "stream", "lru", "transfer", "tails",
+         "recovery")
+
+# Durability: fsync-per-append rides on a much larger delta+fixpoint
+# ingest; a WAL that costs a tenth of the ingest p50 means the append
+# path regressed (e.g. re-pickling state instead of the batch).
+RECOVERY_MAX_WAL_OVERHEAD_FRAC = 0.10
 
 # Serving coalescing: the full-scale speedup floor is the acceptance
 # bar (>= 5x over per-arrival ingest); smoke corpora amortize a much
@@ -240,6 +252,45 @@ def _check_transfer(base: dict, fresh: dict, failures: list[str]) -> None:
             print(f"ok stream/transfer: {key} {got} > 0")
 
 
+def _check_recovery(fresh: dict, failures: list[str]) -> None:
+    """Durability block: WAL overhead bound + bit-for-bit replay."""
+    entries = fresh.get("recovery", [])
+    if not entries:
+        failures.append("recovery: block missing from fresh results")
+        return
+    for e in entries:
+        tag = f"stream/recovery[batch_size={e.get('batch_size')}]"
+        frac = e.get("wal_overhead_frac")
+        if frac is None:
+            failures.append(f"{tag}: wal_overhead_frac missing")
+        elif frac >= RECOVERY_MAX_WAL_OVERHEAD_FRAC:
+            failures.append(
+                f"{tag}: wal_overhead_frac {frac} >= "
+                f"{RECOVERY_MAX_WAL_OVERHEAD_FRAC} — the WAL append is no "
+                "longer a small fraction of the ingest"
+            )
+        else:
+            print(
+                f"ok {tag}: wal_overhead_frac {frac} < "
+                f"{RECOVERY_MAX_WAL_OVERHEAD_FRAC}"
+            )
+        if e.get("fixpoint_equal") is not True:
+            failures.append(
+                f"{tag}: fixpoint_equal is "
+                f"{e.get('fixpoint_equal')!r} — recovery did not reach the "
+                "uninterrupted run's state digest"
+            )
+        else:
+            print(f"ok {tag}: fixpoint_equal (snapshot + WAL tail replay)")
+        if not e.get("replayed_records"):
+            failures.append(
+                f"{tag}: replayed_records is 0/missing — the WAL tail "
+                "replay was not exercised"
+            )
+        else:
+            print(f"ok {tag}: replayed {e['replayed_records']} WAL records")
+
+
 def _check_tails(base: dict, fresh: dict, failures: list[str]) -> None:
     """Serving block: coalescing speedup floor + p99 under load."""
     entries = fresh.get("serving", [])
@@ -320,6 +371,9 @@ def main(argv: list[str]) -> int:
             ran = True
         if gate in ("all", "tails"):
             _check_tails(base, fresh, failures)
+            ran = True
+        if gate in ("all", "recovery"):
+            _check_recovery(fresh, failures)
             ran = True
     else:
         if gate in ("all", "dispatch"):

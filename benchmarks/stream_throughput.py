@@ -50,6 +50,15 @@ fifth block reports device-transfer bytes per site
 (``transfer.{gcache,promoter,prepare}_bytes``) with scale-robust
 upload-per-unit ratios, gated by ``check_bench --gate=transfer``.
 
+The ``recovery`` block measures the durability plane: the corpus is
+streamed with the write-ahead log on (fsync'd append per coalesced
+ingest) and periodic checkpoints, reporting the WAL overhead as a
+fraction of the ingest p50 (``wal_overhead_frac``, gated < 10% by
+``check_bench --gate=recovery``) and the recovery latency — wall time
+for ``ResolveService.recover`` to restore the latest snapshot and
+replay the WAL tail — together with a bit-for-bit digest equality check
+(``fixpoint_equal``) against the uninterrupted run.
+
 The final ``serving`` block measures the coalescing front-end
 (:mod:`repro.stream.serving`): the same paper-aligned request stream is
 ingested once per-arrival synchronously (the baseline a naive
@@ -91,6 +100,7 @@ SERVING_REQUESTS = 48 if SMOKE else 200  # prefix: per-arrival sync is slow
 SERVING_REQUEST_ENTITIES = 4  # ~one paper per request
 SERVING_MAX_BATCH = 32 if SMOKE else 256
 SERVING_READERS = 2
+RECOVERY_BATCH_SIZE = 16 if SMOKE else 64
 
 
 def _scratch_evals(ds, batches) -> int:
@@ -357,8 +367,95 @@ def main() -> dict:
             stats["p50_ms"], stats["p99_ms"])
         out["readers"].append(stats)
 
+    out["recovery"] = [_recovery_block(ds)]
     out["serving"] = [_serving_block(ds)]
     return out
+
+
+def _recovery_block(ds) -> dict:
+    """Durability cost + recovery latency at full stream scale: WAL
+    append overhead per ingest, snapshot+replay wall time, and the
+    bit-for-bit fixpoint check recovery must pass."""
+    import shutil
+    import tempfile
+
+    from repro.stream.digest import state_digest
+
+    batches = arrival_stream(ds, batch_size=RECOVERY_BATCH_SIZE)
+    # checkpoint strictly inside the stream so recovery exercises BOTH
+    # planes — snapshot restore and a non-empty WAL-tail replay; with
+    # too few batches for an interior checkpoint (smoke), go WAL-only
+    ckpt_every = len(batches) - 1 if len(batches) > 2 else 0
+    tmp = tempfile.mkdtemp(prefix="repro-recovery-")
+    try:
+        obs.reset()
+        svc = ResolveService(
+            scheme="smp",
+            durability_dir=tmp,
+            checkpoint_every=ckpt_every,
+        )
+
+        def _run():
+            for b in batches:
+                svc.ingest(b.names, b.edges, ids=b.ids)
+
+        _, t_ingest = timed(_run)
+        want = state_digest(svc)
+        snap = obs.get_registry().snapshot()
+        wal_ms = snap["histograms"]["wal.append_ms"]
+        ingest_p50_ms = snap["histograms"]["ingest.wall_ms"]["p50"]
+        wal_overhead_frac = wal_ms["mean"] / max(ingest_p50_ms, 1e-9)
+        wal_bytes = snap["counters"].get("wal.bytes", 0)
+        svc.close()
+
+        obs.reset()
+        rec, t_rec = timed(
+            lambda: ResolveService.recover(
+                tmp,
+                scheme="smp",
+                checkpoint_every=ckpt_every,
+            )
+        )
+        fixpoint_equal = state_digest(rec) == want
+        replayed = obs.get_registry().value("recover.replayed")
+        rec.close()
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+    row("")
+    row("# stream_throughput: durability (WAL + checkpoint) + recovery")
+    row(
+        "batch_size,ckpt_every,n_batches,ingest_s,wal_append_ms_mean,"
+        "ingest_p50_ms,wal_overhead_frac,wal_bytes,recovery_s,"
+        "replayed_records,fixpoint_equal"
+    )
+    row(
+        RECOVERY_BATCH_SIZE,
+        ckpt_every,
+        len(batches),
+        f"{t_ingest:.2f}",
+        f"{wal_ms['mean']:.3f}",
+        f"{ingest_p50_ms:.1f}",
+        f"{wal_overhead_frac:.4f}",
+        int(wal_bytes),
+        f"{t_rec:.2f}",
+        int(replayed),
+        fixpoint_equal,
+    )
+    return {
+        "batch_size": RECOVERY_BATCH_SIZE,
+        "checkpoint_every": ckpt_every,
+        "n_batches": len(batches),
+        "ingest_s": round(t_ingest, 3),
+        "wal_append_ms_mean": round(wal_ms["mean"], 4),
+        "wal_append_ms_p99": round(wal_ms["p99"], 4),
+        "ingest_p50_ms": round(ingest_p50_ms, 2),
+        "wal_overhead_frac": round(wal_overhead_frac, 5),
+        "wal_bytes": int(wal_bytes),
+        "recovery_s": round(t_rec, 3),
+        "replayed_records": int(replayed),
+        "fixpoint_equal": bool(fixpoint_equal),
+    }
 
 
 def _serving_block(ds) -> dict:

@@ -125,6 +125,19 @@ class Checkpointer:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
+    def restore_raw(self, step: int) -> tuple[dict[str, np.ndarray], dict]:
+        """Flat ``"name|key" -> array`` map of one checkpoint plus its
+        manifest ``meta``, with no template shape validation — for
+        callers whose state is a variable-length blob (e.g. the resolve
+        service's pickled logical state, whose byte length changes every
+        checkpoint)."""
+        path = os.path.join(self.dir, f"step_{step:09d}")
+        with np.load(os.path.join(path, "arrays.npz")) as z:
+            flat = {k: z[k] for k in z.files}
+        with open(os.path.join(path, "manifest.json")) as f:
+            meta = json.load(f).get("meta", {})
+        return flat, meta
+
     def restore(self, step: int, templates: dict, mesh=None, shardings=None) -> dict:
         """Restore state trees; optionally re-place onto a (new) mesh.
 

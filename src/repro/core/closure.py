@@ -12,21 +12,39 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core import pairs as pairlib
+from repro.core import pairs as pairlib, txn
 from repro.core.types import MatchStore
 
 
 class UnionFind:
+    """Union-find with path compression.
+
+    Every ``parent``/``rank`` entry write is journaled into the active
+    ingest transaction (including the compression writes inside
+    ``find`` — an undo log that only covered ``union`` links would
+    restore a parent chain that later ``find``s had already
+    compressed *through* the rolled-back link)."""
+
     def __init__(self):
         self.parent: dict[int, int] = {}
         self.rank: dict[int, int] = {}
 
     def find(self, x: int) -> int:
-        p = self.parent.setdefault(x, x)
-        self.rank.setdefault(x, 0)
+        t = txn.active()
+        if x not in self.parent:
+            if t is not None:
+                t.save_key(self.parent, x)
+                t.save_key(self.rank, x)
+            self.parent[x] = x
+            self.rank[x] = 0
+        p = self.parent[x]
         while p != self.parent[p]:
+            if t is not None:
+                t.save_key(self.parent, p)
             self.parent[p] = self.parent[self.parent[p]]
             p = self.parent[p]
+        if t is not None:
+            t.save_key(self.parent, x)
         self.parent[x] = p
         return p
 
@@ -36,6 +54,10 @@ class UnionFind:
             return
         if self.rank[ra] < self.rank[rb]:
             ra, rb = rb, ra
+        t = txn.active()
+        if t is not None:
+            t.save_key(self.parent, rb)
+            t.save_key(self.rank, ra)
         self.parent[rb] = ra
         if self.rank[ra] == self.rank[rb]:
             self.rank[ra] += 1

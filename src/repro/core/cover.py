@@ -33,7 +33,7 @@ import dataclasses
 import numpy as np
 
 from repro.core import pairs as pairlib
-from repro.core import similarity as simlib
+from repro.core import similarity as simlib, txn
 from repro.core.types import EntityTable, NeighborhoodBatch, Relations
 from repro.kernels.ngram_sim import ops as sim_ops
 from repro.obs.registry import get_registry
@@ -498,6 +498,12 @@ def _pair_level_fn(names: list[str], thresholds, level_cache: dict[int, int]):
                 lev = 1  # abbreviation-aware weak candidate
             elif lev > 0 and simlib.first_name_conflict(names[a], names[b]):
                 lev = 0  # full first names of different people: veto
+            t = txn.active()
+            if t is not None:
+                # gids index into `names`: an aborted ingest's entry could
+                # otherwise resolve to a *different* name pair after the
+                # ids are reused, caching a wrong level forever
+                t.save_key(level_cache, gid)
             level_cache[gid] = lev
         return lev
 
@@ -800,26 +806,44 @@ class CoverDelta:
     # -- count maintenance helpers ---------------------------------------
 
     def _cov_delta(self, e: int, d: int) -> None:
+        t = txn.active()
+        if t is not None:
+            t.save_key(self._cov_cnt, e)
         c = self._cov_cnt.get(e, 0) + d
         if c:
             self._cov_cnt[e] = c
             if e in self._uncovered:
-                self._uncovered.discard(e)
+                if t is not None:
+                    t.set_discard(self._uncovered, e)
+                else:
+                    self._uncovered.discard(e)
                 self._chunks_stale = True
         else:
             self._cov_cnt.pop(e, None)
             if e in self._present and e not in self._uncovered:
-                self._uncovered.add(e)
+                if t is not None:
+                    t.set_add(self._uncovered, e)
+                else:
+                    self._uncovered.add(e)
                 self._chunks_stale = True
 
     def _edge_delta(self, e: tuple[int, int], d: int) -> None:
+        t = txn.active()
+        if t is not None:
+            t.save_key(self._edge_cov, e)
         c = self._edge_cov.get(e, 0) + d
         self._edge_cov[e] = c
         if c == 0 and e not in self._missing:
-            self._missing.add(e)
+            if t is not None:
+                t.set_add(self._missing, e)
+            else:
+                self._missing.add(e)
             self._missing_stale = True
         elif c > 0 and e in self._missing:
-            self._missing.discard(e)
+            if t is not None:
+                t.set_discard(self._missing, e)
+            else:
+                self._missing.discard(e)
             self._missing_stale = True
 
     def _full_edges(self, full: np.ndarray):
@@ -832,29 +856,47 @@ class CoverDelta:
 
     @staticmethod
     def _ref_add(index: dict, key, rk: tuple) -> None:
+        t = txn.active()
+        if t is not None and key not in index:
+            t.save_key(index, key)
         d = index.setdefault(key, {})
+        if t is not None:
+            t.save_key(d, rk)
         d[rk] = d.get(rk, 0) + 1
 
     @staticmethod
     def _ref_sub(index: dict, key, rk: tuple) -> None:
+        t = txn.active()
         d = index[key]
+        if t is not None:
+            t.save_key(d, rk)
         c = d[rk] - 1
         if c:
             d[rk] = c
         else:
             del d[rk]
             if not d:
+                if t is not None:
+                    t.save_key(index, key)
                 del index[key]
 
     def _add_part(self, key: tuple, window: np.ndarray, s: int) -> None:
+        t = txn.active()
         part = self._parts.get(key)
         if part is not None:
-            part.emitters.add(s)
+            if t is not None:
+                t.set_add(part.emitters, s)
+            else:
+                part.emitters.add(s)
             return
         core, full = _expand_part(window, self._adj, self.k_max)
         rk = _row_key(full, _bin_of(len(full), self.k_bins), self._adj)
+        if t is not None:
+            t.save_key(self._parts, key)
         self._parts[key] = _Part(core, full, rk, {s})
         for e in map(int, full):
+            if t is not None:
+                t.save_key(self._containers, e, copy=set)
             self._containers.setdefault(e, set()).add(key)
             self._cov_delta(e, +1)
         for edge in self._full_edges(full):
@@ -862,13 +904,19 @@ class CoverDelta:
         self._acquires.append(rk)
 
     def _drop_part(self, key: tuple, s: int) -> None:
+        t = txn.active()
         part = self._parts[key]
-        part.emitters.discard(s)
+        if t is not None:
+            t.set_discard(part.emitters, s)
+        else:
+            part.emitters.discard(s)
         if part.emitters:
             return
         for e in map(int, part.full):
             cs = self._containers.get(e)
             if cs is not None:
+                if t is not None:
+                    t.save_key(self._containers, e, copy=set)
                 cs.discard(key)
                 if not cs:
                     del self._containers[e]
@@ -876,6 +924,8 @@ class CoverDelta:
         for edge in self._full_edges(part.full):
             self._edge_delta(edge, -1)
         self._releases.append(part.row_key)
+        if t is not None:
+            t.save_key(self._parts, key)
         del self._parts[key]
 
     # -- assemble ---------------------------------------------------------
@@ -911,11 +961,26 @@ class CoverDelta:
         bit-for-bit the scratch build's without the per-ingest O(E)
         adjacency rebuild.
         """
+        t = txn.active()
+        if t is not None:
+            # wholesale attribute rebinds below (and in pack) — journal
+            # the pre-ingest references once up front; entry-level
+            # writes are journaled at their mutation sites
+            for a in (
+                "_names", "_pending", "_acquires", "_releases",
+                "_missing_stale", "_chunks_stale",
+                "_groups", "_group_keys", "_group_row_keys",
+                "_chunks", "_chunk_keys", "_chunk_row_keys",
+            ):
+                t.save_attr(self, a)
         if new_edges is not None and len(new_edges):
             for x, y in np.asarray(new_edges, dtype=np.int64):
                 x, y = int(x), int(y)
                 if x == y:
                     continue  # rejected upstream; adjacency must not self-link
+                if t is not None:
+                    t.save_key(self._adj, x, copy=set)
+                    t.save_key(self._adj, y, copy=set)
                 self._adj.setdefault(x, set()).add(y)
                 self._adj.setdefault(y, set()).add(x)
         self._names = entities.names
@@ -931,9 +996,15 @@ class CoverDelta:
         # claims them.
         for e in new_ids:
             e = int(e)
-            self._present.add(e)
+            if t is not None:
+                t.set_add(self._present, e)
+            else:
+                self._present.add(e)
             if self._cov_cnt.get(e, 0) == 0 and e not in self._uncovered:
-                self._uncovered.add(e)
+                if t is not None:
+                    t.set_add(self._uncovered, e)
+                else:
+                    self._uncovered.add(e)
                 self._chunks_stale = True
         # the caller's universe must be exactly the accumulated new_ids:
         # this class supports growth only (no entity eviction), and the
@@ -962,11 +1033,18 @@ class CoverDelta:
                 edge = (x, y) if x < y else (y, x)
                 if edge in self._all_edges:
                     continue
-                self._all_edges.add(edge)
+                if t is not None:
+                    t.set_add(self._all_edges, edge)
+                    t.save_key(self._edge_cov, edge)
+                else:
+                    self._all_edges.add(edge)
                 both = self._containers.get(x, set()) & self._containers.get(y, set())
                 self._edge_cov[edge] = len(both)
                 if not both:
-                    self._missing.add(edge)
+                    if t is not None:
+                        t.set_add(self._missing, edge)
+                    else:
+                        self._missing.add(edge)
                     self._missing_stale = True
                 stale_parts |= both
                 stale_groups |= self._group_containers.get(
@@ -1011,12 +1089,19 @@ class CoverDelta:
             for e in map(int, self._seed_members.get(s, ())):
                 ms = self._member_seeds.get(e)
                 if ms is not None:
+                    if t is not None:
+                        t.save_key(self._member_seeds, e, copy=set)
                     ms.discard(s)
                     if not ms:
                         del self._member_seeds[e]
+            if t is not None:
+                t.save_key(self._seed_members, s)
+                t.save_key(self._seed_parts, s)
             if pos >= 0:
                 self._seed_members[s] = canopies[pos]
                 for e in map(int, canopies[pos]):
+                    if t is not None:
+                        t.save_key(self._member_seeds, e, copy=set)
                     self._member_seeds.setdefault(e, set()).add(s)
                 self._seed_parts[s] = [k for k, _ in new_parts]
             else:
@@ -1044,6 +1129,8 @@ class CoverDelta:
             if rk != part.row_key:
                 self._releases.append(part.row_key)
                 self._acquires.append(rk)
+                if t is not None:
+                    t.save_attr(part, "row_key")
                 part.row_key = rk
 
         # 4. totality groups (re-packed only when the missing set moved).
@@ -1057,6 +1144,8 @@ class CoverDelta:
                     for e in gk:
                         gc = self._group_containers.get(e)
                         if gc is not None:
+                            if t is not None:
+                                t.save_key(self._group_containers, e, copy=set)
                             gc.discard(gk)
                             if not gc:
                                 del self._group_containers[e]
@@ -1071,6 +1160,8 @@ class CoverDelta:
                 else:
                     rk = _row_key(arr, _bin_of(len(arr), self.k_bins), self._adj)
                     for e in gk:
+                        if t is not None:
+                            t.save_key(self._group_containers, e, copy=set)
                         self._group_containers.setdefault(e, set()).add(gk)
                         self._cov_delta(e, +1)
                     self._acquires.append(rk)
@@ -1089,6 +1180,8 @@ class CoverDelta:
             if rk != self._group_row_keys[i]:
                 self._releases.append(self._group_row_keys[i])
                 self._acquires.append(rk)
+                if t is not None:
+                    t.save_item(self._group_row_keys, i)
                 self._group_row_keys[i] = rk
 
         # 5. leftover chunks.
@@ -1167,7 +1260,15 @@ class CoverDelta:
         tail outgrows capacity the buffer doubles and the resident rows
         are copied once — amortized O(1) copies per appended row, vs the
         O(bin) memcpy of the former per-append ``np.concatenate``.
+
+        Under an ingest transaction the tail writes themselves need no
+        journal: rows ``>= n0`` sit beyond every published view, so a
+        rollback (which restores ``_bin_seq``/``_bin_arrays``) leaves
+        them unobservable, and the next append to this bin starts from
+        the same ``n0`` and overwrites them.  Only the buffer *rebind*
+        on growth is journaled.
         """
+        t = txn.active()
         n1 = len(seq)
         buf = self._bin_buf[k]
         if next(iter(buf.values())).shape[0] < n1:
@@ -1175,6 +1276,8 @@ class CoverDelta:
             for f, _ in self._ROW_FIELDS:
                 new[f][:n0] = buf[f][:n0]
             self.last_growth_copy_rows += n0
+            if t is not None:
+                t.save_key(self._bin_buf, k)
             self._bin_buf[k] = buf = new
         for i in range(n0, n1):
             row = self._rows[seq[i]]
@@ -1187,11 +1290,14 @@ class CoverDelta:
         """Rebuild bin ``k`` from memoized rows into a FRESH buffer (the
         row sequence changed mid-way, or the bin is new) — never in
         place, since a previous pack's views alias the old buffer."""
+        t = txn.active()
         buf = self._alloc_buf(seq[0], len(seq))
         for i, rk in enumerate(seq):
             row = self._rows[rk]
             for f, rf in self._ROW_FIELDS:
                 buf[f][i] = row[rf]
+        if t is not None:
+            t.save_key(self._bin_buf, k)
         self._bin_buf[k] = buf
         self.last_restack_rows += len(seq)
         return self._publish(buf, len(seq))
@@ -1217,6 +1323,17 @@ class CoverDelta:
         assert self._pending is not None and self._pending[0] is cover, (
             "pack() must follow the assemble() that built this cover"
         )
+        t = txn.active()
+        if t is not None:
+            for a in (
+                "_pending", "_bin_seq", "_bin_arrays", "_bin_buf",
+                "last_dirty", "last_splice_rows", "total_splice_rows",
+                "last_append_rows", "total_append_rows",
+                "last_growth_copy_rows", "total_growth_copy_rows",
+                "last_restack_rows", "total_restack_rows",
+                "last_added_pairs", "last_retracted_pairs",
+            ):
+                t.save_attr(self, a)
         _, keys = self._pending
         self._pending = None
         pair_level = _pair_level_fn(
@@ -1229,6 +1346,8 @@ class CoverDelta:
         for rk in self._acquires:
             if rk not in self._rows:
                 members = np.asarray(rk[1], dtype=np.int64)
+                if t is not None:
+                    t.save_key(self._rows, rk)
                 self._rows[rk] = _stage_row(members, rk[0], self._adj, pair_level)
                 splice_rows += 1
 
@@ -1241,12 +1360,16 @@ class CoverDelta:
         fresh_keys: set[tuple] = set()
         gid_fresh: set[int] = set()
         for rk in self._releases:
+            if t is not None:
+                t.save_key(self._row_ref, rk)
             self._row_ref[rk] -= 1
             if self._row_ref[rk] == 0:
                 released_to_zero.add(rk)
             row = self._rows[rk]
             for g in row["gid"][row["pmask"]]:
                 g = int(g)
+                if t is not None:
+                    t.save_key(self._lev_ref, g)
                 self._lev_ref[g] -= 1
                 if self._lev_ref[g] == 0:
                     gid_removed.add(g)
@@ -1257,12 +1380,18 @@ class CoverDelta:
             ref = self._row_ref.get(rk, 0)
             if ref == 0 and rk not in released_to_zero:
                 fresh_keys.add(rk)
+            if t is not None:
+                t.save_key(self._row_ref, rk)
             self._row_ref[rk] = ref + 1
             row = self._rows[rk]
             for g, lv in zip(row["gid"][row["pmask"]], row["lev"][row["pmask"]]):
                 g = int(g)
                 ref_g = self._lev_ref.get(g, 0)
+                if t is not None:
+                    t.save_key(self._lev_ref, g)
                 if ref_g == 0:
+                    if t is not None:
+                        t.save_key(self._pair_levels, g)
                     self._pair_levels[g] = int(lv)
                     if g not in gid_removed:
                         gid_fresh.add(g)
@@ -1272,6 +1401,9 @@ class CoverDelta:
                 self._ref_add(self._ent_rows, e, rk)
         retracted = [g for g in gid_removed if self._lev_ref.get(g, 0) == 0]
         for g in retracted:
+            if t is not None:
+                t.save_key(self._pair_levels, g)
+                t.save_key(self._lev_ref, g)
             del self._pair_levels[g]
             del self._lev_ref[g]
         added = {g: self._pair_levels[g] for g in gid_fresh}
@@ -1324,6 +1456,9 @@ class CoverDelta:
         # 5. evict rows that left the cover; publish per-ingest outputs.
         for rk in released_to_zero:
             if self._row_ref.get(rk, 0) == 0:
+                if t is not None:
+                    t.save_key(self._rows, rk)
+                    t.save_key(self._row_ref, rk)
                 self._rows.pop(rk, None)
                 self._row_ref.pop(rk, None)
         self.last_dirty = [n for n, rk in enumerate(keys) if rk in fresh_keys]

@@ -15,6 +15,7 @@ from collections import deque
 
 import numpy as np
 
+from repro.core import txn
 from repro.core.cover import PackedCover
 from repro.core.global_grounding import GlobalGrounding
 from repro.core.matcher import TypeIIMatcher, TypeIMatcher
@@ -187,10 +188,21 @@ class MessagePool:
         self._groups: list[np.ndarray] | None = None
 
     def _find(self, g: int) -> int:
+        # entry writes (inserts and path compressions alike) are
+        # journaled into the active ingest transaction, mirroring
+        # closure.UnionFind — see its docstring for why compressions
+        # must be journaled too
+        t = txn.active()
+        if t is not None and g not in self.parent:
+            t.save_key(self.parent, g)
         p = self.parent.setdefault(g, g)
         while p != self.parent[p]:
+            if t is not None:
+                t.save_key(self.parent, p)
             self.parent[p] = self.parent[self.parent[p]]
             p = self.parent[p]
+        if t is not None:
+            t.save_key(self.parent, g)
         self.parent[g] = p
         return p
 
@@ -198,11 +210,16 @@ class MessagePool:
         """T <- (T u {M})* : union-find merge implements Prop. 3."""
         if len(gids) < 2:
             return
+        t = txn.active()
+        if t is not None:
+            t.save_attr(self, "_groups")
         self._groups = None
         r0 = self._find(gids[0])
         for g in gids[1:]:
             r = self._find(g)
             if r != r0:
+                if t is not None:
+                    t.save_key(self.parent, r)
                 self.parent[r] = r0
 
     def groups(self) -> list[np.ndarray]:
@@ -231,6 +248,12 @@ class MessagePool:
         if not drop or not (drop & self.parent.keys()):
             return
         groups = self.groups()
+        t = txn.active()
+        if t is not None:
+            # the rebuild rebinds ``parent`` wholesale; journaling the
+            # old dict ref is enough — subsequent writes hit the new one
+            t.save_attr(self, "parent")
+            t.save_attr(self, "_groups")
         self.parent = {}
         self._groups = None
         for grp in groups:

@@ -34,7 +34,7 @@ import dataclasses
 
 import numpy as np
 
-from repro.core import pairs as pairlib
+from repro.core import pairs as pairlib, txn
 from repro.core.mln import MLNWeights
 from repro.core.types import MatchStore, Relations
 from repro.obs.registry import get_registry
@@ -58,6 +58,20 @@ class GlobalGrounding:
     _device: tuple | None = dataclasses.field(
         default=None, repr=False, compare=False
     )
+
+    def __getstate__(self):
+        # The device cache is a lazy upload keyed on this object's
+        # identity — it is neither durable nor picklable (checkpointing
+        # serializes the grounding; recovery repopulates on first use).
+        state = {
+            f.name: getattr(self, f.name) for f in dataclasses.fields(self)
+        }
+        state["_device"] = None
+        return state
+
+    def __setstate__(self, state):
+        for k, v in state.items():
+            setattr(self, k, v)
 
     def index_of(self, gids: np.ndarray) -> np.ndarray:
         idx = np.searchsorted(self.gids, gids)
@@ -212,37 +226,53 @@ class GroundingMaintainer:
 
     # -- pending-delta bookkeeping (drives the array splice) --------------
 
+    @staticmethod
+    def _sadd(s: set, item) -> None:
+        t = txn.active()
+        if t is not None:
+            t.set_add(s, item)
+        else:
+            s.add(item)
+
+    @staticmethod
+    def _sdiscard(s: set, item) -> None:
+        t = txn.active()
+        if t is not None:
+            t.set_discard(s, item)
+        else:
+            s.discard(item)
+
     def _record_pair_added(self, g: int) -> None:
         if g in self._pend_del:
             # the live arrays still hold g: a delete+add cancels to a
             # unary patch (the common-neighbor count may have moved)
-            self._pend_del.discard(g)
-            self._pend_u.add(g)
+            self._sdiscard(self._pend_del, g)
+            self._sadd(self._pend_u, g)
         else:
-            self._pend_add.add(g)
+            self._sadd(self._pend_add, g)
 
     def _record_pair_retracted(self, g: int) -> None:
         if g in self._pend_add:
-            self._pend_add.discard(g)
+            self._sdiscard(self._pend_add, g)
         else:
-            self._pend_del.add(g)
-        self._pend_u.discard(g)
+            self._sadd(self._pend_del, g)
+        self._sdiscard(self._pend_u, g)
 
     def _record_unary_changed(self, g: int) -> None:
         if g not in self._pend_add:
-            self._pend_u.add(g)
+            self._sadd(self._pend_u, g)
 
     def _record_coupling_added(self, key: tuple[int, int]) -> None:
         if key in self._pend_cdel:
-            self._pend_cdel.discard(key)
+            self._sdiscard(self._pend_cdel, key)
         else:
-            self._pend_cadd.add(key)
+            self._sadd(self._pend_cadd, key)
 
     def _record_coupling_removed(self, key: tuple[int, int]) -> None:
         if key in self._pend_cadd:
-            self._pend_cadd.discard(key)
+            self._sdiscard(self._pend_cadd, key)
         else:
-            self._pend_cdel.add(key)
+            self._sadd(self._pend_cdel, key)
 
     def __len__(self) -> int:
         return len(self.levels)
@@ -256,7 +286,13 @@ class GroundingMaintainer:
         key = (g1, g2) if g1 < g2 else (g2, g1)
         if key in self.coup:
             return 0
-        self.coup.add(key)
+        t = txn.active()
+        if t is not None:
+            t.set_add(self.coup, key)
+            t.save_key(self.coup_adj, g1, copy=set)
+            t.save_key(self.coup_adj, g2, copy=set)
+        else:
+            self.coup.add(key)
         self.coup_adj.setdefault(g1, set()).add(g2)
         self.coup_adj.setdefault(g2, set()).add(g1)
         self._record_coupling_added(key)
@@ -284,21 +320,34 @@ class GroundingMaintainer:
         """
         stats = GroundingDelta()
         visited: set[int] = set()
+        t = txn.active()
+        if t is not None:
+            t.save_attr(self, "total_pair_visits")
 
         # 1. retractions: drop unary + incident couplings.
         for g in retracted_pairs or ():
             g = int(g)
             if g not in self.levels:
                 continue
+            if t is not None:
+                t.save_key(self.levels, g)
+                t.save_key(self.common, g)
             del self.levels[g]
             del self.common[g]
             a, b = (int(x) for x in pairlib.split_gid(np.int64(g)))
+            if t is not None:
+                t.save_key(self.pairs_of, a, copy=set)
+                t.save_key(self.pairs_of, b, copy=set)
             self.pairs_of.get(a, set()).discard(g)
             self.pairs_of.get(b, set()).discard(g)
+            if t is not None:
+                t.save_key(self.coup_adj, g)
             for g2 in self.coup_adj.pop(g, set()):
+                if t is not None:
+                    t.save_key(self.coup_adj, g2, copy=set)
                 self.coup_adj[g2].discard(g)
                 key = (g, g2) if g < g2 else (g2, g)
-                self.coup.discard(key)
+                self._sdiscard(self.coup, key)
                 self._record_coupling_removed(key)
                 stats.couplings_removed += 1
             self._record_pair_retracted(g)
@@ -312,6 +361,9 @@ class GroundingMaintainer:
                 x, y = int(x), int(y)
                 if x == y or y in self.adj.get(x, ()):
                     continue  # self-loop / duplicate: no pairwise evidence
+                if t is not None:
+                    t.save_key(self.adj, x, copy=set)
+                    t.save_key(self.adj, y, copy=set)
                 self.adj.setdefault(x, set()).add(y)
                 self.adj.setdefault(y, set()).add(x)
                 stats.edges_added += 1
@@ -322,6 +374,8 @@ class GroundingMaintainer:
                         visited.add(g)
                         nz = self.adj.get(z, set())
                         if v in nz:  # v is a new common neighbor of (u, z)
+                            if t is not None:
+                                t.save_key(self.common, g)
                             self.common[g] += 1
                             self._record_unary_changed(g)
                         # new couplings through the (u, v) adjacency link:
@@ -344,6 +398,11 @@ class GroundingMaintainer:
             a, b = (int(x) for x in pairlib.split_gid(np.int64(g)))
             na = self.adj.get(a, set())
             nb = self.adj.get(b, set())
+            if t is not None:
+                t.save_key(self.levels, g)
+                t.save_key(self.common, g)
+                t.save_key(self.pairs_of, a, copy=set)
+                t.save_key(self.pairs_of, b, copy=set)
             self.levels[g] = int(lev)
             self.common[g] = len(na & nb)
             self.pairs_of.setdefault(a, set()).add(g)
@@ -499,6 +558,10 @@ class GroundingMaintainer:
         them — the array-form analogue of ``GroundingDelta.
         pairs_visited``).
         """
+        t = txn.active()
+        if t is not None:
+            for a in ("_gg", "last_splice_rows", "total_splice_rows"):
+                t.save_attr(self, a)
         pending = (
             self._pend_add or self._pend_del or self._pend_u
             or self._pend_cadd or self._pend_cdel
@@ -513,11 +576,17 @@ class GroundingMaintainer:
             self._gg = self._splice(self._gg)
         self.total_splice_rows += self.last_splice_rows
         get_registry().counter("grounding.splice_rows").inc(self.last_splice_rows)
-        self._pend_add.clear()
-        self._pend_del.clear()
-        self._pend_u.clear()
-        self._pend_cadd.clear()
-        self._pend_cdel.clear()
+        # rebind (not clear()) so a journaled pre-ingest reference keeps
+        # its contents for rollback
+        if t is not None:
+            for a in ("_pend_add", "_pend_del", "_pend_u",
+                      "_pend_cadd", "_pend_cdel"):
+                t.save_attr(self, a)
+        self._pend_add = set()
+        self._pend_del = set()
+        self._pend_u = set()
+        self._pend_cadd = set()
+        self._pend_cdel = set()
         return self._gg
 
 

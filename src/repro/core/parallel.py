@@ -232,6 +232,30 @@ class GroundingCache:
     def invalidate(self) -> None:
         self._bins.clear()
 
+    _TXN_COUNTERS = (
+        "ground_calls", "rows_ground", "bin_hits", "splice_calls",
+        "evictions", "cold_regrounds", "peak_resident_bins",
+        "peak_resident_bytes", "window_peak_bins",
+    )
+
+    def journal_rollback(self, t) -> None:
+        """Register restoration of this cache into an ingest transaction.
+
+        The entry tuples are immutable, so a shallow copy of the LRU
+        dict plus the counter values is an exact pre-ingest snapshot —
+        O(bins), not O(rows) (bin count is bounded by
+        ``len(k_bins) x matchers``).
+        """
+        prev_bins = dict(self._bins)
+        prev_counters = tuple(getattr(self, c) for c in self._TXN_COUNTERS)
+
+        def undo() -> None:
+            self._bins = prev_bins
+            for c, v in zip(self._TXN_COUNTERS, prev_counters):
+                setattr(self, c, v)
+
+        t.on_rollback(undo)
+
     def begin_peak_window(self) -> None:
         """Start a fresh residency-peak window (bins already resident
         count toward it — they occupy HBM whether or not this run

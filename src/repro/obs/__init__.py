@@ -25,6 +25,17 @@ views; their counters are registry-backed (``ingest.*`` / ``em.*``
 counter families, published at the end of each ingest/run), which is
 what ``benchmarks/stream_throughput.py`` and ``table1_parallel.py``
 consume via ``snapshot()``.
+
+The fault-tolerance plane reports through the same registry: the
+durability families ``wal.*`` (``appends``/``bytes`` counters,
+``append_ms`` histogram), ``ckpt.*`` (``saves`` counter, ``last_seq``
+gauge), ``recover.*`` (``replayed`` counter, ``wall_ms`` histogram),
+``ingest.aborts`` (rolled-back ingests), and the serving degradation
+counters ``serve.retries`` / ``serve.quarantined`` /
+``serve.faults.flush`` / ``serve.faults.bisections`` plus the
+``serve.backoff_ms`` histogram — the taxonomy
+``docs/ARCHITECTURE.md`` catalogs and ``tests/test_faults.py``
+exercises under injected faults.
 """
 
 from repro.obs.export import (  # noqa: F401

@@ -41,7 +41,16 @@ Under real traffic the service is fronted by
 :class:`repro.stream.serving.ServingFrontend` (stage 0, so to speak):
 an async ingest queue that coalesces arrivals up to a size/latency
 budget into one delta+fixpoint pass each, with bounded-queue admission
-control — see ``docs/SERVING.md`` for the operator view.
+control, capped-backoff retries, and poison-batch bisection — see
+``docs/SERVING.md`` for the operator view.
+
+Every ingest is transactional (``repro.core.txn`` undo log: any
+mid-ingest failure rolls the service back to the pre-submit state
+bit-for-bit), and optionally durable
+(``ResolveService(durability_dir=...)``: fsync'd write-ahead log
+(:mod:`repro.stream.wal`) + periodic atomic checkpoints, with
+``ResolveService.recover`` restoring the newest checkpoint and
+replaying the WAL tail to the exact pre-crash fixpoint).
 
 The invariant throughout: after any ingest sequence — and any
 coalescing of it — cover, grounding, and fixpoint are bit-for-bit what

@@ -60,7 +60,8 @@ import dataclasses
 
 import numpy as np
 
-from repro.core import similarity as simlib
+from repro import faults
+from repro.core import similarity as simlib, txn
 from repro.core.cover import (
     DEFAULT_BINS,
     Cover,
@@ -167,8 +168,16 @@ class DeltaCover:
     def _grow(self, ids: list[int], names: list[str]) -> None:
         if not ids:
             return
+        t = txn.active()
         hi = max(ids) + 1
-        if hi > len(self.names):
+        grown = hi > len(self.names)
+        if t is not None:
+            t.save_len(self.names)
+            # growth rebinds ``features`` to a fresh concatenation (the
+            # old buffer is never written again), so the ref suffices;
+            # hole-fill writes into an unchanged buffer journal rows
+            t.save_attr(self, "features")
+        if grown:
             self.names.extend([None] * (hi - len(self.names)))
             pad = np.zeros((hi - len(self.features), self.feature_dim), np.float32)
             self.features = np.concatenate([self.features, pad])
@@ -177,10 +186,20 @@ class DeltaCover:
         )
         for eid, name, f in zip(ids, names, feats):
             if self.names[eid] is not None:
+                # mid-loop failure: earlier iterations already wrote —
+                # the journal is what makes this raise leave no trace
                 raise ValueError(f"entity id {eid} ingested twice")
-            self.names[eid] = name
-            self.features[eid] = f
-            self.present.add(eid)
+            if t is not None:
+                t.save_item(self.names, eid)
+                if not grown:
+                    t.save_row(self.features, eid)
+                t.set_add(self.present, eid)
+                self.names[eid] = name
+                self.features[eid] = f
+            else:
+                self.names[eid] = name
+                self.features[eid] = f
+                self.present.add(eid)
 
     # -- probe ------------------------------------------------------------
 
@@ -202,6 +221,7 @@ class DeltaCover:
         q = self.features[np.asarray(ids, dtype=np.int64)]
         p = self.features[np.asarray(cands, dtype=np.int64)]
         sims = np.asarray(sim_ops.sim_above(q, p, 0.0))
+        t = txn.active()
         for r, a in enumerate(ids):
             row = sims[r]
             for c in np.where(row >= self.t_loose)[0]:
@@ -209,6 +229,9 @@ class DeltaCover:
                 if b == a:
                     continue
                 s = float(row[int(c)])
+                if t is not None:
+                    t.save_key(self.sim_adj, a, copy=dict)
+                    t.save_key(self.sim_adj, b, copy=dict)
                 self.sim_adj.setdefault(a, {})[b] = s
                 self.sim_adj.setdefault(b, {})[a] = s
                 touched.add(b)
@@ -243,16 +266,25 @@ class DeltaCover:
         set-ops per ingest instead of O(n).
         """
         region = self._replay_region(touched)
+        t = txn.active()
+        if t is not None:
+            t.save_attr(self, "_last_region")
+            t.save_attr(self, "last_replay_visits")
+            t.save_attr(self, "total_replay_visits")
         self._last_region = region
         self.last_replay_visits = len(region)
         self.total_replay_visits += len(region)
         for seed in region:
+            if t is not None:
+                t.save_key(self._canopy_cache, seed)
             self._canopy_cache.pop(seed, None)
         suppressed: set[int] = set()
         for e in sorted(region):
             if e in suppressed:
                 continue
             nbrs = self.sim_adj.get(e, {})
+            if t is not None:
+                t.save_key(self._canopy_cache, e)
             self._canopy_cache[e] = np.asarray(
                 sorted({e} | set(nbrs)), dtype=np.int64
             )
@@ -310,12 +342,17 @@ class DeltaCover:
                 )
         else:
             edges = None
+        t = txn.active()
         self._grow(ids, names)
         if edges is not None:
+            if t is not None:
+                t.save_len(self.edge_chunks)
             self.edge_chunks.append(edges)
+        faults.maybe_fail("lsh", names)
         with obs_span("ingest.lsh", batch=len(ids)):
             touched = self._probe(ids, names) if ids else set()
 
+        faults.maybe_fail("replay", names)
         with obs_span("ingest.replay", touched=len(touched)):
             canopies = self._canopies(touched)
         seeds = sorted(self._canopy_cache)
@@ -329,6 +366,7 @@ class DeltaCover:
         # boundary adjacency from new_edges itself (no per-ingest O(E)
         # Relations rebuild) and only reads entity *names*, so the live
         # name list is passed without the O(n) copy of entities().
+        faults.maybe_fail("cover_splice", names)
         with obs_span("ingest.cover_splice"):
             cover = self.cover_delta.assemble(
                 canopies,
@@ -347,7 +385,13 @@ class DeltaCover:
         # memo, so eviction never changes the cover or the fixpoint).
         if self.level_cache_max is not None:
             while len(self.level_cache) > self.level_cache_max:
-                self.level_cache.pop(next(iter(self.level_cache)))
+                k = next(iter(self.level_cache))
+                if t is not None:
+                    t.save_key(self.level_cache, k)
+                self.level_cache.pop(k)
+        if t is not None:
+            t.save_attr(self, "cover")
+            t.save_attr(self, "packed")
         self.cover, self.packed = cover, packed
         return DeltaResult(
             cover=cover,

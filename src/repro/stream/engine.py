@@ -39,7 +39,7 @@ import dataclasses
 
 import numpy as np
 
-from repro.core import pairs as pairlib
+from repro.core import pairs as pairlib, txn
 from repro.core.closure import clusters_of
 from repro.core.cover import PackedCover
 from repro.core.driver import EMResult, MessagePool, run_mmp, run_smp
@@ -153,6 +153,13 @@ class IncrementalEngine:
         Not thread-safe: one in-flight call at a time, from the thread
         that owns the ingest path (see the class docstring).
         """
+        t = txn.active()
+        if t is not None:
+            # pool mutations are journaled entry-wise inside MessagePool;
+            # the engine's own carried state is plain attribute rebinds
+            for a in ("m_plus", "gcache", "total_evals", "total_rounds",
+                      "total_dispatches"):
+                t.save_attr(self, a)
         if retracted and self.scheme == "mmp":
             self.pool.discard(retracted)
         carried, dirty_set, dropped = self._invalidate(packed, set(dirty))
@@ -167,6 +174,8 @@ class IncrementalEngine:
                         capacity=self.gcache_capacity,
                         hbm_budget_bytes=self.gcache_hbm_budget,
                     )
+                if t is not None:
+                    self.gcache.journal_rollback(t)
                 rows_before = self.gcache.rows_ground
                 result = run_parallel(
                     packed,

@@ -22,7 +22,7 @@ from collections import deque
 
 import numpy as np
 
-from repro.core import similarity as simlib
+from repro.core import similarity as simlib, txn
 from repro.kernels.minhash import ops as minhash_ops
 
 
@@ -122,6 +122,16 @@ class MinHashLSHIndex:
         reach the index).
         """
         sigs = self.signatures(names)
+        t = txn.active()
+        if t is not None:
+            # O(batch x bands) journal: counters, the touched bucket
+            # lists (copied pre-image, they are collision-sized), and —
+            # bounded index only — the eviction bookkeeping
+            t.save_attr(self, "n_adds")
+            t.save_attr(self, "n_indexed")
+            t.save_attr(self, "n_evicted")
+            if self.cfg.bounded:
+                t.save_key(self.__dict__, "_order", copy=deque.copy)
         self.n_adds += 1
         for eid, sig in zip(ids, sigs):
             eid = int(eid)
@@ -131,8 +141,13 @@ class MinHashLSHIndex:
                 self._order.remove(eid)
                 self.n_indexed -= 1
             for b, key in keys:
+                if t is not None:
+                    t.save_key(self.buckets[b], key, copy=list)
                 self.buckets[b].setdefault(key, []).append(eid)
             if self.cfg.bounded:
+                if t is not None:
+                    t.save_key(self._keys_of, eid)
+                    t.save_key(self._added_at, eid)
                 self._keys_of[eid] = keys
                 self._added_at[eid] = self.n_adds
                 self._order.append(eid)
@@ -142,11 +157,17 @@ class MinHashLSHIndex:
 
     def _scrub(self, eid: int) -> None:
         """Remove an id's entries from its recorded buckets."""
+        t = txn.active()
+        if t is not None:
+            t.save_key(self._added_at, eid)
+            t.save_key(self._keys_of, eid)
         del self._added_at[eid]
         for b, key in self._keys_of.pop(eid):
             members = self.buckets[b].get(key)
             if members is None:
                 continue
+            if t is not None:
+                t.save_key(self.buckets[b], key, copy=list)
             members.remove(eid)
             if not members:
                 del self.buckets[b][key]

@@ -50,12 +50,16 @@ and drives this service single-writer; see ``docs/SERVING.md``.
 from __future__ import annotations
 
 import dataclasses
+import pickle
 import threading
 import time
+from pathlib import Path
 
 import numpy as np
 
-from repro.core import pairs as pairlib
+from repro import faults
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.core import pairs as pairlib, txn
 from repro.core.closure import UnionFind
 from repro.core.cover import DEFAULT_BINS
 from repro.core.global_grounding import GroundingMaintainer
@@ -66,6 +70,7 @@ from repro.obs import span as obs_span
 from repro.stream.delta import DeltaCover
 from repro.stream.engine import IncrementalEngine
 from repro.stream.index import LSHConfig
+from repro.stream.wal import WriteAheadLog
 
 
 @dataclasses.dataclass
@@ -235,13 +240,27 @@ class ResolveService:
         level_cache_max: int | None = None,
         gcache_capacity: int | None = None,
         gcache_hbm_budget: int | None = None,
+        durability_dir: str | None = None,
+        checkpoint_every: int = 0,
+        wal_fsync: bool = True,
     ):
         """``gcache_capacity`` / ``gcache_hbm_budget`` (parallel engine
         only) bound the device grounding cache — the HBM-budget knob of
         the serving path: at most ``gcache_capacity`` bins (or
         ``gcache_hbm_budget`` bytes of grounded tensors) stay resident;
         colder bins are dropped LRU-first and re-ground on demand,
-        bit-for-bit, trading compute for bounded memory."""
+        bit-for-bit, trading compute for bounded memory.
+
+        ``durability_dir`` turns on crash durability: every ingest is
+        appended to a write-ahead log (fsync'd unless ``wal_fsync`` is
+        off) *before* any in-memory state mutates, and — when
+        ``checkpoint_every`` > 0 — every that-many ingests the full
+        logical state is snapshotted through
+        :class:`repro.checkpoint.checkpointer.Checkpointer` and the WAL
+        is rotated/GC'd.  :meth:`recover` rebuilds a service from the
+        latest snapshot plus the WAL tail; by stream/batch
+        schedule-invariance the recovered fixpoint is bit-for-bit the
+        uninterrupted one."""
         self.weights = weights
         self.scheme = scheme
         self.delta = DeltaCover(
@@ -288,6 +307,20 @@ class ResolveService:
             _members={},
         )
         self.reports: list[IngestReport] = []
+        # Durability plane (optional): WAL + checkpointer.  ``_seq`` is
+        # the last *assigned* ingest sequence number — aborted ingests
+        # consume their seq (an abort marker records the outcome), so
+        # replay never confuses a rolled-back batch with a committed one.
+        self.durability_dir = durability_dir
+        self.checkpoint_every = int(checkpoint_every)
+        self.wal: WriteAheadLog | None = None
+        self._ckpt: Checkpointer | None = None
+        self._seq = 0
+        self._replaying = False
+        if durability_dir is not None:
+            base = Path(durability_dir)
+            self.wal = WriteAheadLog(base / "wal", fsync=wal_fsync)
+            self._ckpt = Checkpointer(str(base / "ckpt"), keep=2)
 
     # -- ingest path ------------------------------------------------------
 
@@ -313,6 +346,16 @@ class ResolveService:
         to multiplex many producers).  Readers are unaffected
         throughout: they keep resolving against the previously
         published snapshot until the commit swaps in the new one.
+
+        Failure atomicity: the whole ingest runs inside one
+        :func:`repro.core.txn.transaction`.  If *any* stage raises —
+        LSH probe, canopy replay, cover splice, grounding patch,
+        fixpoint rounds, or the commit itself — the undo journal rolls
+        every touched structure back and the service is bit-for-bit the
+        state it had before the call (``tests/test_faults.py`` pins
+        this differentially at every fault site).  With durability on,
+        the batch is WAL-appended (fsync'd) *before* any state mutates,
+        and an abort marker records a rollback so recovery skips it.
         """
         t0 = time.perf_counter()
         if ids is None:
@@ -320,14 +363,52 @@ class ResolveService:
             ids = list(range(base, base + len(names)))
         else:
             ids = [int(i) for i in ids]
+        names = list(names)
+        seq = None
+        if self.wal is not None and not self._replaying:
+            self._seq += 1
+            seq = self._seq
+            faults.maybe_fail("wal.append", names)
+            self.wal.append(seq, names, edges, ids)
+        try:
+            with txn.transaction():
+                report = self._ingest_body(t0, names, edges, ids)
+        except BaseException:
+            get_registry().counter("ingest.aborts").inc()
+            if seq is not None:
+                try:
+                    self.wal.append_abort(seq)
+                except Exception:
+                    # Best-effort: without the marker, recovery replays
+                    # the batch and (deterministically) re-aborts it.
+                    pass
+            raise
+        if (
+            seq is not None
+            and self.checkpoint_every
+            and seq % self.checkpoint_every == 0
+        ):
+            self._checkpoint(seq)
+        return report
+
+    def _ingest_body(
+        self,
+        t0: float,
+        names: list[str],
+        edges: np.ndarray | None,
+        ids: list[int],
+    ) -> IngestReport:
+        """The journaled ingest body (caller holds the open
+        transaction)."""
         bytes0 = total_upload_bytes()
         prev_matches = self.engine.m_plus
         with obs_span("ingest", batch=len(ids)):
-            d = self.delta.ingest(ids, list(names), edges)
+            d = self.delta.ingest(ids, names, edges)
             grounding_visits = 0
             grounding_splice = 0
             gg = None
             if self.grounding is not None:
+                faults.maybe_fail("grounding_splice", names)
                 with obs_span("ingest.grounding_splice"):
                     gstats = self.grounding.apply_delta(
                         d.added_pairs, d.retracted_pairs, d.new_edges
@@ -335,6 +416,7 @@ class ResolveService:
                     grounding_visits = gstats.pairs_visited
                     gg = self.grounding.grounding()
                     grounding_splice = self.grounding.last_splice_rows
+            faults.maybe_fail("rounds", names)
             stats = self.engine.advance(
                 d.packed, d.dirty, gg, retracted=d.retracted_pairs
             )
@@ -345,6 +427,17 @@ class ResolveService:
             # before or after this ingest, never mid-way, and never
             # wait on it.
             with self._lock, obs_span("ingest.commit"):
+                faults.maybe_fail("commit", names)
+                t = txn.active()
+                if t is not None:
+                    # Attribute-level saves cover both the invalidation
+                    # rebinds and the plain rebinds below; entry-level
+                    # mutations inside the (possibly kept) dicts are
+                    # journaled by _add_match itself.
+                    for a in ("uf", "_members", "_root_cache", "_frozen",
+                              "_fixpoint", "_published"):
+                        t.save_attr(self, a)
+                    t.save_len(self.reports)
                 new = stats.result.matches.difference(prev_matches)
                 if stats.n_invalidated:
                     self.uf = UnionFind()
@@ -396,6 +489,128 @@ class ResolveService:
                 )
         return report
 
+    # -- durability: checkpoint + WAL recovery ----------------------------
+
+    def _logical_state(self) -> dict:
+        """Everything needed to resume bit-for-bit, as one picklable
+        dict.  Excluded on purpose: the matcher (rebuilt by the ctor
+        from ``weights`` at recover time), the device grounding cache
+        (lazy; a cold re-ground is bit-for-bit), and the obs registry
+        (monotone counters, not logical state)."""
+        eng = self.engine
+        return {
+            "seq": self._seq,
+            "delta": self.delta,
+            "grounding": self.grounding,
+            "engine": {
+                "m_plus": eng.m_plus,
+                "pool": eng.pool,
+                "total_evals": eng.total_evals,
+                "total_rounds": eng.total_rounds,
+                "total_dispatches": eng.total_dispatches,
+            },
+            "uf": self.uf,
+            "members": self._members,
+            "fixpoint": self._fixpoint,
+            "root_cache": self._root_cache,
+            "frozen": self._frozen,
+            "published": self._published,
+            "reports": self.reports,
+        }
+
+    def _load_logical_state(self, state: dict) -> None:
+        self._seq = int(state["seq"])
+        self.delta = state["delta"]
+        self.grounding = state["grounding"]
+        eng = state["engine"]
+        self.engine.m_plus = eng["m_plus"]
+        self.engine.pool = eng["pool"]
+        self.engine.total_evals = eng["total_evals"]
+        self.engine.total_rounds = eng["total_rounds"]
+        self.engine.total_dispatches = eng["total_dispatches"]
+        self.engine.gcache = None  # re-grounds lazily, bit-for-bit
+        self.uf = state["uf"]
+        self._members = state["members"]
+        self._fixpoint = state["fixpoint"]
+        self._root_cache = state["root_cache"]
+        self._frozen = state["frozen"]
+        self._published = state["published"]
+        self.reports = state["reports"]
+
+    def _checkpoint(self, seq: int) -> None:
+        """Snapshot the logical state, then rotate + GC the WAL so
+        recovery replays only the post-checkpoint tail.  Ordering
+        matters: the checkpoint rename commits *before* any WAL segment
+        is dropped, so a crash anywhere in between only leaves extra
+        (idempotently skippable) WAL records behind."""
+        blob = np.frombuffer(
+            pickle.dumps(self._logical_state(),
+                         protocol=pickle.HIGHEST_PROTOCOL),
+            dtype=np.uint8,
+        )
+        self._ckpt.save(seq, {"service": {"blob": blob}}, meta={"seq": seq})
+        self.wal.rotate(seq + 1)
+        self.wal.gc(seq)
+        reg = get_registry()
+        reg.counter("ckpt.saves").inc()
+        reg.gauge("ckpt.last_seq").set(seq)
+
+    @classmethod
+    def recover(cls, durability_dir: str, **ctor_kwargs) -> "ResolveService":
+        """Rebuild a service from ``durability_dir``: restore the latest
+        checkpoint (if any), then replay the WAL tail — committed
+        records past the checkpoint, in sequence order, skipping
+        aborted ones.  ``ctor_kwargs`` must match the original
+        construction (scheme/weights/thresholds...); the matcher and
+        device caches are rebuilt, everything logical comes from disk.
+        The result is bit-for-bit the fixpoint of an uninterrupted run
+        over the same committed batches (schedule invariance)."""
+        svc = cls(durability_dir=durability_dir, **ctor_kwargs)
+        t0 = time.perf_counter()
+        ckpt_seq = 0
+        step = svc._ckpt.latest_step()
+        if step is not None:
+            flat, meta = svc._ckpt.restore_raw(step)
+            svc._load_logical_state(
+                pickle.loads(flat["service|blob"].tobytes())
+            )
+            ckpt_seq = int(meta.get("seq", step))
+        records, aborted = WriteAheadLog.scan(svc.wal.directory)
+        replayed = 0
+        svc._replaying = True
+        try:
+            for rec in records:
+                if rec.seq <= ckpt_seq or rec.seq in aborted:
+                    continue
+                try:
+                    svc.ingest(rec.names, rec.edges, ids=rec.ids)
+                except Exception:
+                    # The live run crashed before this batch's abort
+                    # marker hit disk; the replay re-derives the same
+                    # abort and rollback restores pre-batch state.
+                    pass
+                replayed += 1
+        finally:
+            svc._replaying = False
+        svc._seq = max(
+            [svc._seq, ckpt_seq]
+            + [r.seq for r in records]
+            + list(aborted)
+        )
+        reg = get_registry()
+        reg.counter("recover.replayed").inc(replayed)
+        reg.histogram("recover.wall_ms").observe(
+            (time.perf_counter() - t0) * 1e3
+        )
+        return svc
+
+    def close(self) -> None:
+        """Release durability file handles (safe to call twice)."""
+        if self.wal is not None:
+            self.wal.close()
+        if self._ckpt is not None:
+            self._ckpt.wait()
+
     # -- query path -------------------------------------------------------
 
     @property
@@ -416,12 +631,23 @@ class ResolveService:
         ``_lock``), keeping the root -> members map *and* the freeze
         caches current, so the per-commit publish is O(touched
         clusters) and resolve queries stay O(1) dict lookups."""
+        t = txn.active()
         ra, rb = self.uf.find(a), self.uf.find(b)
+        if t is not None:
+            # Popped member sets are never mutated afterwards (merged is
+            # a fresh set), so reference saves suffice.
+            t.save_key(self._members, ra)
+            t.save_key(self._members, rb)
         ma = self._members.pop(ra, {ra})
         mb = self._members.pop(rb, {rb})
         self.uf.union(a, b)
         merged = ma | mb
         r = self.uf.find(a)
+        if t is not None:
+            t.save_key(self._members, r)
+            t.save_key(self._frozen, ra)
+            t.save_key(self._frozen, rb)
+            t.save_key(self._frozen, r)
         self._members[r] = merged
         # freeze caches: new sorted array per touched cluster, stale
         # root entries retargeted (fresh array, never in-place — the
@@ -431,6 +657,8 @@ class ResolveService:
         self._frozen[r] = np.asarray(sorted(merged), dtype=np.int64)
         for e in merged:
             if self._root_cache.get(e) != r:
+                if t is not None:
+                    t.save_key(self._root_cache, e)
                 self._root_cache[e] = r
 
     def snapshot(self) -> ResolveSnapshot:

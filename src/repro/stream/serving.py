@@ -39,13 +39,27 @@ Thread-safety contract:
   the service's lock-free published-snapshot path: they never block on
   queued or in-flight ingests.
 
+**Graceful degradation** (the failure half of ``docs/SERVING.md``): a
+flush that raises is retried up to ``ServingConfig.max_retries`` times
+with capped exponential backoff (``backoff_base_ms`` doubling up to
+``backoff_max_ms``) — the service's transactional ingest guarantees a
+failed attempt left no state behind, so a retry is safe by
+construction.  A batch that still fails is **bisected**: each half
+retries independently, recursively, until the failure is isolated to a
+single request, which is quarantined (its ticket fails with the
+original error) while every innocent co-batched ticket commits.  Ids
+are assigned per attempt from a local cursor and committed only on
+success, so an aborted flush never burns id space or mutates tickets.
+
 Observability (the ``serve.*`` families, catalogued in
 ``docs/ARCHITECTURE.md``): gauge ``serve.queue.depth``; histograms
 ``serve.batch.coalesced_size`` / ``serve.batch.requests`` /
-``serve.queue.wait_ms``; counters ``serve.requests``,
-``serve.entities``, ``serve.batches``, ``serve.admission.shed``,
-``serve.errors``; span ``serve.coalesce`` wrapping each flush (the
-``ingest`` span nests inside it).
+``serve.queue.wait_ms`` / ``serve.backoff_ms``; counters
+``serve.requests``, ``serve.entities``, ``serve.batches``,
+``serve.admission.shed``, ``serve.errors``, ``serve.retries``,
+``serve.quarantined``, ``serve.faults.flush``,
+``serve.faults.bisections``; span ``serve.coalesce`` wrapping each
+flush (the ``ingest`` span nests inside it).
 """
 
 from __future__ import annotations
@@ -90,6 +104,13 @@ class ServingConfig:
     # "block": submit waits for queue space (backpressure);
     # "reject": submit raises AdmissionError immediately (shed)
     admission: str = "block"
+    # degradation: a failed flush retries this many times (per batch or
+    # bisected sub-batch) before the bisection/quarantine path takes over
+    max_retries: int = 2
+    # backoff before retry attempt k: min(backoff_max_ms,
+    # backoff_base_ms * 2**(k-1)) milliseconds
+    backoff_base_ms: float = 1.0
+    backoff_max_ms: float = 50.0
 
     def __post_init__(self):
         if self.max_batch < 1:
@@ -102,6 +123,10 @@ class ServingConfig:
             raise ValueError(
                 f"admission must be block|reject, got {self.admission!r}"
             )
+        if self.max_retries < 0:
+            raise ValueError("max_retries must be >= 0")
+        if self.backoff_base_ms < 0 or self.backoff_max_ms < 0:
+            raise ValueError("backoff budgets must be >= 0")
 
 
 class IngestTicket:
@@ -250,6 +275,9 @@ class ServingFrontend:
             if len(self._q) >= self.cfg.max_queue:
                 if self.cfg.admission == "reject":
                     self._reg.counter("serve.admission.shed").inc()
+                    # keep the gauge honest on the shed path too — the
+                    # queue didn't change, but the sample is fresh
+                    self._reg.gauge("serve.queue.depth").set(len(self._q))
                     raise AdmissionError(
                         f"queue at max_queue={self.cfg.max_queue}, "
                         "request shed"
@@ -266,6 +294,7 @@ class ServingFrontend:
                     )
                     if remaining is not None and remaining <= 0:
                         self._reg.counter("serve.admission.shed").inc()
+                        self._reg.gauge("serve.queue.depth").set(len(self._q))
                         raise AdmissionError(
                             "blocked submit timed out waiting for queue "
                             "space, request shed"
@@ -354,19 +383,96 @@ class ServingFrontend:
             self._not_full.notify_all()
         return batch
 
-    def _assign_ids(self, batch: list[IngestTicket]) -> list[int]:
-        """Fill in auto-assigned ids (worker-thread-only counter) and
-        return the coalesced id list, queue order preserved."""
+    def _plan_ids(
+        self, batch: list[IngestTicket], cursor: int
+    ) -> tuple[list[list[int]], list[int], int]:
+        """Plan the batch's id assignment from a *local* cursor, queue
+        order preserved, without touching ticket or frontend state —
+        ``self._next_id`` and ``ticket.ids`` commit only after the
+        ingest succeeds, so an aborted flush neither burns id space nor
+        leaves tickets claiming ids their names never received."""
+        per: list[list[int]] = []
         out: list[int] = []
         for t in batch:
             if t.ids is None:
-                t.ids = list(range(self._next_id, self._next_id + len(t.names)))
+                tids = list(range(cursor, cursor + len(t.names)))
             else:
-                t.ids = [int(i) for i in t.ids]
-            if t.ids:
-                self._next_id = max(self._next_id, max(t.ids) + 1)
-            out.extend(t.ids)
-        return out
+                tids = [int(i) for i in t.ids]
+            if tids:
+                cursor = max(cursor, max(tids) + 1)
+            per.append(tids)
+            out.extend(tids)
+        return per, out, cursor
+
+    def _ingest_once(self, batch: list[IngestTicket]) -> IngestReport:
+        """One ingest attempt; commits the id assignment on success."""
+        per, ids, cursor = self._plan_ids(batch, self._next_id)
+        names = [nm for t in batch for nm in t.names]
+        edge_arrays = [
+            np.asarray(t.edges, dtype=np.int64)
+            for t in batch
+            if t.edges is not None and len(t.edges)
+        ]
+        edges = np.vstack(edge_arrays) if edge_arrays else None
+        report = self.service.ingest(names, edges, ids=ids)
+        self._next_id = cursor
+        for t, tids in zip(batch, per):
+            t.ids = tids
+        return report
+
+    def _try_ingest(
+        self, batch: list[IngestTicket]
+    ) -> BaseException | None:
+        """Ingest ``batch`` with capped-exponential-backoff retries.
+        Settles every ticket and returns None on success; returns the
+        last error once ``max_retries`` retries are exhausted (a retry
+        is always safe: the transactional ingest rolled the failed
+        attempt back completely)."""
+        last: BaseException | None = None
+        for attempt in range(self.cfg.max_retries + 1):
+            if attempt:
+                delay_ms = min(
+                    self.cfg.backoff_max_ms,
+                    self.cfg.backoff_base_ms * 2 ** (attempt - 1),
+                )
+                self._reg.counter("serve.retries").inc()
+                self._reg.histogram("serve.backoff_ms").observe(delay_ms)
+                time.sleep(delay_ms / 1e3)
+            try:
+                report = self._ingest_once(batch)
+            except BaseException as err:
+                self._reg.counter("serve.faults.flush").inc()
+                last = err
+                continue
+            self._reg.counter("serve.batches").inc()
+            self._reg.histogram("serve.batch.coalesced_size").observe(
+                sum(len(t.names) for t in batch)
+            )
+            self._reg.histogram("serve.batch.requests").observe(len(batch))
+            for t in batch:
+                t._resolve(report)
+            return None
+        return last
+
+    def _settle(self, batch: list[IngestTicket]) -> None:
+        """Commit ``batch``, degrading gracefully: retry, then bisect a
+        still-failing batch so the poisoned request is isolated down to
+        a singleton and quarantined (ticket fails with the original
+        error) while innocent co-batched tickets commit.  Coalescing is
+        a schedule change only (service invariant), so splitting a
+        batch never changes the fixpoint the survivors reach."""
+        err = self._try_ingest(batch)
+        if err is None:
+            return
+        if len(batch) == 1:
+            self._reg.counter("serve.quarantined").inc()
+            self._reg.counter("serve.errors").inc()
+            batch[0]._fail(err)
+            return
+        self._reg.counter("serve.faults.bisections").inc()
+        mid = len(batch) // 2
+        self._settle(batch[:mid])
+        self._settle(batch[mid:])
 
     def _flush(self, batch: list[IngestTicket]) -> None:
         """Run one coalesced ingest and settle every ticket in it."""
@@ -376,26 +482,7 @@ class ServingFrontend:
             self._reg.histogram("serve.queue.wait_ms").observe(
                 (t_flush - t.t_enq) * 1e3
             )
-        try:
-            with obs_span(
-                "serve.coalesce", requests=len(batch), entities=n_entities
-            ):
-                ids = self._assign_ids(batch)
-                names = [nm for t in batch for nm in t.names]
-                edge_arrays = [
-                    np.asarray(t.edges, dtype=np.int64)
-                    for t in batch
-                    if t.edges is not None and len(t.edges)
-                ]
-                edges = np.vstack(edge_arrays) if edge_arrays else None
-                report = self.service.ingest(names, edges, ids=ids)
-        except BaseException as err:  # settle tickets, keep serving
-            self._reg.counter("serve.errors").inc()
-            for t in batch:
-                t._fail(err)
-            return
-        self._reg.counter("serve.batches").inc()
-        self._reg.histogram("serve.batch.coalesced_size").observe(n_entities)
-        self._reg.histogram("serve.batch.requests").observe(len(batch))
-        for t in batch:
-            t._resolve(report)
+        with obs_span(
+            "serve.coalesce", requests=len(batch), entities=n_entities
+        ):
+            self._settle(batch)

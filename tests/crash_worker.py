@@ -1,0 +1,44 @@
+"""Subprocess entry for the crash-recovery tests: a worker that gets
+killed mid-ingest.
+
+Usage::
+
+    python tests/crash_worker.py <durability_dir> <scheme> <site> <ckpt_every>
+
+Ingests the shared ``faultcorpus`` schedule with durability on and a
+crash plan armed at ``site`` hit 3 — so the first two batches commit
+cleanly (exercising the checkpoint at ``ckpt_every=2``) and the third
+dies at the injected site via ``os._exit(CRASH_EXIT_CODE)``: no
+unwinding, no flush, no atexit, exactly a SIGKILL'd worker.  Exits 0
+only if the site was never reached (the parent asserts it was).
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+
+def main() -> int:
+    dur_dir, scheme, site, ckpt_every = sys.argv[1:5]
+
+    import faultcorpus
+    from repro import faults
+    from repro.faults import FaultPlan
+    from repro.stream import ResolveService
+
+    svc = ResolveService(
+        scheme=scheme,
+        durability_dir=dur_dir,
+        checkpoint_every=int(ckpt_every),
+    )
+    faults.install(FaultPlan.fail_once(site, hit=3, crash=True))
+    for b in faultcorpus.batches():
+        svc.ingest(b.names, b.edges, ids=b.ids)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,41 @@
+"""Shared deterministic arrival schedule for the fault-injection tests.
+
+Both the in-process tests (``tests/test_faults.py``) and the
+crash-recovery subprocess (``tests/crash_worker.py``) build the exact
+same micro-batch schedule from here, so the parent process can compute
+the uninterrupted baseline a killed-and-recovered child must land on
+bit-for-bit.
+"""
+
+from __future__ import annotations
+
+from repro.data.synthetic import SynthConfig, arrival_stream, make_dataset
+
+N_BATCHES = 4
+
+
+def batches():
+    ds = make_dataset(SynthConfig.hepth(scale=0.02, seed=3))
+    return arrival_stream(ds, N_BATCHES)
+
+
+def run_uninterrupted(scheme: str = "smp", **kwargs):
+    """The baseline: every batch ingested with no faults injected."""
+    from repro.stream import ResolveService
+
+    svc = ResolveService(scheme=scheme, **kwargs)
+    for b in batches():
+        svc.ingest(b.names, b.edges, ids=b.ids)
+    return svc
+
+
+# The adversarial canopy re-split corpus (mirrors
+# tests/test_stream.py::test_resplit_retraction_still_equals_batch): a
+# near-duplicate clique larger than k_core whose second interleaved
+# half forces a re-split, retracting candidate pairs — the schedule
+# that exercises the engine's invalidation path under rollback.
+RESPLIT_NAMES = [
+    f"john smithsonian{chr(97 + i // 26)}{chr(97 + i % 26)}" for i in range(28)
+]
+RESPLIT_FIRST = [i for i in range(28) if i % 2 == 0]
+RESPLIT_SECOND = [i for i in range(28) if i % 2 == 1]

@@ -1,0 +1,428 @@
+"""Fault tolerance (repro.faults + the transactional/durable service).
+
+Four properties, each pinned differentially:
+
+1. **Rollback**: an ingest aborted at *any* injected site leaves the
+   service bit-for-bit the state it had before the call
+   (``state_digest`` equality), across in-order, permuted, and
+   canopy-re-split (retraction) schedules, and leaves zero trace in the
+   downstream fixpoint once the stream continues.
+2. **Durability**: a worker ``os._exit``-killed at any site recovers
+   from checkpoint + WAL tail to the uninterrupted run's digest.
+3. **Isolation**: a poisoned request quarantines alone; innocent
+   co-batched tickets commit (bisection).
+4. **Degradation**: transient faults retry with capped backoff; id
+   assignment commits only on success.
+"""
+
+from __future__ import annotations
+
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+import faultcorpus
+from repro import faults, obs
+from repro.faults import CRASH_EXIT_CODE, FaultPlan, InjectedFault, PoisonedRequest
+from repro.stream import ResolveService
+from repro.stream.digest import state_digest
+from repro.stream.serving import AdmissionError, ServingConfig, ServingFrontend
+from repro.stream.wal import WriteAheadLog
+
+REPO = Path(__file__).resolve().parent.parent
+
+SMP_SITES = ("lsh", "replay", "cover_splice", "rounds", "commit")
+MMP_SITES = ("lsh", "replay", "cover_splice", "grounding_splice", "rounds",
+             "commit")
+
+
+@pytest.fixture(autouse=True)
+def _clean_faults():
+    faults.clear()
+    yield
+    faults.clear()
+
+
+@pytest.fixture(scope="module")
+def batches():
+    return faultcorpus.batches()
+
+
+@pytest.fixture(scope="module")
+def base_digest_smp():
+    return state_digest(faultcorpus.run_uninterrupted("smp"))
+
+
+@pytest.fixture(scope="module")
+def base_digest_mmp():
+    return state_digest(faultcorpus.run_uninterrupted("mmp"))
+
+
+def _ingest(svc, b):
+    return svc.ingest(b.names, b.edges, ids=b.ids)
+
+
+# ---------------------------------------------------------------------------
+# 1. Transactional rollback: aborted ingest == never submitted
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "scheme,site",
+    [("smp", s) for s in SMP_SITES] + [("mmp", s) for s in MMP_SITES],
+)
+def test_rollback_differential(scheme, site, batches, base_digest_smp,
+                               base_digest_mmp):
+    """Abort batch 3 at every site; state must equal pre-submit exactly,
+    and finishing the stream must reach the clean run's digest."""
+    svc = ResolveService(scheme=scheme)
+    _ingest(svc, batches[0])
+    _ingest(svc, batches[1])
+    before = state_digest(svc)
+    with faults.injected(FaultPlan.fail_once(site)):
+        with pytest.raises(InjectedFault):
+            _ingest(svc, batches[2])
+    assert state_digest(svc) == before, f"rollback left residue at {site}"
+    _ingest(svc, batches[2])
+    _ingest(svc, batches[3])
+    base = base_digest_smp if scheme == "smp" else base_digest_mmp
+    assert state_digest(svc) == base, f"abort at {site} perturbed the stream"
+
+
+@pytest.mark.parametrize("order", [[1, 0, 3, 2], [3, 2, 1, 0]])
+def test_rollback_differential_permuted_schedule(order, batches):
+    """Same differential under out-of-order arrival (id holes)."""
+    clean = ResolveService(scheme="smp")
+    for i in order:
+        _ingest(clean, batches[i])
+    svc = ResolveService(scheme="smp")
+    for k, i in enumerate(order):
+        if k == 2:  # abort mid-schedule, then re-run the same batch
+            before = state_digest(svc)
+            with faults.injected(FaultPlan.fail_once("rounds")):
+                with pytest.raises(InjectedFault):
+                    _ingest(svc, batches[i])
+            assert state_digest(svc) == before
+        _ingest(svc, batches[i])
+    assert state_digest(svc) == state_digest(clean)
+
+
+@pytest.mark.parametrize("scheme", ["smp", "mmp"])
+def test_rollback_differential_retraction_schedule(scheme):
+    """Abort the canopy-re-split ingest (candidate retraction + match
+    invalidation) at the engine site; rollback must restore the
+    pre-split cover, grounding, and message pool exactly."""
+    names, first, second = (faultcorpus.RESPLIT_NAMES,
+                            faultcorpus.RESPLIT_FIRST,
+                            faultcorpus.RESPLIT_SECOND)
+    clean = ResolveService(scheme=scheme)
+    clean.ingest([names[i] for i in first], ids=first)
+    clean.ingest([names[i] for i in second], ids=second)
+    assert clean.reports[-1].n_invalidated > 0  # the retraction fired
+
+    svc = ResolveService(scheme=scheme)
+    svc.ingest([names[i] for i in first], ids=first)
+    before = state_digest(svc)
+    for site in ("cover_splice", "rounds", "commit"):
+        with faults.injected(FaultPlan.fail_once(site)):
+            with pytest.raises(InjectedFault):
+                svc.ingest([names[i] for i in second], ids=second)
+        assert state_digest(svc) == before, f"retraction rollback: {site}"
+    svc.ingest([names[i] for i in second], ids=second)
+    assert state_digest(svc) == state_digest(clean)
+
+
+def test_rollback_on_natural_error(batches):
+    """Not just injected faults: a real validation error (duplicate id)
+    mid-ingest also rolls back to pre-submit state."""
+    svc = ResolveService(scheme="smp")
+    _ingest(svc, batches[0])
+    before = state_digest(svc)
+    with pytest.raises(ValueError):
+        _ingest(svc, batches[0])  # same ids again
+    assert state_digest(svc) == before
+    _ingest(svc, batches[1])  # stream continues cleanly
+
+
+def test_wal_append_fault_rolls_back_and_recovers(tmp_path, batches):
+    """A fault at the WAL append site aborts before any state mutates;
+    the consumed sequence number is a harmless gap on replay."""
+    svc = ResolveService(scheme="smp", durability_dir=str(tmp_path))
+    _ingest(svc, batches[0])
+    before = state_digest(svc)
+    with faults.injected(FaultPlan.fail_once("wal.append")):
+        with pytest.raises(InjectedFault):
+            _ingest(svc, batches[1])
+    assert state_digest(svc) == before
+    _ingest(svc, batches[1])
+    svc.close()
+    rec = ResolveService.recover(str(tmp_path), scheme="smp")
+    assert state_digest(rec) == state_digest(svc)
+    rec.close()
+
+
+# ---------------------------------------------------------------------------
+# 2. Durability: WAL + checkpoint recovery
+# ---------------------------------------------------------------------------
+
+
+def test_wal_roundtrip_and_abort_markers(tmp_path):
+    wal = WriteAheadLog(tmp_path)
+    wal.append(1, ["a"], None, [0])
+    wal.append(2, ["b"], np.array([[0, 1]], dtype=np.int64), [1])
+    wal.append_abort(2)
+    wal.append(3, ["c"], None, [2])
+    wal.close()
+    records, aborted = WriteAheadLog.scan(tmp_path)
+    assert [r.seq for r in records] == [1, 2, 3]
+    assert aborted == {2}
+    assert records[1].names == ["b"]
+    assert records[1].edges.tolist() == [[0, 1]]
+
+
+def test_wal_torn_tail_truncated(tmp_path):
+    wal = WriteAheadLog(tmp_path)
+    wal.append(1, ["a"], None, [0])
+    wal.append(2, ["b"], None, [1])
+    wal.close()
+    seg = sorted(tmp_path.glob("wal-*.log"))[-1]
+    good = seg.stat().st_size
+    with open(seg, "ab") as f:  # a crash mid-append: garbage tail
+        f.write(b"\xff" * 11)
+    records, _ = WriteAheadLog.scan(tmp_path)
+    assert [r.seq for r in records] == [1, 2]
+    assert seg.stat().st_size == good  # scan repaired the tail
+    wal = WriteAheadLog(tmp_path)  # and the log is appendable again
+    wal.append(3, ["c"], None, [2])
+    wal.close()
+    records, _ = WriteAheadLog.scan(tmp_path)
+    assert [r.seq for r in records] == [1, 2, 3]
+
+
+def test_wal_rotate_gc(tmp_path):
+    wal = WriteAheadLog(tmp_path)
+    wal.append(1, ["a"], None, [0])
+    wal.append(2, ["b"], None, [1])
+    wal.rotate(3)
+    wal.append(3, ["c"], None, [2])
+    assert wal.gc(2) == 1  # the seq 1-2 segment is checkpoint-covered
+    wal.close()
+    records, _ = WriteAheadLog.scan(tmp_path)
+    assert [r.seq for r in records] == [3]
+
+
+def test_checkpoint_cadence_and_recovery(tmp_path, batches):
+    svc = ResolveService(
+        scheme="mmp", durability_dir=str(tmp_path), checkpoint_every=2
+    )
+    for b in batches:
+        _ingest(svc, b)
+    want = state_digest(svc)
+    svc.close()
+    assert svc._ckpt.all_steps() == [2, 4]
+    rec = ResolveService.recover(str(tmp_path), scheme="mmp",
+                                 checkpoint_every=2)
+    assert state_digest(rec) == want
+    assert rec._seq == 4  # fresh ingests resume past the recovered tail
+    rec.close()
+
+
+def test_wal_only_recovery(tmp_path, batches, base_digest_smp):
+    svc = ResolveService(scheme="smp", durability_dir=str(tmp_path))
+    for b in batches:
+        _ingest(svc, b)
+    svc.close()
+    rec = ResolveService.recover(str(tmp_path), scheme="smp")
+    assert state_digest(rec) == base_digest_smp
+    rec.close()
+
+
+@pytest.mark.parametrize("site", faults.SITES)
+def test_crash_recovery_matrix(site, tmp_path, batches, base_digest_mmp):
+    """Kill the worker (os._exit, no unwinding) at every fault site
+    during batch 3 — including between the WAL append and the commit —
+    then recover and finish the stream: the digest must equal the
+    uninterrupted run's, bit for bit."""
+    dur = tmp_path / "dur"
+    proc = subprocess.run(
+        [sys.executable, str(REPO / "tests" / "crash_worker.py"),
+         str(dur), "mmp", site, "2"],
+        cwd=REPO,
+        capture_output=True,
+        timeout=600,
+    )
+    assert proc.returncode == CRASH_EXIT_CODE, (
+        f"worker did not crash at {site}: rc={proc.returncode}\n"
+        f"{proc.stderr.decode()[-2000:]}"
+    )
+    rec = ResolveService.recover(str(dur), scheme="mmp", checkpoint_every=2)
+    # seq k holds batch k-1; a crash before the append leaves a seq gap
+    # the resumed producer simply re-submits
+    for b in batches[rec._seq:]:
+        _ingest(rec, b)
+    assert state_digest(rec) == base_digest_mmp, f"crash at {site} diverged"
+    rec.close()
+
+
+# ---------------------------------------------------------------------------
+# 3. Poison-batch isolation (serving front-end bisection)
+# ---------------------------------------------------------------------------
+
+
+def test_poison_bisection_settles_innocents(batches):
+    """Four coalesced requests, one poisoned: bisection must land the
+    poison alone in quarantine while every innocent ticket commits."""
+    obs.reset()
+    b = batches[0]
+    bad = b.names[0]
+    svc = ResolveService(scheme="smp")
+    cfg = ServingConfig(max_batch=64, max_delay_ms=100.0, max_retries=1,
+                        backoff_base_ms=0.1, backoff_max_ms=0.5)
+    fe = ServingFrontend(svc, cfg, start=False)
+    tickets = [fe.submit([nm]) for nm in b.names[:4]]
+    faults.install(FaultPlan(poison_names={bad}, poison_site="rounds"))
+    fe.start()
+    assert fe.drain(timeout=60.0)
+    with pytest.raises(PoisonedRequest):
+        tickets[0].wait(timeout=10.0)
+    reports = [t.wait(timeout=10.0) for t in tickets[1:]]
+    assert all(r.new_matches >= 0 for r in reports)
+    # the innocents' names are resolvable; ids were committed to tickets
+    for t in tickets[1:]:
+        assert t.ids is not None and len(t.ids) == 1
+        assert fe.resolve(t.ids[0]) is not None
+    assert tickets[0].ids is None  # the quarantined ticket never got ids
+    reg = obs.get_registry()
+    assert reg.value("serve.quarantined") == 1
+    assert reg.value("serve.errors") == 1  # once per quarantine, not per try
+    assert reg.value("serve.faults.bisections") >= 1
+    faults.clear()
+    fe.close()
+
+
+# ---------------------------------------------------------------------------
+# 4. Retry/backoff degradation + id-assignment regression
+# ---------------------------------------------------------------------------
+
+
+def test_transient_fault_retries_to_success(batches):
+    """A fault that clears after two hits: the flush retries through it
+    and every ticket commits — no bisection, no quarantine."""
+    obs.reset()
+    b = batches[0]
+    svc = ResolveService(scheme="smp")
+    cfg = ServingConfig(max_delay_ms=50.0, max_retries=3,
+                        backoff_base_ms=0.1, backoff_max_ms=0.5)
+    fe = ServingFrontend(svc, cfg, start=False)
+    tickets = [fe.submit([nm]) for nm in b.names[:3]]
+    faults.install(FaultPlan(site_hits={"rounds": {1, 2}}))
+    fe.start()
+    assert fe.drain(timeout=60.0)
+    for t in tickets:
+        t.wait(timeout=10.0)
+    reg = obs.get_registry()
+    assert reg.value("serve.retries") == 2
+    assert reg.value("serve.faults.flush") == 2
+    assert reg.value("serve.quarantined") == 0
+    assert reg.value("serve.errors") == 0
+    faults.clear()
+    fe.close()
+
+
+def test_backoff_is_capped_under_sustained_faults(batches):
+    """Every retry's backoff obeys min(max, base * 2**k) — the cap must
+    bind — and exhaustion quarantines with the original error."""
+    obs.reset()
+    b = batches[0]
+    svc = ResolveService(scheme="smp")
+    cfg = ServingConfig(max_delay_ms=10.0, max_retries=5,
+                        backoff_base_ms=1.0, backoff_max_ms=3.0)
+    fe = ServingFrontend(svc, cfg, start=False)
+    ticket = fe.submit([b.names[0]])
+    faults.install(FaultPlan(site_hits={"rounds": frozenset(range(1, 50))}))
+    fe.start()
+    assert fe.drain(timeout=60.0)
+    with pytest.raises(InjectedFault):
+        ticket.wait(timeout=10.0)
+    summ = obs.get_registry().histogram("serve.backoff_ms").summary()
+    assert summ["count"] == 5
+    assert summ["max"] <= 3.0  # the cap binds (uncapped would reach 16)
+    assert obs.get_registry().value("serve.quarantined") == 1
+    faults.clear()
+    fe.close()
+
+
+def test_failed_flush_commits_no_ids(batches):
+    """Satellite regression: a failed flush must not advance the id
+    allocator or mutate ticket.ids — the next successful flush starts
+    exactly where the failed one would have."""
+    obs.reset()
+    b = batches[0]
+    svc = ResolveService(scheme="smp")
+    cfg = ServingConfig(max_delay_ms=10.0, max_retries=0)
+    fe = ServingFrontend(svc, cfg, start=False)
+    doomed = fe.submit(list(b.names[:2]))
+    faults.install(FaultPlan(site_hits={"rounds": frozenset(range(1, 50))}))
+    fe.start()
+    assert fe.drain(timeout=60.0)
+    with pytest.raises(InjectedFault):
+        doomed.wait(timeout=10.0)
+    assert doomed.ids is None  # never committed
+    assert fe._next_id == 0  # no id space burned
+    faults.clear()
+    ok = fe.submit(list(b.names[:2]))
+    ok.wait(timeout=30.0)
+    assert ok.ids == [0, 1]  # allocation starts where nothing happened
+    fe.close()
+
+
+def test_queue_depth_gauge_fresh_on_shed():
+    """Satellite: the serve.queue.depth gauge is refreshed on the shed
+    path, not only inside batch collection."""
+    obs.reset()
+    svc = ResolveService(scheme="smp")
+    cfg = ServingConfig(max_queue=1, admission="reject", max_delay_ms=0.0)
+    fe = ServingFrontend(svc, cfg, start=False)
+    fe.submit(["a name"])
+    with pytest.raises(AdmissionError):
+        fe.submit(["b name"])
+    reg = obs.get_registry()
+    assert reg.gauge("serve.queue.depth").value == 1
+    assert reg.value("serve.admission.shed") == 1
+    fe.start()
+    assert fe.drain(timeout=30.0)
+    fe.close()
+
+
+# ---------------------------------------------------------------------------
+# Chaos smoke: seeded random plans compose with rollback + retry
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_chaos_smoke_seeded(seed, batches, base_digest_smp):
+    """A seeded random fault plan (site x hit chosen from the seed):
+    ingest the stream, re-submitting any aborted batch after clearing
+    the plan — rollback must make every abort invisible, so the final
+    digest equals the clean run's regardless of seed."""
+    import os
+
+    seed = int(os.environ.get("REPRO_CHAOS_SEED", seed))
+    svc = ResolveService(scheme="smp")
+    aborted = []
+    faults.install(FaultPlan.seeded(seed))
+    try:
+        for i, b in enumerate(batches):
+            try:
+                _ingest(svc, b)
+            except InjectedFault:
+                aborted.append(i)
+                _ingest(svc, b)  # immediate retry on rolled-back state
+    finally:
+        faults.clear()
+    assert state_digest(svc) == base_digest_smp, (
+        f"seed {seed} (aborts at {aborted}) diverged"
+    )
