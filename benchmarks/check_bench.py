@@ -2,7 +2,7 @@
 
 ``python -m benchmarks.check_bench [--gate=NAME] BASELINE.json FRESH.json``
 
-Two baselines are gated, dispatched on the JSON's ``benchmark`` field;
+Three baselines are gated, dispatched on the JSON's ``benchmark`` field;
 ``--gate`` restricts the run to one invariant family (CI wires each as
 its own named step), default is every gate that applies to the file:
 
@@ -52,6 +52,17 @@ its own named step), default is every gate that applies to the file:
     under concurrent load is gated baseline-relative with generous
     slack (CI boxes are noisy; losing the lock-free read path
     multiplies p99 by ingest wall time, far past it).
+* ``BENCH_shard.json``
+  - ``shard``: the sharded-serving block — the state digest must be
+    identical across shard counts {1, 2, 4} (bit-for-bit the
+    single-host fixpoint; absolute, no slack), every replica set must
+    agree among itself, ingest throughput and aggregate resolve QPS
+    must be present and positive, and the 2-shard QPS scaling
+    efficiency must clear an absolute floor wherever the measuring
+    host has >= 2 cores (reads are replica-local, so read capacity is
+    the axis that scales with the shard count).  A missing
+    ``BENCH_shard.json`` fails the step loudly rather than reading as
+    "gate does not apply".
 
 Wall times are recorded in the JSON for the trajectory but never gated
 (CI machines are noisy).
@@ -75,7 +86,7 @@ STREAM_REL_SLACK = 2.0
 STREAM_ABS_SLACK = 1.0
 
 GATES = ("dispatch", "promotion", "stream", "lru", "transfer", "tails",
-         "recovery")
+         "recovery", "shard")
 
 # Durability: fsync-per-append rides on a much larger delta+fixpoint
 # ingest; a WAL that costs a tenth of the ingest p50 means the append
@@ -98,6 +109,14 @@ TAILS_P99_ABS_SLACK = 1.0  # ms
 # corpus, far past this.
 TRANSFER_REL_SLACK = 2.0
 TRANSFER_ABS_SLACK = 64.0  # bytes per unit
+
+# Sharded serving: aggregate resolve QPS at 2 shards must retain this
+# fraction of perfect 2x scaling.  Reads are replica-local (no
+# collectives), so losing the floor means reads started waiting on
+# cross-shard state.  Only enforced where two shards can actually run
+# in parallel (cpu_count >= 2, recorded in the fresh JSON) — N
+# co-scheduled replicas on one core timeshare it.
+SHARD_MIN_QPS_EFF_2 = 0.35
 
 
 def _check_dispatch(base: dict, fresh: dict, failures: list[str]) -> None:
@@ -336,6 +355,71 @@ def _check_tails(base: dict, fresh: dict, failures: list[str]) -> None:
             print(f"ok {tag}: p99 under load {p99}ms <= {limit:.2f}ms")
 
 
+def _check_shard(base: dict, fresh: dict, failures: list[str]) -> None:
+    """Sharded-serving block: bit-for-bit digest equality across shard
+    counts (absolute — the ISSUE-9 equivalence bar at benchmark scale)
+    plus the read-capacity scaling floor at 2 shards."""
+    entries = fresh.get("shards", [])
+    if not entries:
+        failures.append("shard: 'shards' block missing from fresh results")
+        return
+    want = {e.get("n_shards") for e in base.get("shards", [])} or {1, 2, 4}
+    got_counts = {e.get("n_shards") for e in entries}
+    missing = want - got_counts
+    if missing:
+        failures.append(
+            f"shard: shard counts {sorted(missing)} missing from fresh "
+            f"results (have {sorted(got_counts)})"
+        )
+    by_n = {e["n_shards"]: e for e in entries}
+    for n, e in sorted(by_n.items()):
+        tag = f"shard[n={n}]"
+        for key in ("refs", "ingest_refs_per_s", "resolve_qps_total"):
+            if not e.get(key):
+                failures.append(f"{tag}: {key} is 0/missing")
+        if not e.get("digest"):
+            failures.append(f"{tag}: digest missing")
+        if e.get("replicas_agree") is not True:
+            failures.append(
+                f"{tag}: replicas_agree is {e.get('replicas_agree')!r} — "
+                "the cross-replica digest all-gather disagreed"
+            )
+        else:
+            print(f"ok {tag}: {e.get('ingest_refs_per_s')} refs/s ingest, "
+                  f"{e.get('resolve_qps_total')} QPS, replicas agree")
+    digests = {e.get("digest") for e in entries}
+    if len(digests) != 1:
+        failures.append(
+            "shard: state digests diverged across shard counts — the "
+            "sharded fixpoint is not bit-for-bit the single-host one: "
+            + ", ".join(
+                f"n={n}:{str(e.get('digest'))[:12]}"
+                for n, e in sorted(by_n.items())
+            )
+        )
+    else:
+        print(f"ok shard: one digest across {sorted(by_n)} shards "
+              "(bit-for-bit the 1-shard fixpoint)")
+    e2 = by_n.get(2)
+    if e2 is not None:
+        eff = e2.get("qps_scaling_eff")
+        if eff is None:
+            failures.append("shard[n=2]: qps_scaling_eff missing")
+        elif (fresh.get("cpu_count") or 1) < 2:
+            print(f"note shard[n=2]: qps_scaling_eff {eff} not gated — "
+                  f"measured on cpu_count={fresh.get('cpu_count')}, two "
+                  "shards cannot run in parallel there")
+        elif eff < SHARD_MIN_QPS_EFF_2:
+            failures.append(
+                f"shard[n=2]: qps_scaling_eff {eff} < floor "
+                f"{SHARD_MIN_QPS_EFF_2} — aggregate resolve QPS no longer "
+                "scales with the shard count"
+            )
+        else:
+            print(f"ok shard[n=2]: qps_scaling_eff {eff} >= "
+                  f"{SHARD_MIN_QPS_EFF_2}")
+
+
 def main(argv: list[str]) -> int:
     gate = "all"
     args = []
@@ -350,16 +434,27 @@ def main(argv: list[str]) -> int:
     if len(args) != 2:
         print(__doc__)
         return 2
-    with open(args[0]) as f:
-        base = json.load(f)
-    with open(args[1]) as f:
-        fresh = json.load(f)
+    try:
+        with open(args[0]) as f:
+            base = json.load(f)
+        with open(args[1]) as f:
+            fresh = json.load(f)
+    except OSError as e:
+        # a gated baseline that was never produced must fail its CI
+        # step loudly, not slip through as "gate does not apply"
+        print(f"BENCH GATE INPUT MISSING: {e}")
+        return 1
     failures: list[str] = []
     is_stream = (
         fresh.get("benchmark") == "stream_throughput" or "throughput" in fresh
     )
+    is_shard = fresh.get("benchmark") == "shard_scaling" or "shards" in fresh
     ran = False
-    if is_stream:
+    if is_shard:
+        if gate in ("all", "shard"):
+            _check_shard(base, fresh, failures)
+            ran = True
+    elif is_stream:
         if gate in ("all", "stream"):
             _check_stream_ratios(base, fresh, failures)
             ran = True

@@ -13,7 +13,8 @@ from the environment at import time.
 
 ``--json`` additionally writes the structured results of the modules
 that return them (``table1_parallel`` -> ``BENCH_parallel.json``,
-``stream_throughput`` -> ``BENCH_stream.json``) into ``--json-dir``
+``stream_throughput`` -> ``BENCH_stream.json``, ``shard_scaling`` ->
+``BENCH_shard.json``) into ``--json-dir``
 (default: the repo root).  The committed copies are the perf baseline
 trajectory; CI regenerates them at smoke scale and fails if the
 per-round host dispatch counts regress (``benchmarks.check_bench``).
@@ -46,11 +47,13 @@ MODULES = [
     ("stream_throughput", "Streaming ingest: entities/sec vs micro-batch size"),
     ("loadgen", "Serving load generator: Poisson ingest + Zipf readers"),
     ("kernels_bench", "Pallas-kernel roofline microbench"),
+    ("shard_scaling", "Sharded serving: ingest/QPS scaling vs shard count"),
 ]
 
 JSON_FILES = {
     "table1_parallel": "BENCH_parallel.json",
     "stream_throughput": "BENCH_stream.json",
+    "shard_scaling": "BENCH_shard.json",
 }
 
 

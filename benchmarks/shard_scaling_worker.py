@@ -1,0 +1,96 @@
+"""Per-shard worker for the ``shard_scaling`` benchmark.
+
+Run by path (not ``-m``) from ``benchmarks.shard_scaling``, one process
+per shard, with ``PYTHONPATH`` pointing at ``src``.  Topology comes
+from the environment — ``REPRO_SHARD_COORD`` / ``_N`` / ``_ID`` for a
+multi-process ``jax.distributed`` CPU mesh, nothing for the 1-shard
+degenerate case — and sizing from ``SHARD_BENCH_SCALE`` /
+``SHARD_BENCH_QUERIES`` / ``SHARD_BENCH_SCHEME``.  Both must be read
+before jax initializes, which is why this is a subprocess.
+
+Measures the two serving axes on its replica and prints one
+``RESULT {json}`` line:
+
+* ingest wall time over the full arrival stream (every replica ingests
+  every batch — the host state is SPMD-replicated; the bin rounds and
+  the LSH probe union are what's sharded), and
+* resolve QPS against the published snapshot under a Zipf key
+  distribution (reads are replica-local: no collectives, so read
+  capacity sums across shards).
+
+The state digest and the cross-replica agreement bit ride along so the
+benchmark doubles as an equivalence check at benchmark scale.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+
+def _zipf_keys(rng, n_ids, n_queries, s=1.2):
+    """Truncated Zipf over a shuffled id space (hot keys are arbitrary
+    ids, not the lowest ones)."""
+    import numpy as np
+
+    ranks = np.arange(1, n_ids + 1, dtype=np.float64)
+    p = ranks**-s
+    p /= p.sum()
+    perm = rng.permutation(n_ids)
+    return perm[rng.choice(n_ids, size=n_queries, p=p)]
+
+
+def main() -> None:
+    import numpy as np
+
+    from repro.stream.shard import ShardContext, ShardCoordinator
+
+    scale = float(os.environ.get("SHARD_BENCH_SCALE", "0.12"))
+    n_queries = int(os.environ.get("SHARD_BENCH_QUERIES", "2000"))
+    scheme = os.environ.get("SHARD_BENCH_SCHEME", "smp")
+
+    ctx = ShardContext.create()
+
+    from repro.data.synthetic import SynthConfig, arrival_stream, make_dataset
+
+    ds = make_dataset(SynthConfig.hepth(scale=scale, seed=7))
+    batches = arrival_stream(ds, batch_size=64)
+    coord = ShardCoordinator(ctx, scheme=scheme, parallel=True)
+
+    t0 = time.perf_counter()
+    n_refs = 0
+    for b in batches:
+        coord.ingest(list(b.names), b.edges, ids=[int(x) for x in b.ids])
+        n_refs += len(b.names)
+    ingest_s = time.perf_counter() - t0
+
+    snap = coord.snapshot()
+    keys = _zipf_keys(np.random.default_rng(0), n_refs, n_queries)
+    t0 = time.perf_counter()
+    for chunk in np.array_split(keys, max(1, n_queries // 256)):
+        snap.resolve_many([int(k) for k in chunk])
+    resolve_s = max(time.perf_counter() - t0, 1e-9)
+
+    print(
+        "RESULT "
+        + json.dumps(
+            {
+                "shard_id": ctx.shard_id,
+                "n_shards": ctx.n_shards,
+                "refs": n_refs,
+                "ingest_s": round(ingest_s, 3),
+                "ingest_refs_per_s": round(n_refs / ingest_s, 2),
+                "resolve_qps": round(n_queries / resolve_s, 1),
+                "n_queries": n_queries,
+                "digest": coord.digest(),
+                "agree": bool(coord.digests_agree()),
+            }
+        ),
+        flush=True,
+    )
+
+
+if __name__ == "__main__":
+    sys.exit(main())

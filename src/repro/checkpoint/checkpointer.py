@@ -31,6 +31,8 @@ import time
 import jax
 import numpy as np
 
+from repro import faults
+
 
 def _flatten(tree) -> dict[str, np.ndarray]:
     flat = {}
@@ -104,6 +106,9 @@ class Checkpointer:
             os.fsync(f.fileno())
         if os.path.exists(final):
             shutil.rmtree(final)
+        # a crash here leaves a complete .tmp that never shadows the
+        # previous checkpoint: latest_step only sees renamed dirs
+        faults.maybe_fail("ckpt.rename")
         os.rename(tmp, final)
         self._gc()
 

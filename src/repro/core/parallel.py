@@ -758,11 +758,18 @@ class BinRoundSpec:
     universe_size: int
 
 
-def _bin_full_round(spec: BinRoundSpec, axes, g0, g1, g2, g3, uidx, pmask,
-                    active, m_bits):
+def _bin_full_round(spec: BinRoundSpec, axes, gather, g0, g1, g2, g3, uidx,
+                    pmask, active, m_bits):
     """One full round of one bin (inside shard_map): evaluate every
     active row from cached grounding arrays, return per-slot matches,
-    component labels, and the updated replicated bitset."""
+    component labels, and the updated replicated bitset.
+
+    With ``gather=True`` (multi-process meshes) the per-row ``x``/``lab``
+    outputs are ``all_gather``-ed back to replicated inside the body:
+    the host coordinator reads them into numpy for the maximal-message
+    pool merge, and a batch-sharded global array is not addressable as a
+    whole on any single host.
+    """
     Np = spec.universe_size
     safe = jnp.minimum(uidx, Np - 1)
     inuniv = (uidx < Np) & pmask
@@ -781,6 +788,10 @@ def _bin_full_round(spec: BinRoundSpec, axes, g0, g1, g2, g3, uidx, pmask,
     bits = local
     for ax in axes:
         bits = jax.lax.psum(bits, ax)
+    if gather:
+        for ax in axes:
+            x = jax.lax.all_gather(x, ax, axis=0, tiled=True)
+            lab = jax.lax.all_gather(lab, ax, axis=0, tiled=True)
     return x, lab, (bits > 0) | m_bits
 
 
@@ -789,15 +800,18 @@ def build_bin_round_fn(spec: BinRoundSpec, mesh: Mesh, axes: tuple[str, ...]):
     """Jitted full round for one bin, always dispatched at the full bin
     shape (an active-row mask replaces host-side row gathering, so the
     program compiles once per cover instead of once per active-set
-    shape per round)."""
+    shape per round).  On a multi-process mesh the row outputs come back
+    replicated (gathered in-body) so the coordinator can read them."""
     batch_spec = P(axes)
     rep = P()
-    fn = functools.partial(_bin_full_round, spec, axes)
+    gather = kcommon.mesh_spans_processes(mesh)
+    fn = functools.partial(_bin_full_round, spec, axes, gather)
+    row_spec = rep if gather else batch_spec
     mapped = kcommon.shard_map(
         fn,
         mesh,
         (batch_spec,) * 7 + (rep,),
-        (batch_spec, batch_spec, rep),
+        (row_spec, row_spec, rep),
     )
     return jax.jit(mapped)
 
@@ -1075,8 +1089,31 @@ def _run_parallel_impl(
             g = run_grounds[k] = gcache.get(mkey, k, bins[k], bin_row_keys(k))
         return g
 
-    dev_uidx = {k: jnp.asarray(bins[k].uidx) for k in bin_ks}
-    dev_pmask = {k: jnp.asarray(bins[k].pair_mask) for k in bin_ks}
+    # Multi-process meshes: every argument of a global-mesh dispatch
+    # must be a *global* array with an explicit NamedSharding — local
+    # per-process jit outputs (the grounding cache) and host numpy are
+    # not addressable across hosts.  Grounding tensors are globalized
+    # once per (run, bin): within a run the grounds never change, and
+    # grounding is deterministic, so the bounded-cache re-fetch would be
+    # bit-identical anyway.
+    distributed = kcommon.mesh_spans_processes(mesh)
+    _global_grounds: dict[int, tuple] = {}
+
+    def dispatch_grounds(k):
+        if not distributed:
+            return ground_of(k)
+        g = _global_grounds.get(k)
+        if g is None:
+            g = _global_grounds[k] = tuple(
+                kcommon.put_sharded(np.asarray(a), mesh, axes)
+                for a in ground_of(k)
+            )
+        return g
+
+    dev_uidx = {k: kcommon.put_sharded(bins[k].uidx, mesh, axes) for k in bin_ks}
+    dev_pmask = {
+        k: kcommon.put_sharded(bins[k].pair_mask, mesh, axes) for k in bin_ks
+    }
     evictions0 = gcache.evictions
     cold0 = gcache.cold_regrounds
     gcache.begin_peak_window()
@@ -1163,11 +1200,16 @@ def _run_parallel_impl(
         fn = build_fused_fn(spec, mesh, axes)
         args = []
         for k in bin_ks:
-            args += list(ground_of(k))
-            args += [dev_uidx[k], dev_pmask[k], jnp.asarray(act_masks[k])]
+            args += list(dispatch_grounds(k))
+            args += [
+                dev_uidx[k], dev_pmask[k],
+                kcommon.put_sharded(act_masks[k], mesh, axes),
+            ]
         with obs_span("rounds.fused", kind=kind):
             bits, r, ev, hist = fn(
-                *args, jnp.asarray(m_bits), jnp.asarray(budget, jnp.int32)
+                *args,
+                kcommon.put_replicated(m_bits, mesh),
+                kcommon.put_replicated(np.asarray(budget, np.int32), mesh),
             )
             # int() blocks on the while_loop, so the span owns its time
             r = int(r)
@@ -1205,7 +1247,7 @@ def _run_parallel_impl(
         full_rounds += 1
         new_bits = m_bits.copy()
         round_msgs: list[list[int]] = []
-        m_bits_dev = jnp.asarray(m_bits)
+        m_bits_dev = kcommon.put_replicated(m_bits, mesh)
         with obs_span("rounds.full", active=len(act_list)):
             for k in bin_ks:
                 am = act_masks[k]
@@ -1220,8 +1262,8 @@ def _run_parallel_impl(
                 )
                 fn = build_bin_round_fn(spec, mesh, axes)
                 x, lab, bits = fn(
-                    *ground_of(k), dev_uidx[k], dev_pmask[k], jnp.asarray(am),
-                    m_bits_dev,
+                    *dispatch_grounds(k), dev_uidx[k], dev_pmask[k],
+                    kcommon.put_sharded(am, mesh, axes), m_bits_dev,
                 )
                 dispatches += 1
                 evals += int(am.sum())

@@ -15,6 +15,8 @@ site               fires at
 ``rounds``         the fixpoint round loop
 ``commit``         match-store commit / snapshot publication
 ``wal.append``     the write-ahead-log append (before the fsync)
+``wal.rotate``     the WAL segment rotation after a checkpoint commits
+``ckpt.rename``    the checkpoint tmp-dir -> final atomic rename
 =================  ====================================================
 
 Modes:
@@ -54,6 +56,8 @@ SITES = (
     "rounds",
     "commit",
     "wal.append",
+    "wal.rotate",
+    "ckpt.rename",
 )
 
 CRASH_EXIT_CODE = 117  # distinguishable from python tracebacks (1) and signals

@@ -92,3 +92,66 @@ def pick_tile(n: int, preferred: int = 128, floor: int = 8) -> int:
 
 def assert_allclose(a, b, rtol=1e-5, atol=1e-5, msg=""):
     np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=rtol, atol=atol, err_msg=msg)
+
+
+# ---------------------------------------------------------------------------
+# Multi-process mesh helpers (CPU-mesh sharded serving)
+# ---------------------------------------------------------------------------
+
+
+def mesh_spans_processes(mesh) -> bool:
+    """True when the mesh covers devices from more than one JAX process.
+
+    On a single-process mesh (the normal case, including
+    ``--xla_force_host_platform_device_count`` multi-device CPU), plain
+    ``jnp.asarray`` uploads are valid global arrays for ``shard_map``.
+    Across processes they are not: every input to a global-mesh
+    computation must be built with an explicit ``NamedSharding`` so all
+    processes agree on the layout.
+    """
+    if mesh is None:
+        return False
+    try:
+        return len({d.process_index for d in mesh.devices.flat}) > 1
+    except Exception:  # pragma: no cover - exotic mesh types
+        return False
+
+
+def put_replicated(x, mesh):
+    """Upload a host array fully replicated over ``mesh``.
+
+    Single-process meshes take the cheap ``jnp.asarray`` path (committed
+    to the default device, exactly what the pre-distributed code did);
+    multi-process meshes need a real replicated ``NamedSharding`` so the
+    array is addressable as one global value on every host.
+    """
+    import jax.numpy as jnp
+
+    if not mesh_spans_processes(mesh):
+        return jnp.asarray(x)
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    return jax.device_put(np.asarray(x), NamedSharding(mesh, PartitionSpec()))
+
+
+def put_sharded(x, mesh, axis):
+    """Upload a host array sharded over ``mesh`` along its leading dim.
+
+    The leading dimension must be divisible by the mesh size (callers
+    pad batches with ``pad_mult``).  Single-process meshes fall back to
+    ``jnp.asarray`` — ``shard_map`` reshards the committed array itself,
+    which is what the existing single-host dispatch relies on.
+    """
+    import jax.numpy as jnp
+
+    if not mesh_spans_processes(mesh):
+        return jnp.asarray(x)
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    spec = PartitionSpec(axis, *([None] * (np.ndim(x) - 1)))
+    return jax.device_put(np.asarray(x), NamedSharding(mesh, spec))
+
+
+def host_array(x) -> np.ndarray:
+    """Bring a (replicated) device array back to the host as numpy."""
+    return np.asarray(x)

@@ -51,3 +51,67 @@ def data_sharding(mesh: Mesh, spec: P) -> NamedSharding:
 def param_sharding(mesh: Mesh, spec: P) -> NamedSharding:
     """NamedSharding for a *parameter* spec (pod-replicated by design)."""
     return NamedSharding(mesh, spec)
+
+
+# ---------------------------------------------------------------------------
+# EM serving meshes (multi-process CPU/TPU sharded resolution)
+# ---------------------------------------------------------------------------
+
+_distributed_initialized = False
+
+
+def init_em_distributed(
+    coordinator: str | None = None,
+    num_processes: int | None = None,
+    process_id: int | None = None,
+) -> bool:
+    """Join (or skip) a ``jax.distributed`` service for sharded serving.
+
+    Arguments default to the ``REPRO_SHARD_COORD`` / ``REPRO_SHARD_N`` /
+    ``REPRO_SHARD_ID`` environment variables so subprocess workers (the
+    CI mesh leg and ``benchmarks/shard_scaling.py``) need no plumbing.
+    Returns False — without touching jax — when no coordinator is
+    configured, so single-process callers can call this unconditionally.
+
+    On CPU backends the cross-process collective client must be selected
+    *before* ``jax.distributed.initialize``; jaxlib builds that predate
+    the gloo client (or name the option differently) raise, and the
+    caller is expected to skip the distributed path in that case.
+    """
+    global _distributed_initialized
+    import os
+
+    coordinator = coordinator or os.environ.get("REPRO_SHARD_COORD")
+    if not coordinator:
+        return False
+    if _distributed_initialized:
+        return True
+    if num_processes is None:
+        num_processes = int(os.environ.get("REPRO_SHARD_N", "1"))
+    if process_id is None:
+        process_id = int(os.environ.get("REPRO_SHARD_ID", "0"))
+    try:
+        jax.config.update("jax_cpu_collectives_implementation", "gloo")
+    except Exception:
+        pass  # non-CPU backend or pre-gloo jax: initialize decides
+    jax.distributed.initialize(
+        coordinator_address=coordinator,
+        num_processes=num_processes,
+        process_id=process_id,
+    )
+    _distributed_initialized = True
+    return True
+
+
+def em_service_mesh(n_shards: int | None = None) -> Mesh:
+    """1-D ``("data",)`` mesh over the global device list.
+
+    With ``jax.distributed`` initialized this spans every process
+    (``process_count x local_devices`` shards); otherwise it is the
+    local multi-device mesh ``core.parallel.make_em_mesh`` builds — the
+    two entry points stay interchangeable so the serving stack can hand
+    either to ``run_parallel``.
+    """
+    from repro.core.parallel import make_em_mesh
+
+    return make_em_mesh(n_shards)

@@ -3,21 +3,64 @@
 Random-weight serving driver around :class:`repro.serve.engine.Engine`
 (the jitted decode step is the same ``serve_step`` the multi-pod
 dry-run lowers at 32k/500k context).
+
+``--em`` switches to the sharded entity-resolution service instead: one
+:class:`repro.stream.shard.ShardCoordinator` replica per process.  Run
+it once per shard with ``REPRO_SHARD_COORD`` / ``REPRO_SHARD_N`` /
+``REPRO_SHARD_ID`` set (see ``docs/SHARDING.md``); a bare single-process
+invocation serves the unsharded 1-shard degenerate case.
 """
 
 from __future__ import annotations
 
 import argparse
+import sys
 import time
 
 import numpy as np
 
-from repro.configs.base import ARCH_IDS, get_config, smoke_config
-from repro.models.registry import get_model
-from repro.serve.engine import demo_engine
+
+def em_main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--em", action="store_true")
+    ap.add_argument("--scheme", default="smp", choices=["smp", "mmp"])
+    ap.add_argument("--scale", type=float, default=0.05)
+    ap.add_argument("--batches", type=int, default=6)
+    ap.add_argument("--shards", type=int, default=None)
+    args = ap.parse_args(argv)
+
+    from repro.data.synthetic import SynthConfig, arrival_stream, make_dataset
+    from repro.stream.shard import ShardContext, ShardCoordinator
+
+    ctx = ShardContext.create(args.shards)
+    coord = ShardCoordinator(ctx, scheme=args.scheme, parallel=True)
+    ds = make_dataset(SynthConfig.hepth(scale=args.scale, seed=7))
+    t0 = time.perf_counter()
+    n_refs = 0
+    for b in arrival_stream(ds, n_batches=args.batches):
+        coord.ingest(list(b.names), b.edges)
+        n_refs += len(b.names)
+    dt = time.perf_counter() - t0
+    agree = coord.digests_agree()
+    print(
+        f"shard {ctx.shard_id}/{ctx.n_shards}: {n_refs} refs in {dt:.2f}s "
+        f"({n_refs / dt:.1f} refs/s), "
+        f"{len(coord.snapshot().clusters())} clusters, "
+        f"digest {coord.digest()[:12]} "
+        f"({'replicas agree' if agree else 'REPLICA DIVERGENCE'})"
+    )
+    if not agree:
+        raise SystemExit(1)
 
 
 def main():
+    if "--em" in sys.argv[1:]:
+        return em_main()
+
+    from repro.configs.base import ARCH_IDS, get_config, smoke_config
+    from repro.models.registry import get_model
+    from repro.serve.engine import demo_engine
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True, choices=ARCH_IDS)
     ap.add_argument("--smoke", action="store_true")

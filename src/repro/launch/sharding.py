@@ -210,3 +210,136 @@ def default_remat_group(n_layers: int) -> int:
         if n_layers % g == 0:
             return g
     return 1
+
+
+# ---------------------------------------------------------------------------
+# EM serving shards (LSH bucket-map partitioning)
+# ---------------------------------------------------------------------------
+
+_FNV_OFFSET = 0xCBF29CE484222325
+_FNV_PRIME = 0x100000001B3
+
+
+def bucket_shard(band: int, key: tuple[int, ...], n_shards: int) -> int:
+    """Deterministic owner shard of one LSH bucket ``(band, key)``.
+
+    FNV-1a over the band index and the key's minhash values — NOT
+    Python's ``hash`` (salted per interpreter), so every process of a
+    sharded service and every re-run of a test computes the same
+    partition.  The partition is exhaustive and disjoint by
+    construction: exactly one shard owns each bucket.
+    """
+    h = _FNV_OFFSET
+    for v in (band, *key):
+        v = int(v) & 0xFFFFFFFFFFFFFFFF
+        for _ in range(8):
+            h ^= v & 0xFF
+            h = (h * _FNV_PRIME) & 0xFFFFFFFFFFFFFFFF
+            v >>= 8
+    return h % int(n_shards)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardSpec:
+    """This process's slice of the sharded serving partition.
+
+    ``n_shards`` is the process count of the serving mesh and
+    ``shard_id`` this process's index; the LSH index stores and probes
+    only the buckets :func:`bucket_shard` assigns to ``shard_id``, and
+    per-probe candidate sets are merged by a cross-process union (the
+    boundary-message merge at ingest quiescence points).
+    """
+
+    n_shards: int
+    shard_id: int
+
+    def __post_init__(self):
+        if self.n_shards < 1 or not (0 <= self.shard_id < self.n_shards):
+            raise ValueError(
+                f"invalid shard spec: id {self.shard_id} of {self.n_shards}"
+            )
+
+    def owns(self, band: int, key: tuple[int, ...]) -> bool:
+        return bucket_shard(band, key, self.n_shards) == self.shard_id
+
+
+def _pow2(n: int) -> int:
+    return 1 << max(n - 1, 0).bit_length() if n else 1
+
+
+@dataclasses.dataclass
+class ShardMerger:
+    """Cross-process union of per-shard candidate-id sets.
+
+    Callable hook for :class:`repro.stream.index.MinHashLSHIndex`: each
+    process probes only its owned buckets, then the probe results are
+    united over the mesh so every process sees the same candidate set
+    the unsharded index would have produced (the partition is
+    exhaustive, so the union is exact — and the caller sorts, so set
+    order never leaks into downstream state).
+    """
+
+    mesh: Mesh
+
+    def __post_init__(self):
+        self._gather_fns: dict = {}
+        self.merges = 0
+
+    def _spans(self) -> bool:
+        from repro.kernels.common import mesh_spans_processes
+
+        return mesh_spans_processes(self.mesh)
+
+    def _gather(self, local: np.ndarray, fill) -> np.ndarray:
+        """All-gather equal-shape per-process row blocks (process order)."""
+        import jax
+
+        from repro.kernels import common as kcommon
+
+        mesh = self.mesh
+        axis = mesh.axis_names[0]
+        devs_here = [
+            d for d in mesh.devices.flat
+            if d.process_index == jax.process_index()
+        ]
+        k = len(devs_here)
+        pad = (-len(local)) % k
+        if pad:
+            local = np.concatenate(
+                [local, np.full((pad,) + local.shape[1:], fill, local.dtype)]
+            )
+        per_dev = len(local) // k
+        sharding = NamedSharding(mesh, P(axis))
+        global_shape = (len(local) * (mesh.devices.size // k),) + local.shape[1:]
+        shards = [
+            jax.device_put(local[i * per_dev : (i + 1) * per_dev], d)
+            for i, d in enumerate(devs_here)
+        ]
+        garr = jax.make_array_from_single_device_arrays(
+            global_shape, sharding, shards
+        )
+        key = (global_shape, local.dtype.str)
+        fn = self._gather_fns.get(key)
+        if fn is None:
+            import jax.numpy as jnp  # noqa: F401 - jitted body below
+
+            fn = self._gather_fns[key] = jax.jit(
+                kcommon.shard_map(
+                    lambda x: jax.lax.all_gather(x, axis, axis=0, tiled=True),
+                    mesh, (P(axis),), P(),
+                )
+            )
+        return np.asarray(fn(garr))
+
+    def union(self, ids: set[int]) -> set[int]:
+        """Union this shard's candidate ids across every process."""
+        if not self._spans():
+            return ids
+        self.merges += 1
+        local = np.fromiter(sorted(ids), np.int64, len(ids))
+        counts = self._gather(np.array([len(local)], np.int64), 0)
+        cap = _pow2(int(counts.max())) if counts.size else 1
+        padded = np.full(cap, -1, np.int64)
+        padded[: len(local)] = local
+        merged = self._gather(padded, -1)
+        return set(merged[merged >= 0].tolist())

@@ -103,6 +103,8 @@ class DeltaCover:
         boundary_relation: str = "coauthor",
         lsh: LSHConfig | None = None,
         level_cache_max: int | None = None,
+        shard=None,
+        shard_merge=None,
     ):
         self.t_loose = t_loose
         self.t_tight = t_tight
@@ -111,7 +113,7 @@ class DeltaCover:
         self.k_bins = k_bins
         self.thresholds = thresholds or simlib.DEFAULT_THRESHOLDS
         self.boundary_relation = boundary_relation
-        self.index = MinHashLSHIndex(lsh)
+        self.index = MinHashLSHIndex(lsh, shard=shard, merge=shard_merge)
 
         self.names: list[str | None] = []  # id -> name (None = hole)
         self.present: set[int] = set()

@@ -84,6 +84,17 @@ def _pool_partition(pool) -> list[tuple[int, ...]]:
     return sorted(tuple(sorted(v)) for v in by_root.values())
 
 
+def match_digest(matches) -> str:
+    """Hex sha256 of a match fixpoint alone (a :class:`MatchStore` or a
+    gid array) — the equivalence oracle for engine-level runs that have
+    no surrounding service, e.g. the sharded lattice legs that drive
+    ``run_parallel`` on a hand-packed cover."""
+    h = hashlib.sha256()
+    gids = getattr(matches, "gids", matches)
+    _feed(h, ["m_plus", np.sort(np.asarray(gids, dtype=np.int64))])
+    return h.hexdigest()
+
+
 def state_digest(service) -> str:
     """Hex sha256 over the service's canonicalized logical state."""
     h = hashlib.sha256()

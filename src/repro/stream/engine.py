@@ -76,6 +76,7 @@ class IncrementalEngine:
         *,
         scheme: str = "smp",
         parallel: bool = False,
+        mesh=None,
         gcache_capacity: int | None = None,
         gcache_hbm_budget: int | None = None,
     ):
@@ -84,6 +85,10 @@ class IncrementalEngine:
         self.matcher = matcher
         self.scheme = scheme
         self.parallel = parallel
+        # Explicit mesh for the parallel drivers (sharded serving hands
+        # the cross-process service mesh here); None keeps the default
+        # all-local-devices mesh run_parallel builds itself.
+        self.mesh = mesh
         self.m_plus = MatchStore()
         self.pool = MessagePool()
         # Persistent device grounding cache (parallel engine only):
@@ -182,6 +187,7 @@ class IncrementalEngine:
                     self.matcher,
                     gg,
                     scheme=self.scheme,
+                    mesh=self.mesh,
                     active=order,
                     init_matches=carried,
                     pool=self.pool if self.scheme == "mmp" else None,

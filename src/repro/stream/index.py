@@ -83,8 +83,18 @@ class MinHashLSHIndex:
     buckets) once the cap or age limit is exceeded.
     """
 
-    def __init__(self, cfg: LSHConfig | None = None):
+    def __init__(self, cfg: LSHConfig | None = None, *, shard=None, merge=None):
         self.cfg = cfg or LSHConfig()
+        # bucket-map partitioning for sharded serving: with a ``shard``
+        # (``launch.sharding.ShardSpec``) this process stores and probes
+        # only the buckets it owns, and ``merge`` (a cross-process set
+        # union, ``launch.sharding.ShardMerger.union``) reassembles each
+        # probe's candidate set.  The partition is exhaustive, so the
+        # merged set equals the unsharded index's answer exactly; merge
+        # runs on EVERY query (it is a collective — all shards must
+        # reach it together, even when a shard's local set is empty).
+        self.shard = shard
+        self.merge = merge
         self.table = minhash_ops.hash_table(
             self.cfg.num_hashes, self.cfg.shingle_dim, seed=self.cfg.seed
         )
@@ -135,7 +145,10 @@ class MinHashLSHIndex:
         self.n_adds += 1
         for eid, sig in zip(ids, sigs):
             eid = int(eid)
-            keys = list(self._band_keys(sig))
+            keys = [
+                (b, key) for b, key in self._band_keys(sig)
+                if self.shard is None or self.shard.owns(b, key)
+            ]
             if self.cfg.bounded and eid in self._keys_of:
                 self._scrub(eid)
                 self._order.remove(eid)
@@ -189,11 +202,20 @@ class MinHashLSHIndex:
             self.n_evicted += 1
 
     def query(self, sigs: np.ndarray, exclude: set[int] | None = None) -> set[int]:
-        """Union of indexed entities colliding with any probe signature."""
+        """Union of indexed entities colliding with any probe signature.
+
+        Sharded: local buckets cover only the owned slice of the bucket
+        map, so the probe result is united across shards before the
+        exclusion — every shard sees the exact unsharded answer.
+        """
         out: set[int] = set()
         for sig in np.atleast_2d(sigs):
             for b, key in self._band_keys(sig):
+                if self.shard is not None and not self.shard.owns(b, key):
+                    continue
                 out.update(self.buckets[b].get(key, ()))
+        if self.merge is not None:
+            out = self.merge(out)
         if exclude:
             out -= exclude
         return out

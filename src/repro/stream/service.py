@@ -243,6 +243,7 @@ class ResolveService:
         durability_dir: str | None = None,
         checkpoint_every: int = 0,
         wal_fsync: bool = True,
+        shard=None,
     ):
         """``gcache_capacity`` / ``gcache_hbm_budget`` (parallel engine
         only) bound the device grounding cache — the HBM-budget knob of
@@ -260,9 +261,17 @@ class ResolveService:
         is rotated/GC'd.  :meth:`recover` rebuilds a service from the
         latest snapshot plus the WAL tail; by stream/batch
         schedule-invariance the recovered fixpoint is bit-for-bit the
-        uninterrupted one."""
+        uninterrupted one.
+
+        ``shard`` (a :class:`repro.stream.shard.ShardContext`) turns on
+        sharded serving: the LSH bucket map is partitioned across the
+        context's processes (probes merge by cross-process union) and
+        the parallel engine runs its rounds on the context's mesh.  The
+        logical state stays SPMD-replicated — see
+        :mod:`repro.stream.shard` for the equivalence argument."""
         self.weights = weights
         self.scheme = scheme
+        self.shard = shard
         self.delta = DeltaCover(
             t_loose=t_loose,
             t_tight=t_tight,
@@ -273,11 +282,14 @@ class ResolveService:
             boundary_relation=boundary_relation,
             lsh=lsh,
             level_cache_max=level_cache_max,
+            shard=shard.spec if shard is not None else None,
+            shard_merge=shard.merger.union if shard is not None else None,
         )
         self.engine = IncrementalEngine(
             matcher if matcher is not None else MLNMatcher(weights),
             scheme=scheme,
             parallel=parallel,
+            mesh=shard.mesh if shard is not None else None,
             gcache_capacity=gcache_capacity,
             gcache_hbm_budget=gcache_hbm_budget,
         )

@@ -1,0 +1,157 @@
+"""Sharded serving coordinator: one service replica per mesh process.
+
+The paper's decomposition maps onto a multi-process JAX mesh with no
+new algorithm: bins are the neighborhoods, so sharding the bin batch
+axis over the mesh partitions the neighborhoods across hosts, and the
+psum'd match-bitset exchange of ``core.parallel`` *is* the cross-host
+boundary-message pass — generalizing it from one device to the mesh is
+a collective swap, not a rewrite.  What this module adds is the serving
+topology around that engine:
+
+* **SPMD-replicated logical state.**  Every process runs the same
+  ``ResolveService`` and ingests every micro-batch in the same order
+  (the coordinator routes each ingest to *all* shards — the shard
+  owning an arrival's LSH buckets does the bucket work, see below).
+  Host-side maintenance (canopy replay, cover splice, union-find) is
+  deterministic, so the logical state stays bit-for-bit identical on
+  every process; :func:`repro.stream.digest.state_digest` is the
+  machine-checked witness.  Only *device* work is partitioned.
+
+* **Partitioned LSH bucket map.**  Each process stores and probes only
+  the buckets :func:`repro.launch.sharding.bucket_shard` assigns to it
+  (a deterministic FNV hash — routing needs no directory), and each
+  probe's candidate set is reassembled by a cross-process union
+  (:class:`repro.launch.sharding.ShardMerger`).  The partition is
+  exhaustive and disjoint, and ``delta._probe`` sorts the union, so the
+  candidate sets — and everything downstream — are exactly the
+  unsharded ones.
+
+* **Partitioned bin rounds.**  The engine receives the cross-process
+  service mesh; ``run_parallel`` shards every bin's row batch over it
+  (rows are padded to a mesh-size multiple) and merges each round's
+  matches with the same ``psum`` it already used on one device — the
+  boundary-message merge at every round and quiescence point.
+
+Equivalence argument, in one line: the sharded run performs the same
+deterministic host schedule on every process, and every partitioned
+step (bucket probe, bin round) reassembles its exact unsharded result
+before any state depends on it — so the fixpoint is bit-for-bit the
+single-host one (Thms. 2/4 make the fixpoint schedule-invariant in the
+first place; here even the schedule is identical).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+
+import numpy as np
+
+from repro.launch.sharding import ShardMerger, ShardSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardContext:
+    """This process's view of the sharded serving topology.
+
+    ``spec`` partitions the LSH bucket map (per *process*), ``mesh``
+    partitions bin rows (per *device*), ``merger`` reassembles probe
+    candidate sets.  On a single-process mesh every component degrades
+    to the identity: ``spec`` owns every bucket, ``merger.union`` is a
+    no-op, and the engine mesh is the ordinary local-device mesh — so
+    a 1-shard service is literally the unsharded service.
+    """
+
+    mesh: object
+    spec: ShardSpec
+    merger: ShardMerger
+
+    @classmethod
+    def create(cls, n_shards: int | None = None) -> "ShardContext":
+        """Build the context for this process.
+
+        Joins the ``jax.distributed`` service first when the
+        ``REPRO_SHARD_COORD`` environment is set (subprocess workers of
+        the CI mesh leg and the scaling benchmark), then derives the
+        shard layout from the global device topology.
+        """
+        import jax
+
+        from repro.launch.mesh import em_service_mesh, init_em_distributed
+
+        init_em_distributed()
+        mesh = em_service_mesh(n_shards)
+        procs = sorted({d.process_index for d in mesh.devices.flat})
+        spec = ShardSpec(
+            n_shards=len(procs), shard_id=procs.index(jax.process_index())
+        )
+        return cls(mesh=mesh, spec=spec, merger=ShardMerger(mesh))
+
+    @property
+    def n_shards(self) -> int:
+        return self.spec.n_shards
+
+    @property
+    def shard_id(self) -> int:
+        return self.spec.shard_id
+
+
+class ShardCoordinator:
+    """Thin ingest router over one shard's :class:`ResolveService`.
+
+    Construction wires the shard context through the service: the LSH
+    index gets the bucket partition + merge hook, the engine gets the
+    cross-process mesh.  ``ingest`` routes a micro-batch into the local
+    replica (every shard calls it with the same batch — the collective
+    probe merge and the psum'd rounds are the synchronization points),
+    and ``digest``/``digests_agree`` expose the equivalence oracle.
+    """
+
+    def __init__(self, ctx: ShardContext | None = None, **service_kwargs):
+        from repro.stream.service import ResolveService
+
+        self.ctx = ctx if ctx is not None else ShardContext.create()
+        self.service = ResolveService(shard=self.ctx, **service_kwargs)
+
+    def ingest(self, names, edges=None, **kwargs):
+        """Route one micro-batch to the owning shards.
+
+        Ownership is per LSH bucket, and an arrival's buckets are spread
+        across shards by the FNV partition — so every ingest touches
+        every shard (each does its owned slice of the bucket work) and
+        the local replica advances the replicated logical state.  All
+        shards MUST ingest the same batches in the same order: the probe
+        union is a collective.
+        """
+        return self.service.ingest(names, edges, **kwargs)
+
+    def resolve(self, entity_id: int):
+        return self.service.resolve(entity_id)
+
+    def snapshot(self):
+        return self.service.snapshot()
+
+    def digest(self) -> str:
+        from repro.stream.digest import state_digest
+
+        return state_digest(self.service)
+
+    def digests_agree(self) -> bool:
+        """Cross-process check that every replica holds the same state.
+
+        All-gathers the 32-byte state digest over the mesh; on a
+        single-process context this is trivially True.
+        """
+        d = self.digest()
+        raw = hashlib.sha256(d.encode()).digest()
+        local = np.frombuffer(raw, dtype=np.uint8).copy()
+        gathered = self.merged_digests(local)
+        return all(np.array_equal(g, local) for g in gathered)
+
+    def merged_digests(self, local: np.ndarray) -> list[np.ndarray]:
+        from repro.kernels.common import mesh_spans_processes
+
+        if not mesh_spans_processes(self.ctx.mesh):
+            return [local]
+        flat = self.ctx.merger._gather(local.astype(np.uint8), 0)
+        return list(flat.reshape(-1, len(local)))

@@ -38,7 +38,7 @@ from dataclasses import dataclass
 from pathlib import Path
 from typing import Iterator
 
-from repro import obs
+from repro import faults, obs
 
 _HEADER = struct.Struct("<II")
 _SEGMENT_FMT = "wal-{:016d}.log"
@@ -130,6 +130,9 @@ class WriteAheadLog:
 
     def rotate(self, next_seq: int) -> None:
         """Start a fresh segment whose records will all be >= next_seq."""
+        # a crash here (checkpoint durable, old segment still live) must
+        # recover cleanly: the checkpoint wins, the stale tail is skipped
+        faults.maybe_fail("wal.rotate")
         self._f.close()
         self._path = self.directory / _SEGMENT_FMT.format(int(next_seq))
         self._f = open(self._path, "ab")

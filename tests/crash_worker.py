@@ -3,14 +3,19 @@ killed mid-ingest.
 
 Usage::
 
-    python tests/crash_worker.py <durability_dir> <scheme> <site> <ckpt_every>
+    python tests/crash_worker.py <durability_dir> <scheme> <site> \
+                                 <ckpt_every> [hit]
 
 Ingests the shared ``faultcorpus`` schedule with durability on and a
-crash plan armed at ``site`` hit 3 — so the first two batches commit
-cleanly (exercising the checkpoint at ``ckpt_every=2``) and the third
-dies at the injected site via ``os._exit(CRASH_EXIT_CODE)``: no
-unwinding, no flush, no atexit, exactly a SIGKILL'd worker.  Exits 0
-only if the site was never reached (the parent asserts it was).
+crash plan armed at ``site`` hit ``hit`` (default 3), then dies at the
+injected site via ``os._exit(CRASH_EXIT_CODE)``: no unwinding, no
+flush, no atexit, exactly a SIGKILL'd worker.  With the default hit 3
+the first two batches commit cleanly (exercising the checkpoint at
+``ckpt_every=2``) and the third dies mid-ingest; the durability-path
+sites (``ckpt.rename``, ``wal.rotate``) fire once per checkpoint, not
+per batch, so their matrix entries arm hit 1 — the crash lands inside
+the first checkpoint's rename/rotation window instead.  Exits 0 only
+if the site was never reached (the parent asserts it was).
 """
 
 from __future__ import annotations
@@ -23,6 +28,7 @@ sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
 
 def main() -> int:
     dur_dir, scheme, site, ckpt_every = sys.argv[1:5]
+    hit = int(sys.argv[5]) if len(sys.argv) > 5 else 3
 
     import faultcorpus
     from repro import faults
@@ -34,7 +40,7 @@ def main() -> int:
         durability_dir=dur_dir,
         checkpoint_every=int(ckpt_every),
     )
-    faults.install(FaultPlan.fail_once(site, hit=3, crash=True))
+    faults.install(FaultPlan.fail_once(site, hit=hit, crash=True))
     for b in faultcorpus.batches():
         svc.ingest(b.names, b.edges, ids=b.ids)
     return 0

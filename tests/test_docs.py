@@ -1,14 +1,15 @@
 """Docs can't rot: every module path the prose references must import.
 
-README.md, docs/ARCHITECTURE.md and docs/SERVING.md name ``repro.*``
-dotted paths and repo file paths; if a refactor moves or renames one,
-this test fails CI instead of leaving the documentation pointing at
-nothing.  CI also runs ``examples/quickstart.py`` itself (the
-bench-smoke job), so the quickstart commands stay executable end to
-end.  SERVING.md is additionally an *operator* document: every config
-knob it names as ``Class.attr`` must exist on the corresponding
-config/dataclass with exactly that name, so the tuning guidance can't
-drift from the code.
+README.md, docs/ARCHITECTURE.md, docs/SERVING.md and docs/SHARDING.md
+name ``repro.*`` dotted paths and repo file paths; if a refactor moves
+or renames one, this test fails CI instead of leaving the
+documentation pointing at nothing.  CI also runs
+``examples/quickstart.py`` itself (the bench-smoke job), so the
+quickstart commands stay executable end to end.  SERVING.md and
+SHARDING.md are additionally *operator* documents: every config knob
+they name as ``Class.attr`` or call as ``Class(kwarg=...)`` must exist
+on the corresponding class with exactly that name, so the tuning
+guidance can't drift from the code.
 """
 
 from __future__ import annotations
@@ -26,6 +27,7 @@ DOCS = [
     REPO / "README.md",
     REPO / "docs" / "ARCHITECTURE.md",
     REPO / "docs" / "SERVING.md",
+    REPO / "docs" / "SHARDING.md",
 ]
 
 # dotted references like ``repro.stream.index`` or
@@ -173,6 +175,53 @@ def test_serving_doc_knobs_exist():
     # the document must actually exercise the knob table: all four
     # ServingConfig knobs plus the constructor examples
     assert checked >= 8, f"only {checked} knob references found"
+
+
+def test_sharding_doc_knobs_exist():
+    """SHARDING.md is knob-checked the same way: every ``Class.attr``
+    and ``Class(kwarg=...)`` it names must exist on the real sharding
+    class — for classes taking ``**kwargs`` pass-through constructors
+    (``ShardCoordinator``), any kwarg is accepted by construction."""
+    import repro.launch.sharding
+    import repro.stream
+    import repro.stream.index
+    import repro.stream.shard
+
+    text = _doc_text(REPO / "docs" / "SHARDING.md")
+    modules = (repro.stream.shard, repro.launch.sharding,
+               repro.stream.index, repro.stream)
+
+    def lookup(cls_name):
+        for mod in modules:
+            cls = getattr(mod, cls_name, None)
+            if cls is not None:
+                return cls
+        return None
+
+    checked = 0
+    for cls_name, attr in CLASSATTR.findall(text):
+        cls = lookup(cls_name)
+        if cls is None:  # not a sharding-layer class (e.g. a paper term)
+            continue
+        _assert_knob(cls, cls_name, attr)
+        checked += 1
+    for cls_name, kwarg in _call_kwargs(text):
+        cls = lookup(cls_name)
+        if cls is None:
+            continue
+        params = inspect.signature(cls.__init__).parameters
+        if any(p.kind is inspect.Parameter.VAR_KEYWORD
+               for p in params.values()):
+            checked += 1
+            continue
+        assert kwarg in params, (
+            f"SHARDING.md calls {cls_name}({kwarg}=...) but __init__ has "
+            f"no such parameter (has: {sorted(params)})"
+        )
+        checked += 1
+    # the document must actually exercise the shard surface: the
+    # ShardContext fields, the index hooks, and the constructor wiring
+    assert checked >= 10, f"only {checked} knob references found"
 
 
 def test_serving_config_knobs_all_documented():

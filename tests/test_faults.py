@@ -240,16 +240,33 @@ def test_wal_only_recovery(tmp_path, batches, base_digest_smp):
     rec.close()
 
 
-@pytest.mark.parametrize("site", faults.SITES)
-def test_crash_recovery_matrix(site, tmp_path, batches, base_digest_mmp):
-    """Kill the worker (os._exit, no unwinding) at every fault site
-    during batch 3 — including between the WAL append and the commit —
-    then recover and finish the stream: the digest must equal the
+# (site, hit) legs: the per-batch ingest sites fire every batch, so hit
+# 3 kills the worker mid-batch-3 (after two clean commits and the first
+# checkpoint); the durability-path sites fire once per checkpoint —
+# hit 1 lands inside the first checkpoint's rename/rotation window
+# (checkpoint incomplete / WAL not yet rotated), hit 2 inside the
+# second, after the final batch committed.
+_CKPT_SITES = ("ckpt.rename", "wal.rotate")
+CRASH_MATRIX = [
+    (site, hit)
+    for site in faults.SITES
+    for hit in ((1, 2) if site in _CKPT_SITES else (3,))
+]
+
+
+@pytest.mark.parametrize(
+    "site,hit", CRASH_MATRIX, ids=[f"{s}-hit{h}" for s, h in CRASH_MATRIX]
+)
+def test_crash_recovery_matrix(site, hit, tmp_path, batches, base_digest_mmp):
+    """Kill the worker (os._exit, no unwinding) at every fault site —
+    mid-batch between the WAL append and the commit, mid-checkpoint
+    before the tmp-dir rename, and at the WAL rotation boundary — then
+    recover and finish the stream: the digest must equal the
     uninterrupted run's, bit for bit."""
     dur = tmp_path / "dur"
     proc = subprocess.run(
         [sys.executable, str(REPO / "tests" / "crash_worker.py"),
-         str(dur), "mmp", site, "2"],
+         str(dur), "mmp", site, "2", str(hit)],
         cwd=REPO,
         capture_output=True,
         timeout=600,
