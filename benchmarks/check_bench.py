@@ -2,9 +2,11 @@
 
 ``python -m benchmarks.check_bench [--gate=NAME] BASELINE.json FRESH.json``
 
-Three baselines are gated, dispatched on the JSON's ``benchmark`` field;
-``--gate`` restricts the run to one invariant family (CI wires each as
-its own named step), default is every gate that applies to the file:
+Three baselines are gated, dispatched on the JSON's ``benchmark`` field.
+Each invariant family is a :class:`Gate` in a registry keyed by name and
+baseline family; ``--gate=all`` (the default, and what CI runs — one
+invocation per baseline file) runs every gate that applies to the file,
+``--gate=NAME`` restricts to one for local triage:
 
 * ``BENCH_parallel.json``
   - ``dispatch``: the ``dispatches_per_round`` of every scheme, bounded
@@ -16,6 +18,11 @@ its own named step), default is every gate that applies to the file:
     exactly 0 — step-7 delta checks run batched on device
     (``repro.core.parallel.DevicePromoter``); any host coupling-COO
     walk is a regression, no slack.
+  - ``matchers``: the ``fig4_matchers`` block — every matcher family in
+    the baseline must still be measured, the optimal assignment must
+    keep its quality edge over the greedy ablation, and no family's F1
+    may regress below the baseline minus slack (quality is a model
+    property of the corpus, so it is stable across machine speeds).
 * ``BENCH_stream.json``
   - ``stream``: the O(dirty) ingest-path ratios — ``splice_per_dirty``
     (cover rows staged per dirty neighborhood), ``splice_per_visit``
@@ -70,8 +77,10 @@ Wall times are recorded in the JSON for the trajectory but never gated
 
 from __future__ import annotations
 
+import dataclasses
 import json
 import sys
+from typing import Callable
 
 # Multiplicative + additive slack: quiescence-point counts can shift by
 # a round or two between corpus scales; a true regression to the legacy
@@ -85,8 +94,40 @@ ABS_SLACK = 2.0
 STREAM_REL_SLACK = 2.0
 STREAM_ABS_SLACK = 1.0
 
-GATES = ("dispatch", "promotion", "stream", "lru", "transfer", "tails",
-         "recovery", "shard")
+# Matcher quality: F1 on the synthetic corpora is deterministic up to
+# tiny tie-break drift between numpy versions; a family losing its
+# separation (or dropping out of the benchmark) moves far past this.
+MATCHERS_F1_ABS_SLACK = 0.02
+
+
+@dataclasses.dataclass(frozen=True)
+class Gate:
+    """One named invariant family over (baseline, fresh) JSON blobs.
+
+    ``family`` names the baseline file the gate reads (``parallel`` /
+    ``stream`` / ``shard``, dispatched on the fresh JSON's ``benchmark``
+    field), so ``--gate=all`` runs exactly the gates that apply."""
+
+    name: str
+    family: str
+    fn: Callable[[dict, dict, list], None]
+
+
+_GATES: dict[str, Gate] = {}
+
+
+def register_gate(name: str, family: str):
+    """Register ``fn(base, fresh, failures)`` as the gate ``name``."""
+
+    def deco(fn):
+        _GATES[name] = Gate(name=name, family=family, fn=fn)
+        return fn
+
+    return deco
+
+
+def gate_names() -> tuple[str, ...]:
+    return tuple(_GATES)
 
 # Durability: fsync-per-append rides on a much larger delta+fixpoint
 # ingest; a WAL that costs a tenth of the ingest p50 means the append
@@ -119,6 +160,7 @@ TRANSFER_ABS_SLACK = 64.0  # bytes per unit
 SHARD_MIN_QPS_EFF_2 = 0.35
 
 
+@register_gate("dispatch", "parallel")
 def _check_dispatch(base: dict, fresh: dict, failures: list[str]) -> None:
     for inst, iblock in base.get("instances", {}).items():
         fblock = fresh.get("instances", {}).get(inst, {})
@@ -142,7 +184,10 @@ def _check_dispatch(base: dict, fresh: dict, failures: list[str]) -> None:
                 )
 
 
-def _check_promotion_parallel(fresh: dict, failures: list[str]) -> None:
+@register_gate("promotion", "parallel")
+def _check_promotion_parallel(
+    _base: dict, fresh: dict, failures: list[str]
+) -> None:
     """Fused engine: zero host promotion scans, exact (no slack)."""
     checked = 0
     for inst, iblock in fresh.get("instances", {}).items():
@@ -169,6 +214,7 @@ def _max_ratio(entries: list[dict], key: str) -> float | None:
     return max(vals) if vals else None
 
 
+@register_gate("stream", "stream")
 def _check_stream_ratios(base: dict, fresh: dict, failures: list[str]) -> None:
     for block, key in (
         ("throughput", "splice_per_dirty"),
@@ -193,7 +239,8 @@ def _check_stream_ratios(base: dict, fresh: dict, failures: list[str]) -> None:
             print(f"ok {tag}: {key} {got} <= {limit:.2f}")
 
 
-def _check_lru(fresh: dict, failures: list[str]) -> None:
+@register_gate("lru", "stream")
+def _check_lru(_base: dict, fresh: dict, failures: list[str]) -> None:
     """Bounded serving memory: exact bounds, independent of baseline."""
     entries = fresh.get("serving_memory", [])
     if not entries:
@@ -227,6 +274,7 @@ def _check_lru(fresh: dict, failures: list[str]) -> None:
             print(f"ok {tag}: promote_host_scans == 0")
 
 
+@register_gate("transfer", "stream")
 def _check_transfer(base: dict, fresh: dict, failures: list[str]) -> None:
     """Upload bytes per unit of per-site work, baseline-relative."""
     base_entries = base.get("transfer", [])
@@ -271,7 +319,8 @@ def _check_transfer(base: dict, fresh: dict, failures: list[str]) -> None:
             print(f"ok stream/transfer: {key} {got} > 0")
 
 
-def _check_recovery(fresh: dict, failures: list[str]) -> None:
+@register_gate("recovery", "stream")
+def _check_recovery(_base: dict, fresh: dict, failures: list[str]) -> None:
     """Durability block: WAL overhead bound + bit-for-bit replay."""
     entries = fresh.get("recovery", [])
     if not entries:
@@ -310,6 +359,7 @@ def _check_recovery(fresh: dict, failures: list[str]) -> None:
             print(f"ok {tag}: replayed {e['replayed_records']} WAL records")
 
 
+@register_gate("tails", "stream")
 def _check_tails(base: dict, fresh: dict, failures: list[str]) -> None:
     """Serving block: coalescing speedup floor + p99 under load."""
     entries = fresh.get("serving", [])
@@ -355,6 +405,49 @@ def _check_tails(base: dict, fresh: dict, failures: list[str]) -> None:
             print(f"ok {tag}: p99 under load {p99}ms <= {limit:.2f}ms")
 
 
+@register_gate("matchers", "parallel")
+def _check_matchers(base: dict, fresh: dict, failures: list[str]) -> None:
+    """fig4_matchers block: family coverage + quality separation."""
+    bblock = base.get("fig4_matchers", {}).get("families", {})
+    fblock = fresh.get("fig4_matchers", {}).get("families", {})
+    if not bblock:
+        failures.append("matchers: fig4_matchers block missing from baseline")
+        return
+    if not fblock:
+        failures.append(
+            "matchers: fig4_matchers block missing from fresh results"
+        )
+        return
+    for fam, b in sorted(bblock.items()):
+        tag = f"matchers/{fam}"
+        got = fblock.get(fam)
+        if got is None:
+            failures.append(f"{tag}: family missing from fresh results")
+            continue
+        floor = b["f1"] - MATCHERS_F1_ABS_SLACK
+        if got["f1"] < floor:
+            failures.append(
+                f"{tag}: f1 {got['f1']} < floor {floor:.3f} "
+                f"(baseline {b['f1']})"
+            )
+        else:
+            print(f"ok {tag}: f1 {got['f1']} >= {floor:.3f}")
+    opt = fblock.get("hungarian")
+    greedy = fblock.get("hungarian_greedy")
+    if opt is not None and greedy is not None:
+        if opt["f1"] < greedy["f1"]:
+            failures.append(
+                f"matchers: hungarian f1 {opt['f1']} < greedy "
+                f"{greedy['f1']} — optimal assignment lost its edge"
+            )
+        else:
+            print(
+                f"ok matchers: hungarian f1 {opt['f1']} >= greedy "
+                f"{greedy['f1']}"
+            )
+
+
+@register_gate("shard", "shard")
 def _check_shard(base: dict, fresh: dict, failures: list[str]) -> None:
     """Sharded-serving block: bit-for-bit digest equality across shard
     counts (absolute — the ISSUE-9 equivalence bar at benchmark scale)
@@ -420,6 +513,15 @@ def _check_shard(base: dict, fresh: dict, failures: list[str]) -> None:
                   f"{SHARD_MIN_QPS_EFF_2}")
 
 
+def _baseline_family(fresh: dict) -> str:
+    """Which baseline file the fresh JSON belongs to."""
+    if fresh.get("benchmark") == "shard_scaling" or "shards" in fresh:
+        return "shard"
+    if fresh.get("benchmark") == "stream_throughput" or "throughput" in fresh:
+        return "stream"
+    return "parallel"
+
+
 def main(argv: list[str]) -> int:
     gate = "all"
     args = []
@@ -428,8 +530,8 @@ def main(argv: list[str]) -> int:
             gate = a.split("=", 1)[1]
         else:
             args.append(a)
-    if gate != "all" and gate not in GATES:
-        print(f"unknown gate {gate!r}; choose from {GATES} or all")
+    if gate != "all" and gate not in _GATES:
+        print(f"unknown gate {gate!r}; choose from {gate_names()} or all")
         return 2
     if len(args) != 2:
         print(__doc__)
@@ -444,42 +546,17 @@ def main(argv: list[str]) -> int:
         # step loudly, not slip through as "gate does not apply"
         print(f"BENCH GATE INPUT MISSING: {e}")
         return 1
-    failures: list[str] = []
-    is_stream = (
-        fresh.get("benchmark") == "stream_throughput" or "throughput" in fresh
-    )
-    is_shard = fresh.get("benchmark") == "shard_scaling" or "shards" in fresh
-    ran = False
-    if is_shard:
-        if gate in ("all", "shard"):
-            _check_shard(base, fresh, failures)
-            ran = True
-    elif is_stream:
-        if gate in ("all", "stream"):
-            _check_stream_ratios(base, fresh, failures)
-            ran = True
-        if gate in ("all", "lru"):
-            _check_lru(fresh, failures)
-            ran = True
-        if gate in ("all", "transfer"):
-            _check_transfer(base, fresh, failures)
-            ran = True
-        if gate in ("all", "tails"):
-            _check_tails(base, fresh, failures)
-            ran = True
-        if gate in ("all", "recovery"):
-            _check_recovery(fresh, failures)
-            ran = True
-    else:
-        if gate in ("all", "dispatch"):
-            _check_dispatch(base, fresh, failures)
-            ran = True
-        if gate in ("all", "promotion"):
-            _check_promotion_parallel(fresh, failures)
-            ran = True
-    if not ran:
+    family = _baseline_family(fresh)
+    to_run = [
+        g for g in _GATES.values()
+        if g.family == family and gate in ("all", g.name)
+    ]
+    if not to_run:
         print(f"gate {gate!r} does not apply to {args[1]}")
         return 2
+    failures: list[str] = []
+    for g in to_run:
+        g.fn(base, fresh, failures)
     if failures:
         print("BENCH REGRESSION:\n  " + "\n  ".join(failures))
         return 1

@@ -1,0 +1,66 @@
+"""Fig. 4 (extended): matcher plug-in families through one pipeline.
+
+Every registered family — the paper's MLN (collective + iterative
+ablation) and RULES plus the two post-redesign families (Hungarian
+optimal assignment with its greedy ablation, embedding cosine
+similarity) — runs through the *same* ``pipeline.resolve`` SMP driver
+on the bipartite corpus, whose coauthor traps are built to separate
+them: greedy assignment takes the locally-heaviest cross edge the
+optimal matching avoids, and the MLN's coauthor factor is fooled by the
+planted shared-anchor structure the embedding space sees through.
+
+Quality (P/R/F1) and wall time per family go into the committed
+``BENCH_parallel.json`` under the ``fig4_matchers`` key;
+``check_bench --gate=matchers`` pins the separation (optimal >= greedy,
+per-family F1 floors).  The corpus is the same at smoke and full scale
+— it is already CI-sized, and identical corpora keep the smoke-run F1
+comparable to the committed baseline bit-for-bit.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import SMOKE, row, timed
+from repro.core import pipeline
+from repro.core.matchers import get_matcher, list_matchers
+from repro.data.synthetic import make_bipartite
+
+N_GROUPS = 60
+SEED = 1
+
+
+def main():
+    ds = make_bipartite(N_GROUPS, seed=SEED)
+    packed, gg, t_prep = pipeline.prepare(ds.entities, ds.relations)
+    row(f"# fig4 matcher families (bipartite n_groups={N_GROUPS} "
+        f"seed={SEED} refs={ds.n_refs} prepare={t_prep:.3f}s)")
+    row("family,precision,recall,f1,wall_s")
+    families = {}
+    for name in list_matchers():
+        res, t = timed(lambda n=name: pipeline.resolve(
+            ds.entities, ds.relations, scheme="smp",
+            matcher=get_matcher(n), packed=packed, gg=gg,
+        ))
+        prf = pipeline.evaluate(res, ds.entities.truth)
+        row(name, f"{prf.precision:.4f}", f"{prf.recall:.4f}",
+            f"{prf.f1:.4f}", f"{t:.3f}")
+        families[name] = {
+            "precision": round(prf.precision, 4),
+            "recall": round(prf.recall, 4),
+            "f1": round(prf.f1, 4),
+            "wall_s": round(t, 3),
+        }
+    return {
+        "benchmark": "fig4_matchers",
+        "smoke": SMOKE,
+        "corpus": {
+            "generator": "make_bipartite",
+            "n_groups": N_GROUPS,
+            "seed": SEED,
+            "n_refs": ds.n_refs,
+        },
+        "families": families,
+    }
+
+
+if __name__ == "__main__":
+    main()

@@ -14,7 +14,8 @@ from the environment at import time.
 ``--json`` additionally writes the structured results of the modules
 that return them (``table1_parallel`` -> ``BENCH_parallel.json``,
 ``stream_throughput`` -> ``BENCH_stream.json``, ``shard_scaling`` ->
-``BENCH_shard.json``) into ``--json-dir``
+``BENCH_shard.json``; ``fig4_matchers`` merges into
+``BENCH_parallel.json`` under its own key) into ``--json-dir``
 (default: the repo root).  The committed copies are the perf baseline
 trajectory; CI regenerates them at smoke scale and fails if the
 per-round host dispatch counts regress (``benchmarks.check_bench``).
@@ -44,6 +45,7 @@ MODULES = [
     ("fig3_scaling", "Fig 3(f): time vs #neighborhoods"),
     ("table1_parallel", "Table 1: parallel rounds / grid speedup"),
     ("fig4_rules", "Fig 4: RULES matcher"),
+    ("fig4_matchers", "Fig 4 ext: registered matcher families, quality + runtime"),
     ("stream_throughput", "Streaming ingest: entities/sec vs micro-batch size"),
     ("loadgen", "Serving load generator: Poisson ingest + Zipf readers"),
     ("kernels_bench", "Pallas-kernel roofline microbench"),
@@ -54,6 +56,13 @@ JSON_FILES = {
     "table1_parallel": "BENCH_parallel.json",
     "stream_throughput": "BENCH_stream.json",
     "shard_scaling": "BENCH_shard.json",
+}
+
+# Modules whose result is merged into another module's JSON as one top-
+# level key instead of owning a file (fig4_matchers rides in the
+# parallel baseline, where check_bench's parallel-family gates look).
+JSON_MERGE = {
+    "fig4_matchers": ("BENCH_parallel.json", "fig4_matchers"),
 }
 
 
@@ -100,6 +109,19 @@ def main() -> None:
                 json.dump(result, f, indent=2, sort_keys=True)
                 f.write("\n")
             print(f"wrote {path}", flush=True)
+        elif emit_json and result is not None and name in JSON_MERGE:
+            fname, key = JSON_MERGE[name]
+            os.makedirs(json_dir, exist_ok=True)
+            path = os.path.join(json_dir, fname)
+            blob = {}
+            if os.path.exists(path):
+                with open(path) as f:
+                    blob = json.load(f)
+            blob[key] = result
+            with open(path, "w") as f:
+                json.dump(blob, f, indent=2, sort_keys=True)
+                f.write("\n")
+            print(f"merged {key!r} into {path}", flush=True)
     if failures:
         raise SystemExit(f"benchmark module(s) raised: {failures}")
 

@@ -22,14 +22,14 @@ import sys
 
 from repro import obs
 from repro.data.synthetic import SynthConfig, arrival_stream, make_dataset
-from repro.stream import ResolveService
+from repro.stream import ResolveService, ServiceConfig
 
 
 def main(out: str = "trace.json") -> None:
     obs.reset()
     ds = make_dataset(SynthConfig.hepth(scale=0.05, seed=7))
     batches = arrival_stream(ds, 4)
-    svc = ResolveService(scheme="mmp")
+    svc = ResolveService(ServiceConfig(scheme="mmp"))
     print(f"streaming {len(ds.entities)} entities in {len(batches)} batches")
     for b in batches:
         svc.ingest(b.names, b.edges, ids=b.ids)

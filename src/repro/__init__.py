@@ -1,0 +1,54 @@
+"""Large-scale collective entity matching — curated public surface.
+
+The supported API, re-exported lazily (PEP 562) so ``import repro``
+stays cheap and heavy stacks (jax, the serving engine) load only when
+first touched:
+
+* streaming service — :class:`ResolveService`, :class:`ServiceConfig`,
+  :class:`ResolveSnapshot`, the :class:`ServingFrontend` traffic
+  front-end with :class:`ServingConfig`, and the sharded
+  :class:`ShardCoordinator`;
+* matcher plug-in registry — :func:`get_matcher`,
+  :func:`register_matcher`, :func:`list_matchers`, :func:`matcher_info`,
+  :class:`MatcherInfo` (see :mod:`repro.core.matchers`);
+* observability — :func:`get_registry` (metrics snapshot via
+  ``get_registry().snapshot()``) and :func:`write_snapshot`.
+
+Everything else under ``repro.*`` is implementation detail with no
+stability promise; the docs reference only the names above.
+"""
+
+from __future__ import annotations
+
+_EXPORTS = {
+    "IngestReport": "repro.stream.service",
+    "ResolveService": "repro.stream.service",
+    "ResolveSnapshot": "repro.stream.service",
+    "ServiceConfig": "repro.stream.service",
+    "ServingConfig": "repro.stream.serving",
+    "ServingFrontend": "repro.stream.serving",
+    "ShardContext": "repro.stream.shard",
+    "ShardCoordinator": "repro.stream.shard",
+    "MatcherInfo": "repro.core.matchers",
+    "get_matcher": "repro.core.matchers",
+    "list_matchers": "repro.core.matchers",
+    "matcher_info": "repro.core.matchers",
+    "register_matcher": "repro.core.matchers",
+    "get_registry": "repro.obs",
+    "write_snapshot": "repro.obs",
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name: str):
+    target = _EXPORTS.get(name)
+    if target is None:
+        raise AttributeError(f"module 'repro' has no attribute {name!r}")
+    import importlib
+
+    return getattr(importlib.import_module(target), name)
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_EXPORTS))

@@ -93,7 +93,7 @@ from repro.core.mln import (
     ground,
     ground_structure,
 )
-from repro.core.rules import RulesMatcher, _rules_fixpoint, rules_fixpoint_batch
+from repro.core.rules import _rules_fixpoint, rules_fixpoint_batch
 from repro.core.types import MatchStore, NeighborhoodBatch
 from repro.kernels import common as kcommon
 
@@ -111,38 +111,107 @@ def make_em_mesh(n_shards: int | None = None, axis: str = "data") -> Mesh:
 # ---------------------------------------------------------------------------
 
 
-def _matcher_cache_key(matcher) -> tuple[str, MLNWeights | None]:
-    if isinstance(matcher, RulesMatcher):
-        return ("rules", None)
-    if isinstance(matcher, MLNMatcher):
-        return ("mln", matcher.weights)
-    raise TypeError(f"unsupported matcher for parallel rounds: {matcher!r}")
+def _matcher_cache_key(matcher) -> tuple[str, object]:
+    """Capability dispatch: a device-capable family declares
+    ``parallel_backend() -> (kind, cfg)``, the grounding-cache key that
+    selects its registered ground/eval functions below."""
+    pb = getattr(matcher, "parallel_backend", None)
+    if pb is not None:
+        return pb()
+    raise TypeError(
+        f"matcher {type(matcher).__name__} has no parallel backend "
+        f"(registered grounding kinds: {sorted(_GROUND_BUILDERS)}); "
+        "host-only families run through the sequential drivers "
+        "(run_nomp / run_smp / run_mmp)"
+    )
 
 
-@functools.lru_cache(maxsize=None)
-def _ground_bin_fn(kind: str, weights: MLNWeights | None):
-    """Jitted bin grounding: raw row tensors -> device-resident arrays.
+# kind -> builder(cfg) -> fn(entity_ids, entity_mask, coauthor,
+# sim_level, pair_mask) -> 4-tuple of (B, ...) device arrays with
+# ``valid`` last.  Plug-in families register here (and an eval fn in
+# _EVAL_KINDS) to run on the fused device engine.
+_GROUND_BUILDERS: dict[str, object] = {}
 
-    Returns a uniform 4-tuple with ``valid`` last: MLN bins get
-    ``(u, u_raw, C, valid)``, RULES bins ``(lev, n_shared, link, valid)``.
-    """
 
-    def f(entity_mask, coauthor, sim_level, pair_mask):
+def register_ground_builder(kind: str, builder) -> None:
+    _GROUND_BUILDERS[kind] = builder
+
+
+def _mln_ground_builder(weights: MLNWeights):
+    def f(entity_ids, entity_mask, coauthor, sim_level, pair_mask):
         batch = NeighborhoodBatch(
-            entity_ids=entity_mask,  # grounding reads only shapes/masks
+            entity_ids=entity_ids,
             entity_mask=entity_mask,
             coauthor=coauthor,
             sim_level=sim_level,
             pair_gid=pair_mask,
             pair_mask=pair_mask,
         )
-        if kind == "rules":
-            lev, valid, n_shared, link = ground_structure(batch)
-            return lev, n_shared, link, valid
         g = ground(batch, weights)
         return g.u, g.u_raw, g.C, g.valid
 
     return jax.jit(f)
+
+
+def _rules_ground_builder(_cfg):
+    def f(entity_ids, entity_mask, coauthor, sim_level, pair_mask):
+        batch = NeighborhoodBatch(
+            entity_ids=entity_ids,
+            entity_mask=entity_mask,
+            coauthor=coauthor,
+            sim_level=sim_level,
+            pair_gid=pair_mask,
+            pair_mask=pair_mask,
+        )
+        lev, valid, n_shared, link = ground_structure(batch)
+        return lev, n_shared, link, valid
+
+    return jax.jit(f)
+
+
+def _embed_ground_builder(matcher):
+    """Host grounding for the embedding family: pairwise cosine from the
+    matcher's append-only per-id embedding memo.  Pure in the entity
+    ids (embeddings are deterministic per id and never mutated), so the
+    grounding-cache splice/LRU contract holds exactly as for the jitted
+    kinds; only dirty rows' ids are ever (re-)encoded."""
+
+    def f(entity_ids, entity_mask, coauthor, sim_level, pair_mask):
+        base, valid = matcher.ground_rows(
+            np.asarray(entity_ids), np.asarray(pair_mask)
+        )
+        B = base.shape[0]
+        return (
+            jnp.asarray(base),
+            jnp.asarray(valid),
+            jnp.zeros((B, 1, 1), jnp.float32),
+            jnp.zeros((B, 1), jnp.float32),
+        )
+
+    return f
+
+
+register_ground_builder("mln", _mln_ground_builder)
+register_ground_builder("rules", _rules_ground_builder)
+register_ground_builder("embed", _embed_ground_builder)
+
+
+@functools.lru_cache(maxsize=None)
+def _ground_bin_fn(kind: str, cfg):
+    """Bin grounding for one ``(kind, cfg)`` key: raw row tensors ->
+    device-resident arrays.
+
+    Returns a uniform 4-tuple with ``valid`` last: MLN bins get
+    ``(u, u_raw, C, valid)``, RULES bins ``(lev, n_shared, link,
+    valid)``, embedding bins ``(base, valid, 0, 0)``.  ``cfg`` must be
+    hashable (weights dataclass, matcher instance, or None).
+    """
+    if kind not in _GROUND_BUILDERS:
+        raise TypeError(
+            f"no grounding builder registered for kind {kind!r} "
+            f"(registered: {sorted(_GROUND_BUILDERS)})"
+        )
+    return _GROUND_BUILDERS[kind](cfg)
 
 
 def _pow2(n: int) -> int:
@@ -307,7 +376,8 @@ class GroundingCache:
             return row_keys
         return tuple(
             hashlib.blake2b(
-                bt.entity_mask[r].tobytes()
+                bt.entity_ids[r].tobytes()
+                + bt.entity_mask[r].tobytes()
                 + bt.coauthor[r].tobytes()
                 + bt.sim_level[r].tobytes()
                 + bt.pair_mask[r].tobytes(),
@@ -320,18 +390,22 @@ class GroundingCache:
         """Ground a row subset, padded to a power of two (inert rows)."""
         n = len(rows)
         pad = _pow2(n) - n
+        ids = bt.entity_ids[rows]
         em = bt.entity_mask[rows]
         co = bt.coauthor[rows]
         lv = bt.sim_level[rows]
         pm = bt.pair_mask[rows]
         if pad:
+            ids = np.concatenate(
+                [ids, np.full((pad,) + ids.shape[1:], -1, ids.dtype)]
+            )
             em = np.concatenate([em, np.zeros((pad,) + em.shape[1:], em.dtype)])
             co = np.concatenate([co, np.zeros((pad,) + co.shape[1:], co.dtype)])
             lv = np.concatenate([lv, np.zeros((pad,) + lv.shape[1:], lv.dtype)])
             pm = np.concatenate([pm, np.zeros((pad,) + pm.shape[1:], pm.dtype)])
         with obs_span("rounds.ground", rows=n):
-            record_transfer("gcache", em, co, lv, pm)
-            out = fn(em, co, lv, pm)
+            record_transfer("gcache", ids, em, co, lv, pm)
+            out = fn(ids, em, co, lv, pm)
         self.ground_calls += 1
         self.rows_ground += n
         return tuple(a[:n] for a in out) if pad else out
@@ -400,6 +474,7 @@ class GroundingCache:
 class _BinTensors:
     """Per-bin device-ready tensors (host copies)."""
 
+    entity_ids: np.ndarray  # (B, k) int, -1 padding
     entity_mask: np.ndarray
     coauthor: np.ndarray
     sim_level: np.ndarray
@@ -433,6 +508,7 @@ def _prepare_bins(
             return np.concatenate([a, extra], axis=0)
 
         bt = _BinTensors(
+            entity_ids=_pad(nb.entity_ids, -1),
             entity_mask=_pad(nb.entity_mask, False),
             coauthor=_pad(nb.coauthor, False),
             sim_level=_pad(nb.sim_level.astype(np.int8), 0),
@@ -473,6 +549,9 @@ def _eval_bin_x(kind: str, g, ev_pos, ev_neg):
     if kind == "mln_greedy":
         u, _, C, valid = g
         return closure_batch(u, C, ev_pos, ev_neg, valid)
+    if kind == "embed":
+        base, valid, _z0, _z1 = g
+        return (base | ev_pos) & valid & ~ev_neg
     u, u_raw, C, valid = g
     x, _ = jax.vmap(_infer_one)(u, u_raw, C, ev_pos, ev_neg, valid)
     return x
@@ -891,7 +970,12 @@ def build_round_fn(spec: RoundSpec, mesh: Mesh, axes: tuple[str, ...]):
 
 def _matcher_spec(matcher, k: int, Np: int) -> RoundSpec:
     kind, weights = _matcher_cache_key(matcher)
-    if kind == "mln" and not matcher.collective:
+    if kind not in ("mln", "rules"):
+        raise TypeError(
+            f"legacy per-round loop supports only the jit-groundable "
+            f"'mln'/'rules' kinds, got {kind!r}; use the fused engine"
+        )
+    if kind == "mln" and not getattr(matcher, "collective", True):
         kind = "mln_greedy"
     return RoundSpec(
         k=k,
@@ -1131,8 +1215,14 @@ def _run_parallel_impl(
     )
 
     base_kind = mkey[0]
-    if base_kind == "mln" and not matcher.collective:
+    if base_kind == "mln" and not getattr(matcher, "collective", True):
         base_kind = "mln_greedy"
+    if scheme == "mmp" and base_kind not in ("mln", "mln_greedy"):
+        raise TypeError(
+            f"parallel MMP is wired to the MLN device promoter; kind "
+            f"{base_kind!r} emits no multi-pair messages, so run_mmp "
+            "(sequential) or scheme='smp' reach the identical fixpoint"
+        )
 
     # step-7 promotion runs on device (batched delta checks, zero host
     # coupling-COO scans); the promoter counts any host fallback.

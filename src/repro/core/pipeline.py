@@ -93,7 +93,9 @@ def resolve(
     elif scheme == "smp":
         result = run_smp(packed, matcher)
     elif scheme == "mmp":
-        assert isinstance(matcher, MLNMatcher), "MMP needs a Type-II matcher"
+        assert getattr(matcher, "score", None) is not None, (
+            "MMP needs a Type-II matcher (score())"
+        )
         result = run_mmp(packed, matcher, gg)
     else:
         raise ValueError(f"unknown scheme {scheme!r}")

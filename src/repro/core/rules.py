@@ -104,6 +104,10 @@ class RulesMatcher:
 
     is_probabilistic = False
 
+    def parallel_backend(self) -> tuple[str, None]:
+        """Grounding key for the round-parallel engine (core.parallel)."""
+        return ("rules", None)
+
     def run(
         self,
         batch: NeighborhoodBatch,

@@ -529,3 +529,125 @@ def arrival_stream(
             )
         )
     return out
+
+
+# ---------------------------------------------------------------------------
+# Bipartite 1:1 record-linkage corpus (the assignment-matcher scenario)
+# ---------------------------------------------------------------------------
+
+
+def make_bipartite(
+    n_groups: int = 60,
+    *,
+    double_rate: float = 0.4,
+    trap_rate: float = 0.2,
+    seed: int = 0,
+) -> SynthDataset:
+    """Two duplicate-free record sources with known 1:1 ground truth.
+
+    Interleaves a *left* and a *right* source so each true pair is the
+    global-id pair ``(2m, 2m + 1)`` — the parity convention the
+    assignment and embedding matchers key their sides/buckets on.
+    Matching groups are canopy-disjoint (each group shares a distinct
+    random name token) and ``paper_of`` is the group id, so
+    :func:`arrival_stream`'s paper-boundary cuts yield **group-atomic**
+    micro-batches — the streaming deployment contract for 1:1 families
+    (a matching group never straddles an ingest).
+
+    Three group shapes:
+
+    * **singleton** — one true pair, identical names (level 3).
+    * **double** — two true pairs (level 3) whose cross pairs sit at
+      level 2: every family resolves it, the optimum just has to prefer
+      the two exact matches over the two near-misses.
+    * **trap** — a double plus 6 *anchor* records coauthored with both
+      ``L1`` and ``R2``, pushing the crossing pair's shared-coauthor
+      count to 6.  Greedy assignment takes the boosted cross edge
+      (``2 + 0.25*6 = 3.5 > 3``) and mis-pairs the group; the Hungarian
+      optimum keeps the exact matches (``3 + 3 > 3.5 + 2.25``); the
+      MLN, with no 1:1 constraint, matches the cross pair *as well*
+      (``u = w_sim[2] + 6 w_co > 0``) — the quality separation
+      ``benchmarks/fig4_matchers.py`` reports.
+
+    Anchor names are random (level-0 pairs: never candidates) and each
+    group contributes an even record count, preserving the parity phase.
+    """
+    rng = np.random.default_rng(seed)
+    consonants = "bcdfghjklmnpqrstvwxz"
+    vowels = "aeiou"
+
+    seen: set[str] = set()
+
+    def _word(length: int) -> str:
+        while True:
+            s = "".join(
+                (consonants if i % 2 == 0 else vowels)[
+                    int(rng.integers(0, len(consonants if i % 2 == 0 else vowels)))
+                ]
+                for i in range(length)
+            )
+            if s not in seen:
+                seen.add(s)
+                return s
+
+    names: list[str] = []
+    truth: list[int] = []
+    paper_of: list[int] = []
+    coauthor_edges: list[tuple[int, int]] = []
+    canon: list[str] = []
+
+    def _add(name: str, author: int, group: int) -> int:
+        ref = len(names)
+        names.append(name)
+        truth.append(author)
+        paper_of.append(group)
+        return ref
+
+    def _new_author(name: str) -> int:
+        canon.append(name)
+        return len(canon) - 1
+
+    for g in range(n_groups):
+        token = _word(8)
+        surname = _word(9)
+        r = rng.random()
+        kind = "trap" if r < trap_rate else (
+            "double" if r < trap_rate + double_rate else "singleton"
+        )
+        name1 = f"{token} {surname}"
+        a1 = _new_author(name1)
+        l1 = _add(name1, a1, g)
+        r1 = _add(name1, a1, g)
+        assert l1 % 2 == 0 and r1 == l1 + 1
+        if kind == "singleton":
+            continue
+        # second pair: same token, surname two *adjacent* substitutions
+        # away (chars absent from the original name, so Jaro counts two
+        # clean mismatches).  At this name length the cross pairs land
+        # at JW ~0.956 -> similarity level 2, while the trigram profile
+        # keeps cosine >= the canopy t_loose, so the whole group stays
+        # one canopy.
+        fresh = [c for c in "abcdefghijklmnopqrstuvwxyz" if c not in name1]
+        alt = list(surname)
+        alt[3], alt[4] = fresh[0], fresh[1]
+        name2 = f"{token} {''.join(alt)}"
+        a2 = _new_author(name2)
+        l2 = _add(name2, a2, g)
+        r2 = _add(name2, a2, g)
+        if kind == "trap":
+            for _ in range(6):
+                anchor = _add(f"zq{_word(7)}", _new_author(f"zq{_word(7)}"), g)
+                coauthor_edges.append((l1, anchor))
+                coauthor_edges.append((anchor, r2))
+
+    edges = (
+        np.asarray(coauthor_edges, dtype=np.int64)
+        if coauthor_edges
+        else np.zeros((0, 2), dtype=np.int64)
+    )
+    return SynthDataset(
+        entities=EntityTable(names=names, truth=np.asarray(truth, dtype=np.int64)),
+        relations=Relations(edges={"coauthor": edges}),
+        paper_of=np.asarray(paper_of, dtype=np.int64),
+        author_names=canon,
+    )

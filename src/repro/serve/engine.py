@@ -47,6 +47,34 @@ class Engine:
             outs.extend(self._generate_batch(toks, max_new)[: len(group)])
         return outs
 
+    def encode(self, prompts: list[np.ndarray]) -> np.ndarray:
+        """Embed token sequences: one prefill per padded batch, mean-pool
+        the logits over real positions, L2-normalize.  Returns (N, vocab)
+        float32 — the encoder forward pass behind the embedding matcher.
+        """
+        out = []
+        for lo in range(0, len(prompts), self.batch):
+            group = prompts[lo : lo + self.batch]
+            pad = self.batch - len(group)
+            lens = np.array(
+                [len(p) for p in group] + [len(group[-1])] * pad, np.int32
+            )
+            toks = np.zeros((self.batch, self.s_max), np.int32)
+            for i, p in enumerate(list(group) + [group[-1]] * pad):
+                toks[i, : len(p)] = p[: self.s_max]
+            logits, _cache = self._prefill(self.params, jnp.asarray(toks))
+            mask = np.arange(self.s_max)[None, :] < np.minimum(
+                lens, self.s_max
+            )[:, None]
+            pooled = np.asarray(logits) * mask[:, :, None]
+            pooled = pooled.sum(axis=1) / np.maximum(
+                mask.sum(axis=1, keepdims=True), 1
+            )
+            norm = np.linalg.norm(pooled, axis=-1, keepdims=True)
+            pooled = pooled / np.maximum(norm, 1e-9)
+            out.append(pooled[: len(group)].astype(np.float32))
+        return np.concatenate(out, axis=0)
+
     def _generate_batch(self, tokens: np.ndarray, max_new: int) -> list[list[int]]:
         B, S = tokens.shape
         logits, cache = self._prefill(self.params, jnp.asarray(tokens))

@@ -26,8 +26,8 @@ cost proportional to the dirty set rather than the corpus.  One
    drivers are warm-started with only the dirty neighborhoods seeded,
    and the device :class:`~repro.core.parallel.GroundingCache` splices
    only the changed rows (``reground_rows``).  The cache's resident
-   device memory is boundable (``ResolveService(gcache_capacity=...)``
-   / ``gcache_hbm_budget=``): cold bins are LRU-evicted and re-ground
+   device memory is boundable (``ServiceConfig.gcache_capacity``
+   / ``gcache_hbm_budget``): cold bins are LRU-evicted and re-ground
    on demand, bit-for-bit (``peak_resident_bins`` / ``cache_evictions``
    / ``cold_regrounds``); MMP's step-7 promotion runs batched on device
    (``promote_host_scans`` == 0).
@@ -47,7 +47,7 @@ control, capped-backoff retries, and poison-batch bisection — see
 Every ingest is transactional (``repro.core.txn`` undo log: any
 mid-ingest failure rolls the service back to the pre-submit state
 bit-for-bit), and optionally durable
-(``ResolveService(durability_dir=...)``: fsync'd write-ahead log
+(``ServiceConfig.durability_dir``: fsync'd write-ahead log
 (:mod:`repro.stream.wal`) + periodic atomic checkpoints, with
 ``ResolveService.recover`` restoring the newest checkpoint and
 replaying the WAL tail to the exact pre-crash fixpoint).
@@ -57,14 +57,32 @@ coalescing of it — cover, grounding, and fixpoint are bit-for-bit what
 the batch pipeline computes over the union of everything ingested.
 """
 
-from repro.stream.service import (  # noqa: F401
+from repro.stream.service import (
     IngestReport,
     ResolveService,
     ResolveSnapshot,
+    ServiceConfig,
 )
-from repro.stream.serving import (  # noqa: F401
+from repro.stream.serving import (
     AdmissionError,
     IngestTicket,
     ServingConfig,
     ServingFrontend,
 )
+from repro.stream.shard import (
+    ShardContext,
+    ShardCoordinator,
+)
+
+__all__ = [
+    "AdmissionError",
+    "IngestReport",
+    "IngestTicket",
+    "ResolveService",
+    "ResolveSnapshot",
+    "ServiceConfig",
+    "ServingConfig",
+    "ServingFrontend",
+    "ShardContext",
+    "ShardCoordinator",
+]

@@ -53,6 +53,7 @@ import dataclasses
 import pickle
 import threading
 import time
+import warnings
 from pathlib import Path
 
 import numpy as np
@@ -219,32 +220,66 @@ class ResolveSnapshot:
         return [m for m in self._members.values() if len(m) >= 2]
 
 
-class ResolveService:
-    """Streaming entity resolution over micro-batches."""
+@dataclasses.dataclass(frozen=True)
+class ServiceConfig:
+    """Typed configuration for :class:`ResolveService` (mirrors
+    :class:`repro.stream.serving.ServingConfig`).
 
-    def __init__(
-        self,
-        *,
-        scheme: str = "smp",
-        matcher=None,
-        weights: MLNWeights = PAPER_LEARNED,
-        parallel: bool = False,
-        t_loose: float = 0.70,
-        t_tight: float = 0.90,
-        k_max: int = 32,
-        feature_dim: int = 128,
-        k_bins: tuple[int, ...] = DEFAULT_BINS,
-        thresholds=None,
-        boundary_relation: str = "coauthor",
-        lsh: LSHConfig | None = None,
-        level_cache_max: int | None = None,
-        gcache_capacity: int | None = None,
-        gcache_hbm_budget: int | None = None,
-        durability_dir: str | None = None,
-        checkpoint_every: int = 0,
-        wal_fsync: bool = True,
-        shard=None,
-    ):
+    ``matcher`` accepts a registered family name (resolved through
+    :func:`repro.core.matchers.get_matcher`), a matcher instance, or
+    ``None`` for the paper's collective MLN at ``weights``.
+    """
+
+    scheme: str = "smp"  # 'nomp' | 'smp' | 'mmp'
+    matcher: object = None  # family name (str), instance, or None
+    weights: MLNWeights = PAPER_LEARNED
+    parallel: bool = False
+    t_loose: float = 0.70
+    t_tight: float = 0.90
+    k_max: int = 32
+    feature_dim: int = 128
+    k_bins: tuple[int, ...] = DEFAULT_BINS
+    thresholds: tuple | None = None
+    boundary_relation: str = "coauthor"
+    lsh: LSHConfig | None = None
+    level_cache_max: int | None = None
+    gcache_capacity: int | None = None
+    gcache_hbm_budget: int | None = None
+    durability_dir: str | None = None
+    checkpoint_every: int = 0
+    wal_fsync: bool = True
+
+    def __post_init__(self):
+        if self.scheme not in ("nomp", "smp", "mmp"):
+            raise ValueError(f"unknown scheme {self.scheme!r}")
+        if self.checkpoint_every < 0:
+            raise ValueError("checkpoint_every must be >= 0")
+        if not 0.0 < self.t_loose <= self.t_tight <= 1.0:
+            raise ValueError("need 0 < t_loose <= t_tight <= 1")
+        if self.checkpoint_every > 0 and self.durability_dir is None:
+            raise ValueError("checkpoint_every > 0 needs durability_dir")
+
+    def build_matcher(self):
+        if self.matcher is None:
+            return MLNMatcher(self.weights)
+        if isinstance(self.matcher, str):
+            from repro.core.matchers import get_matcher
+
+            return get_matcher(self.matcher)
+        return self.matcher
+
+
+class ResolveService:
+    """Streaming entity resolution over micro-batches.
+
+    Construct with a :class:`ServiceConfig` (``ResolveService(config)``);
+    the accreted constructor keywords of earlier releases still work as
+    a deprecated shim (``ResolveService(scheme="mmp", ...)`` warns and
+    folds the kwargs into a config).
+    """
+
+    def __init__(self, config: ServiceConfig | None = None, *, shard=None,
+                 **deprecated_kwargs):
         """``gcache_capacity`` / ``gcache_hbm_budget`` (parallel engine
         only) bound the device grounding cache — the HBM-budget knob of
         the serving path: at most ``gcache_capacity`` bins (or
@@ -269,35 +304,60 @@ class ResolveService:
         the parallel engine runs its rounds on the context's mesh.  The
         logical state stays SPMD-replicated — see
         :mod:`repro.stream.shard` for the equivalence argument."""
-        self.weights = weights
-        self.scheme = scheme
+        if deprecated_kwargs:
+            if config is not None:
+                raise TypeError(
+                    "pass either a ServiceConfig or keyword arguments, "
+                    f"not both (got {sorted(deprecated_kwargs)})"
+                )
+            warnings.warn(
+                "ResolveService(**kwargs) is deprecated; pass "
+                "ResolveService(ServiceConfig(...)) instead",
+                DeprecationWarning,
+                stacklevel=2,
+            )
+            config = ServiceConfig(**deprecated_kwargs)
+        cfg = config if config is not None else ServiceConfig()
+        self.config = cfg
+        self.weights = cfg.weights
+        self.scheme = cfg.scheme
         self.shard = shard
         self.delta = DeltaCover(
-            t_loose=t_loose,
-            t_tight=t_tight,
-            k_max=k_max,
-            feature_dim=feature_dim,
-            k_bins=k_bins,
-            thresholds=thresholds,
-            boundary_relation=boundary_relation,
-            lsh=lsh,
-            level_cache_max=level_cache_max,
+            t_loose=cfg.t_loose,
+            t_tight=cfg.t_tight,
+            k_max=cfg.k_max,
+            feature_dim=cfg.feature_dim,
+            k_bins=cfg.k_bins,
+            thresholds=cfg.thresholds,
+            boundary_relation=cfg.boundary_relation,
+            lsh=cfg.lsh,
+            level_cache_max=cfg.level_cache_max,
             shard=shard.spec if shard is not None else None,
             shard_merge=shard.merger.union if shard is not None else None,
         )
+        matcher = cfg.build_matcher()
+        # families that score by entity *name* (the embedding matcher's
+        # ngram/lm encoders) read the live id -> name table the cover
+        # maintains; the hook is capability-based so any registered
+        # family inherits it
+        bind = getattr(matcher, "bind_names", None)
+        if bind is not None:
+            bind(self.delta.names)
         self.engine = IncrementalEngine(
-            matcher if matcher is not None else MLNMatcher(weights),
-            scheme=scheme,
-            parallel=parallel,
+            matcher,
+            scheme=cfg.scheme,
+            parallel=cfg.parallel,
             mesh=shard.mesh if shard is not None else None,
-            gcache_capacity=gcache_capacity,
-            gcache_hbm_budget=gcache_hbm_budget,
+            gcache_capacity=cfg.gcache_capacity,
+            gcache_hbm_budget=cfg.gcache_hbm_budget,
         )
         # MMP needs the global grounding; maintained incrementally so no
         # ingest pays the O(corpus) from-scratch build.  The delta's
         # new_edges are boundary-relation tuples, as the maintainer's
         # caller contract requires.
-        self.grounding = GroundingMaintainer(weights) if scheme == "mmp" else None
+        self.grounding = (
+            GroundingMaintainer(cfg.weights) if cfg.scheme == "mmp" else None
+        )
         self.uf = UnionFind()
         self._members: dict[int, set[int]] = {}  # uf root -> cluster members
         self._fixpoint = MatchStore()
@@ -323,15 +383,15 @@ class ResolveService:
         # the last *assigned* ingest sequence number — aborted ingests
         # consume their seq (an abort marker records the outcome), so
         # replay never confuses a rolled-back batch with a committed one.
-        self.durability_dir = durability_dir
-        self.checkpoint_every = int(checkpoint_every)
+        self.durability_dir = cfg.durability_dir
+        self.checkpoint_every = int(cfg.checkpoint_every)
         self.wal: WriteAheadLog | None = None
         self._ckpt: Checkpointer | None = None
         self._seq = 0
         self._replaying = False
-        if durability_dir is not None:
-            base = Path(durability_dir)
-            self.wal = WriteAheadLog(base / "wal", fsync=wal_fsync)
+        if cfg.durability_dir is not None:
+            base = Path(cfg.durability_dir)
+            self.wal = WriteAheadLog(base / "wal", fsync=cfg.wal_fsync)
             self._ckpt = Checkpointer(str(base / "ckpt"), keep=2)
 
     # -- ingest path ------------------------------------------------------
@@ -568,16 +628,34 @@ class ResolveService:
         reg.gauge("ckpt.last_seq").set(seq)
 
     @classmethod
-    def recover(cls, durability_dir: str, **ctor_kwargs) -> "ResolveService":
+    def recover(
+        cls,
+        durability_dir: str,
+        config: "ServiceConfig | None" = None,
+        **ctor_kwargs,
+    ) -> "ResolveService":
         """Rebuild a service from ``durability_dir``: restore the latest
         checkpoint (if any), then replay the WAL tail — committed
         records past the checkpoint, in sequence order, skipping
-        aborted ones.  ``ctor_kwargs`` must match the original
-        construction (scheme/weights/thresholds...); the matcher and
-        device caches are rebuilt, everything logical comes from disk.
-        The result is bit-for-bit the fixpoint of an uninterrupted run
-        over the same committed batches (schedule invariance)."""
-        svc = cls(durability_dir=durability_dir, **ctor_kwargs)
+        aborted ones.  ``config`` (or the deprecated ``ctor_kwargs``)
+        must match the original construction (scheme/weights/
+        thresholds...); the matcher and device caches are rebuilt,
+        everything logical comes from disk.  The result is bit-for-bit
+        the fixpoint of an uninterrupted run over the same committed
+        batches (schedule invariance)."""
+        if config is not None:
+            shard = ctor_kwargs.pop("shard", None)
+            if ctor_kwargs:
+                raise TypeError(
+                    "pass either a ServiceConfig or keyword arguments, "
+                    f"not both (got {sorted(ctor_kwargs)})"
+                )
+            svc = cls(
+                dataclasses.replace(config, durability_dir=durability_dir),
+                shard=shard,
+            )
+        else:
+            svc = cls(durability_dir=durability_dir, **ctor_kwargs)
         t0 = time.perf_counter()
         ckpt_seq = 0
         step = svc._ckpt.latest_step()

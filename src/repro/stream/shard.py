@@ -107,11 +107,29 @@ class ShardCoordinator:
     and ``digest``/``digests_agree`` expose the equivalence oracle.
     """
 
-    def __init__(self, ctx: ShardContext | None = None, **service_kwargs):
-        from repro.stream.service import ResolveService
+    def __init__(self, ctx: ShardContext | None = None, config=None,
+                 **service_kwargs):
+        """``config`` is a :class:`repro.stream.service.ServiceConfig`;
+        bare service keywords still work as a deprecated shim."""
+        import warnings
+
+        from repro.stream.service import ResolveService, ServiceConfig
 
         self.ctx = ctx if ctx is not None else ShardContext.create()
-        self.service = ResolveService(shard=self.ctx, **service_kwargs)
+        if service_kwargs:
+            if config is not None:
+                raise TypeError(
+                    "pass either config= or service keywords, not both "
+                    f"(got {sorted(service_kwargs)})"
+                )
+            warnings.warn(
+                "ShardCoordinator(**service_kwargs) is deprecated; pass "
+                "ShardCoordinator(ctx, config=ServiceConfig(...)) instead",
+                DeprecationWarning,
+                stacklevel=2,
+            )
+            config = ServiceConfig(**service_kwargs)
+        self.service = ResolveService(config, shard=self.ctx)
 
     def ingest(self, names, edges=None, **kwargs):
         """Route one micro-batch to the owning shards.

@@ -1,0 +1,183 @@
+"""Conformance matrix for the matcher plug-in registry.
+
+Every registered family must ride through the *unchanged* drivers:
+
+* scheme equivalence — NO-MP == SMP for every family, and MMP == SMP
+  for every Type-II family (Thms. 1/2/4 applied per family);
+* stream == batch — ``ResolveService`` reaches bit-for-bit the batch
+  fixpoint for every family, with zero driver/stream changes;
+* device path — ``run_parallel`` matches the sequential fixpoint for
+  families that declare a parallel backend, and rejects (with a clear
+  TypeError) families that do not;
+* incrementality — the embedding family re-encodes only dirty
+  entities under stream ingest (O(dirty), not O(corpus));
+* quality separation — on the bipartite corpus the optimal assignment
+  beats its greedy ablation and the embedding matcher disambiguates
+  the coauthor trap that fools the MLN (the Fig. 4-style story the
+  ``fig4_matchers`` benchmark measures).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core import pipeline
+from repro.core.driver import run_mmp, run_nomp, run_smp
+from repro.core.matchers import get_matcher, list_matchers, matcher_info
+from repro.core.parallel import run_parallel
+from repro.data.synthetic import arrival_stream, make_bipartite
+from repro.stream import ResolveService, ServiceConfig
+
+FAMILIES = list_matchers()
+TYPE_II = [n for n in FAMILIES if matcher_info(n).type_ii]
+DEVICE = [n for n in FAMILIES if matcher_info(n).device_parallel]
+HOST_ONLY = [n for n in FAMILIES if not matcher_info(n).device_parallel]
+
+
+@pytest.fixture(scope="module")
+def bip_ds():
+    return make_bipartite(40, seed=1)
+
+
+@pytest.fixture(scope="module")
+def bip_state(bip_ds):
+    packed, gg, _ = pipeline.prepare(bip_ds.entities, bip_ds.relations)
+    return packed, gg
+
+
+def _matcher(name):
+    # registry defaults: embedding uses the hash encoder (deterministic,
+    # name-free, cheap) — the lm/ngram encoders ride the same ground
+    # path and are exercised by the fig4_matchers benchmark
+    return get_matcher(name)
+
+
+# ---------------------------------------------------------------------------
+# Scheme equivalence: NO-MP == SMP == MMP through unchanged drivers
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", FAMILIES)
+def test_nomp_equals_smp(name, bip_state):
+    packed, _ = bip_state
+    m = _matcher(name)
+    a = run_nomp(packed, m)
+    b = run_smp(packed, m)
+    assert a.matches.as_set() == b.matches.as_set(), name
+
+
+@pytest.mark.parametrize("name", TYPE_II)
+def test_mmp_equals_smp(name, bip_state):
+    packed, gg = bip_state
+    m = _matcher(name)
+    a = run_mmp(packed, m, gg)
+    b = run_smp(packed, m)
+    assert a.matches.as_set() == b.matches.as_set(), name
+
+
+# ---------------------------------------------------------------------------
+# Stream == batch, bit-for-bit, per family — no service changes
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", FAMILIES)
+def test_stream_equals_batch(name, bip_ds, bip_state):
+    packed, _ = bip_state
+    batch = run_smp(packed, _matcher(name))
+    svc = ResolveService(ServiceConfig(matcher=name, scheme="smp"))
+    for b in arrival_stream(bip_ds, 5):
+        svc.ingest(b.names, b.edges, ids=b.ids)
+    assert svc.matches.as_set() == batch.matches.as_set(), name
+
+
+def test_stream_accepts_matcher_instance(bip_ds, bip_state):
+    """``ServiceConfig.matcher`` takes an instance, not just a name."""
+    packed, _ = bip_state
+    m = get_matcher("hungarian")
+    batch = run_smp(packed, m)
+    svc = ResolveService(ServiceConfig(matcher=m, scheme="smp"))
+    for b in arrival_stream(bip_ds, 4):
+        svc.ingest(b.names, b.edges, ids=b.ids)
+    assert svc.matches.as_set() == batch.matches.as_set()
+
+
+# ---------------------------------------------------------------------------
+# Embedding incrementality: stream ingest re-encodes only dirty entities
+# ---------------------------------------------------------------------------
+
+
+def test_embedding_reencodes_only_dirty(bip_ds):
+    m = get_matcher("embedding")
+    svc = ResolveService(ServiceConfig(matcher=m, scheme="smp"))
+    batches = arrival_stream(bip_ds, 6)
+    seen = 0
+    for b in batches:
+        before = m.encoded_ids
+        svc.ingest(b.names, b.edges, ids=b.ids)
+        seen += len(b.ids)
+        # each arrival is encoded exactly once, ever: the per-ingest
+        # growth is the batch's own (dirty) entities, never the corpus
+        assert m.encoded_ids - before == len(b.ids), (b.ids, m.encoded_ids)
+        assert m.encoded_ids == seen
+    assert m.encoded_ids == bip_ds.n_refs
+    # every forward pass encoded at least one fresh entity — memo hits
+    # never trigger an encoder call, so calls can't exceed unique ids
+    assert 0 < m.encode_calls <= m.encoded_ids, m.encode_calls
+
+
+# ---------------------------------------------------------------------------
+# Device path: run_parallel per declared capability
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", DEVICE)
+def test_parallel_smp_equals_sequential(name, bip_state):
+    packed, _ = bip_state
+    m = _matcher(name)
+    par = run_parallel(packed, m, scheme="smp")
+    seq = run_smp(packed, m)
+    assert par.matches.as_set() == seq.matches.as_set(), name
+
+
+@pytest.mark.parametrize("name", HOST_ONLY)
+def test_parallel_rejects_host_only_families(name, bip_state):
+    packed, _ = bip_state
+    with pytest.raises(TypeError, match="parallel"):
+        run_parallel(packed, _matcher(name), scheme="smp")
+
+
+def test_parallel_mmp_requires_device_promoter(bip_state):
+    """The batched step-7 promoter is MLN-specific; other families get a
+    clear redirect to the sequential MMP driver instead of wrong math."""
+    packed, gg = bip_state
+    with pytest.raises(TypeError, match="run_mmp"):
+        run_parallel(packed, get_matcher("embedding"), gg, scheme="mmp")
+
+
+# ---------------------------------------------------------------------------
+# Quality separation on the bipartite corpus (the fig4_matchers story)
+# ---------------------------------------------------------------------------
+
+
+def _f1(name, bip_ds, bip_state):
+    packed, gg = bip_state
+    res = pipeline.resolve(
+        bip_ds.entities, bip_ds.relations, scheme="smp",
+        matcher=_matcher(name), packed=packed, gg=gg,
+    )
+    return pipeline.evaluate(res, bip_ds.entities.truth).f1
+
+
+def test_hungarian_beats_greedy_on_traps(bip_ds, bip_state):
+    opt = _f1("hungarian", bip_ds, bip_state)
+    greedy = _f1("hungarian_greedy", bip_ds, bip_state)
+    assert opt == 1.0, opt
+    assert greedy < opt, (greedy, opt)
+
+
+def test_embedding_disambiguates_coauthor_trap(bip_ds, bip_state):
+    emb = _f1("embedding", bip_ds, bip_state)
+    mln = _f1("mln", bip_ds, bip_state)
+    assert emb == 1.0, emb
+    assert mln < emb, (mln, emb)
